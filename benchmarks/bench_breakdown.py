@@ -1,0 +1,70 @@
+"""Paper Table 2: per-section cost of the DP step — forward, backward
+(per-example), clip+accumulate, optimizer(+noise) step — non-private vs DP."""
+import jax
+import jax.numpy as jnp
+
+from .common import csv_row, make_lm_batch, timeit
+
+from repro.core import Tape, clipping as C
+from repro.models import build_by_name
+from repro.utils.tree import tree_noise_like
+
+B, T = 8, 16
+
+
+def main():
+    model, cfg = build_by_name("vit-base", smoke=True)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_lm_batch(cfg, B, T)
+    loss_fn = lambda p, b, t: model.loss(p, b, t)
+
+    fwd = jax.jit(lambda p: loss_fn(p, batch, Tape()).mean())
+    t_fwd = timeit(lambda: fwd(params))
+
+    bwd = jax.jit(jax.grad(lambda p: loss_fn(p, batch, Tape()).mean()))
+    t_bwd = timeit(lambda: bwd(params))
+
+    def pe_grads(p):
+        def one(pp, ex):
+            ex1 = jax.tree.map(lambda x: x[None], ex)
+            return loss_fn(pp, ex1, Tape())[0]
+        return jax.vmap(jax.grad(one), in_axes=(None, 0))(p, batch)
+    pe = jax.jit(pe_grads)
+    t_pe = timeit(lambda: pe(params))
+
+    grads = pe(params)
+
+    def clip_acc(g):
+        sq = sum(jnp.sum(x.reshape(B, -1) ** 2, -1) for x in jax.tree.leaves(g))
+        coef, _ = C.clip_coef(sq, jnp.ones(B), 1.0)
+        return jax.tree.map(
+            lambda x: jnp.sum(x * coef.reshape((-1,) + (1,) * (x.ndim - 1)), 0), g)
+    ca = jax.jit(clip_acc)
+    t_clip = timeit(lambda: ca(grads))
+
+    acc = ca(grads)
+
+    def opt_step(p, a, key):
+        noisy = tree_noise_like(a, key, 1.0)
+        g = jax.tree.map(lambda x, z: (x + z) / B, a, noisy)
+        return jax.tree.map(lambda pp, gg: pp - 1e-3 * gg, p, g)
+    op = jax.jit(opt_step)
+    t_opt = timeit(lambda: op(params, acc, jax.random.PRNGKey(0)))
+
+    def opt_plain(p, a):
+        return jax.tree.map(lambda pp, gg: pp - 1e-3 * gg / B, p, a)
+    opp = jax.jit(opt_plain)
+    t_opt0 = timeit(lambda: opp(params, acc))
+
+    csv_row("breakdown/forward", t_fwd * 1e6, "same for DP and non-private")
+    csv_row("breakdown/backward_batched", t_bwd * 1e6, "non-private")
+    csv_row("breakdown/backward_per_example", t_pe * 1e6,
+            f"DP;x{t_pe / t_bwd:.2f} vs batched")
+    csv_row("breakdown/clip_accumulate", t_clip * 1e6, "DP only")
+    csv_row("breakdown/optimizer_dp", t_opt * 1e6,
+            f"with noise;x{t_opt / max(t_opt0, 1e-9):.2f} vs plain")
+    csv_row("breakdown/optimizer_plain", t_opt0 * 1e6, "non-private")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Paper Table 3 / Fig. 3: memory per engine -> max physical batch size.
+
+On CPU we can't OOM-probe a 40GB GPU, so we measure compiled
+memory_analysis() temp bytes as a function of physical batch size and report
+the largest batch fitting a 16 GB (v5e) budget per engine — the same
+per-example-gradient memory wall the paper's Table 3 shows (Opacus 35 vs
+non-private 268)."""
+import jax
+import jax.numpy as jnp
+
+from .common import csv_row, make_lm_batch
+
+from repro.core import DPConfig, init_state, make_fused_step
+from repro.models import build_by_name
+from repro.optim import sgd
+
+BUDGET = 16 * 2 ** 30
+ENGINES = ["nonprivate", "masked_pe", "masked_ghost", "masked_bk"]
+
+
+def temp_bytes(model, cfg, engine, B, T=16):
+    dpc = DPConfig(1.0, 1.0, float(B), engine)
+    opt = sgd(1e-3)
+    step = make_fused_step(lambda p, b, t: model.loss(p, b, t), opt, dpc)
+    state_shape = jax.eval_shape(
+        lambda: init_state(model.init(jax.random.PRNGKey(0)), opt,
+                           jax.random.PRNGKey(1)))
+    batch = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+        make_lm_batch(cfg, B, T))
+    mask = jax.ShapeDtypeStruct((B,), jnp.float32)
+    c = jax.jit(step).lower(state_shape, batch, mask).compile()
+    ma = c.memory_analysis()
+    return ma.temp_size_in_bytes + ma.argument_size_in_bytes
+
+
+def main():
+    model, cfg = build_by_name("vit-base", smoke=True)
+    for eng in ENGINES:
+        per_b = {}
+        for B in (4, 16):
+            per_b[B] = temp_bytes(model, cfg, eng, B)
+        # linear model: bytes ~= fixed + slope*B -> max B under budget
+        slope = (per_b[16] - per_b[4]) / 12
+        fixed = per_b[4] - 4 * slope
+        max_b = int((BUDGET - fixed) / max(slope, 1)) if slope > 0 else -1
+        csv_row(f"memory/vit-base/{eng}", per_b[16] / 1e3,
+                f"bytes_at_b16={per_b[16]};bytes_per_example={slope:.0f};"
+                f"max_physical_batch_16GB={max_b}")
+
+
+if __name__ == "__main__":
+    main()

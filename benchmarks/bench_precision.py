@@ -1,0 +1,50 @@
+"""Paper Fig. 5: lower-precision training.  TF32 is GPU-only; the TPU
+analogues are bf16 activations and relaxed matmul precision
+(jax.default_matmul_precision) — we measure both against fp32."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .common import csv_row, make_lm_batch, timeit
+
+from repro.core import DPConfig, init_state, make_fused_step
+from repro.models import build, build_by_name
+from repro.optim import sgd
+
+
+def run(arch, dtype, matmul_prec, engine="masked_pe", B=8, T=16):
+    _, cfg = build_by_name(arch, smoke=True)
+    cfg = dataclasses.replace(cfg, dtype=dtype)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_lm_batch(cfg, B, T)
+    mask = jnp.ones(B)
+    dpc = DPConfig(1.0, 1.0, float(B), engine)
+    opt = sgd(1e-3)
+
+    def stepfn(state, batch, mask):
+        with jax.default_matmul_precision(matmul_prec):
+            step = make_fused_step(lambda p, b, t: model.loss(p, b, t),
+                                   opt, dpc)
+            return step(state, batch, mask)[0]
+
+    state = init_state(params, opt, jax.random.PRNGKey(1))
+    jitted = jax.jit(stepfn)
+    dt = timeit(lambda: jitted(state, batch, mask))
+    return B / dt
+
+
+def main():
+    for eng in ("nonprivate", "masked_pe"):
+        base = run("vit-base", "float32", "float32", eng)
+        for name, dtype, prec in (
+                ("tf32_like", "float32", "tensorfloat32"),
+                ("bf16", "bfloat16", "bfloat16")):
+            thr = run("vit-base", dtype, prec, eng)
+            csv_row(f"precision/vit-base/{eng}/{name}", 1e6 / thr,
+                    f"ex_per_s={thr:.2f};rel_vs_fp32=x{thr / base:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Shared benchmark helpers (CPU wall-clock on reduced configs)."""
+import sys
+import os
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def timeit(fn, *args, warmup=1, iters=3):
+    """Median wall time (s) of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def make_lm_batch(cfg, B, T, key=0):
+    ks = jax.random.split(jax.random.PRNGKey(key), 4)
+    if cfg.family == "vit":
+        return {"image": jax.random.normal(
+                    ks[0], (B, cfg.image_size, cfg.image_size, 3)),
+                "label": jax.random.randint(ks[1], (B,), 0, cfg.n_classes)}
+    b = {"tokens": jax.random.randint(ks[0], (B, T), 0, cfg.vocab),
+         "labels": jax.random.randint(ks[1], (B, T), 0, cfg.vocab)}
+    if cfg.family == "vlm":
+        b["frontend"] = jax.random.normal(
+            ks[2], (B, cfg.n_image_tokens, cfg.frontend_dim)) * 0.1
+    if cfg.family == "audio":
+        b["frontend"] = jax.random.normal(
+            ks[2], (B, cfg.n_audio_frames, cfg.d_model)) * 0.1
+    return b
+
+
+def csv_row(name, us_per_call, derived=""):
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,36 @@
+"""Benchmark harness — one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  bench_throughput  -> Fig. 1 / Fig. 4   (throughput by clipping engine)
+  bench_memory      -> Fig. 3 / Table 3  (max physical batch / memory wall)
+  bench_recompile   -> Fig. A.2 / §6     (naive vs masked recompilation)
+  bench_precision   -> Fig. 5            (TF32 -> bf16/relaxed-matmul analogue)
+  bench_breakdown   -> Table 2           (fwd/bwd/clip/opt section costs)
+  bench_scaling     -> Fig. 7 / Fig. A.5 (multi-chip scaling, DP vs SGD)
+  bench_batchsize   -> Fig. A.1          (throughput vs physical batch size)
+"""
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (bench_batchsize, bench_breakdown, bench_memory,
+                   bench_precision, bench_recompile, bench_scaling,
+                   bench_throughput)
+    print("name,us_per_call,derived")
+    ok = True
+    for mod in (bench_throughput, bench_memory, bench_recompile,
+                bench_precision, bench_breakdown, bench_scaling,
+                bench_batchsize):
+        try:
+            mod.main()
+        except Exception:
+            ok = False
+            traceback.print_exc()
+            print(f"{mod.__name__},FAILED,", file=sys.stderr)
+    if not ok:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from .ckpt import save, restore, restore_into
+
+__all__ = ["save", "restore", "restore_into"]

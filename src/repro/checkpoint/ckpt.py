@@ -1,0 +1,59 @@
+"""Flat-npz pytree checkpointing with step metadata (no orbax in env)."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Tuple
+
+import jax
+import numpy as np
+
+from ..utils.params import flatten_params, unflatten_params
+
+
+def _flatten_state(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten_state(v, f"{prefix}{k}."))
+        return out
+    if isinstance(tree, (list, tuple)) and not hasattr(tree, "_fields"):
+        for i, v in enumerate(tree):
+            out.update(_flatten_state(v, f"{prefix}{i}."))
+        return out
+    out[prefix[:-1]] = tree
+    return out
+
+
+def save(path: str, params: Any, opt_state: Any = None, step: int = 0,
+         meta: dict = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    flat = {f"params.{k}": np.asarray(v)
+            for k, v in flatten_params(params).items()}
+    if opt_state is not None:
+        flat.update({f"opt.{k}": np.asarray(v)
+                     for k, v in _flatten_state(opt_state).items()
+                     if v is not None})
+    np.savez(os.path.join(path, "state.npz"), **flat)
+    with open(os.path.join(path, "meta.json"), "w") as f:
+        json.dump({"step": int(step), **(meta or {})}, f)
+
+
+def restore(path: str) -> Tuple[dict, dict, int, dict]:
+    """Returns (params, flat_opt_state, step, meta)."""
+    z = np.load(os.path.join(path, "state.npz"))
+    pflat = {k[len("params."):]: z[k] for k in z.files if k.startswith("params.")}
+    oflat = {k[len("opt."):]: z[k] for k in z.files if k.startswith("opt.")}
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    return unflatten_params(pflat), oflat, meta.get("step", 0), meta
+
+
+def restore_into(path: str, params_like: Any):
+    """Restore params cast/shaped like an existing template tree."""
+    params, _, step, meta = restore(path)
+    tmpl = flatten_params(params_like)
+    got = flatten_params(params)
+    out = {k: np.asarray(got[k]).astype(v.dtype).reshape(v.shape)
+           for k, v in tmpl.items()}
+    return unflatten_params(out), step, meta

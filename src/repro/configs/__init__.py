@@ -1,0 +1,3 @@
+from .base import ArchConfig, InputShape, SHAPES, input_specs
+
+__all__ = ["ArchConfig", "InputShape", "SHAPES", "input_specs"]

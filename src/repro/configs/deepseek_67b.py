@@ -1,0 +1,8 @@
+"""DeepSeek-67B: llama-arch dense decoder [arXiv:2401.02954]."""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="deepseek-67b", family="dense",
+    n_layers=95, d_model=8192, n_heads=64, n_kv_heads=8,
+    d_ff=22016, vocab=102400, rope_theta=1e4,
+)

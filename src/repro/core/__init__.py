@@ -1,0 +1,11 @@
+from .tape import Tape, LayerSpec, scan_blocks, collect_eps
+from .engine import (DPConfig, TrainState, init_state, make_accumulate_fn,
+                     make_update_fn, make_fused_step, make_eval_fn)
+from . import layers, clipping
+
+__all__ = [
+    "Tape", "LayerSpec", "scan_blocks", "collect_eps",
+    "DPConfig", "TrainState", "init_state", "make_accumulate_fn",
+    "make_update_fn", "make_fused_step", "make_eval_fn",
+    "layers", "clipping",
+]

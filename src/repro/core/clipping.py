@@ -1,0 +1,183 @@
+"""Clipped per-example gradient computation — the five engines of the paper.
+
+Every function here maps
+    (loss_fn, params, batch, mask, clip_norm)  ->  (sum of clipped masked
+    per-example grads, aux metrics)
+where ``loss_fn(params, batch, tape) -> (B,) per-example losses`` and ``mask``
+is the Poisson 0/1 mask of Algorithm 2 (``masked_*`` engines) or all-ones
+(``pe`` on an exactly-sampled variable-size batch).
+
+Engines:
+  * per_example   — vmap(grad): materialises per-example grads (Opacus-style).
+  * ghost         — two passes: eps-backward for per-example norms (ghost
+                    trick), then a reweighted standard backward.  No
+                    per-example parameter gradients ever exist.
+  * bookkeeping   — one pass: the eps-backward's (X, dY) tape is reused to
+                    form the clipped summed grads analytically (Bu et al.).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..utils.params import grads_into_tree, missing_paths
+from . import layers
+from .tape import Tape
+
+Aux = Dict[str, jnp.ndarray]
+
+# Optional hook (set by the launcher): constrains the sharding of vmapped
+# per-example gradients — without it GSPMD falls into "involuntary full
+# rematerialization" (replicating B x params buffers across the pod) on the
+# per-example transposes. Signature: fn(grads_pytree) -> grads_pytree.
+_PE_GRAD_CONSTRAINT = None
+_PE_GRAD_DTYPE = None       # e.g. jnp.bfloat16: halve per-example grad HBM
+
+
+def set_pe_grad_constraint(fn) -> None:
+    global _PE_GRAD_CONSTRAINT
+    _PE_GRAD_CONSTRAINT = fn
+
+
+def set_pe_grad_dtype(dt) -> None:
+    global _PE_GRAD_DTYPE
+    _PE_GRAD_DTYPE = dt
+
+
+def clip_coef(sq_norms, mask, clip_norm):
+    """Opacus clip factor min(1, C/||g||), times the Poisson mask."""
+    norms = jnp.sqrt(jnp.maximum(sq_norms, 1e-24))
+    return mask * jnp.minimum(1.0, clip_norm / norms), norms
+
+
+# ---------------------------------------------------------------------------
+# per-example (naive / Opacus-style) — oracle for everything else
+# ---------------------------------------------------------------------------
+
+def per_example_clipped_grads(loss_fn: Callable, params, batch, mask,
+                              clip_norm: float) -> Tuple[dict, Aux]:
+    def one_loss(p, ex):
+        ex1 = jax.tree.map(lambda x: x[None], ex)
+        return loss_fn(p, ex1, Tape())[0]
+
+    grads = jax.vmap(jax.grad(one_loss), in_axes=(None, 0))(params, batch)
+    if _PE_GRAD_DTYPE is not None:
+        grads = jax.tree.map(lambda g: g.astype(_PE_GRAD_DTYPE), grads)
+    if _PE_GRAD_CONSTRAINT is not None:
+        grads = _PE_GRAD_CONSTRAINT(grads)
+    sq = sum(jnp.sum(g.reshape(g.shape[0], -1).astype(jnp.float32) ** 2, -1)
+             for g in jax.tree.leaves(grads))
+    coef, norms = clip_coef(sq, mask, clip_norm)
+
+    def wsum(g):
+        c = coef.reshape((-1,) + (1,) * (g.ndim - 1)).astype(jnp.float32)
+        return jnp.sum(g.astype(jnp.float32) * c, axis=0)
+
+    summed = jax.tree.map(wsum, grads)
+    return summed, {"per_example_norms": norms, "clip_coef": coef}
+
+
+def per_example_grad_norms(loss_fn, params, batch) -> jnp.ndarray:
+    """Oracle per-example grad norms (B,), used by tests."""
+    def one_loss(p, ex):
+        ex1 = jax.tree.map(lambda x: x[None], ex)
+        return loss_fn(p, ex1, Tape())[0]
+    grads = jax.vmap(jax.grad(one_loss), in_axes=(None, 0))(params, batch)
+    sq = sum(jnp.sum(g.reshape(g.shape[0], -1).astype(jnp.float32) ** 2, -1)
+             for g in jax.tree.leaves(grads))
+    return jnp.sqrt(sq)
+
+
+# ---------------------------------------------------------------------------
+# the eps-backward shared by ghost and book-keeping
+# ---------------------------------------------------------------------------
+
+def _eps_backward(loss_fn, params, batch):
+    """One backward pass w.r.t. the injected eps at every primitive output.
+
+    Returns (dEps, records, specs, losses): per-example output-grads, the
+    recorded inputs, the static layer specs, and per-example losses.
+    """
+    shapes_tape = Tape(Tape.COLLECT)
+
+    def run_collect(p, b):
+        nonlocal shapes_tape
+        t = Tape(Tape.COLLECT)
+        loss_fn(p, b, t)
+        shapes_tape = t
+        return 0
+
+    jax.eval_shape(run_collect, params, batch)
+    eps0 = {n: jnp.zeros(s.shape, s.dtype) for n, s in shapes_tape.eps.items()}
+
+    specs_out: dict = {}
+
+    def f(eps):
+        t = Tape(Tape.RECORD, eps)
+        losses = loss_fn(params, batch, t)
+        specs_out.update(t.specs)
+        return losses.sum(), (losses, t.records)
+
+    dEps, (losses, records) = jax.grad(f, has_aux=True)(eps0)
+    return dEps, records, specs_out, losses
+
+
+def ghost_norms(loss_fn, params, batch):
+    """Per-example grad sq-norms via the ghost trick (no per-example grads)."""
+    dEps, records, specs, losses = _eps_backward(loss_fn, params, batch)
+    sq = jnp.zeros(losses.shape[0], jnp.float32)
+    for name, spec in specs.items():
+        rec = layers.resolve_record(records, name, spec)
+        sq = sq + layers.per_example_sq_norm(spec, rec, dEps[name])
+    return sq, losses
+
+
+def ghost_clipped_grads(loss_fn: Callable, params, batch, mask,
+                        clip_norm: float) -> Tuple[dict, Aux]:
+    """Ghost clipping: norm pass + reweighted second backward."""
+    sq, _ = ghost_norms(loss_fn, params, batch)
+    coef, norms = clip_coef(sq, mask, clip_norm)
+    coef = jax.lax.stop_gradient(coef)
+
+    def reweighted(p):
+        losses = loss_fn(p, batch, Tape())
+        return jnp.sum(coef * losses)
+
+    summed = jax.grad(reweighted)(params)
+    summed = jax.tree.map(lambda g: g.astype(jnp.float32), summed)
+    return summed, {"per_example_norms": norms, "clip_coef": coef}
+
+
+def bk_clipped_grads(loss_fn: Callable, params, batch, mask,
+                     clip_norm: float, check_coverage: bool = False
+                     ) -> Tuple[dict, Aux]:
+    """Book-Keeping: one backward pass; clipped grads rebuilt from the tape."""
+    dEps, records, specs, losses = _eps_backward(loss_fn, params, batch)
+    sq = jnp.zeros(losses.shape[0], jnp.float32)
+    for name, spec in specs.items():
+        rec = layers.resolve_record(records, name, spec)
+        sq = sq + layers.per_example_sq_norm(spec, rec, dEps[name])
+    coef, norms = clip_coef(sq, mask, clip_norm)
+
+    flat: Dict[str, jnp.ndarray] = {}
+    for name, spec in specs.items():
+        rec = layers.resolve_record(records, name, spec)
+        for path, g in layers.bk_grads(spec, rec, dEps[name], coef).items():
+            flat[path] = flat.get(path, 0.0) + g
+    # dense param_path convention: '<path>.w' / '<path>.b' refer to leaves.
+    if check_coverage:
+        miss = missing_paths(flat, params)
+        if miss:
+            raise ValueError(f"BK grads missing for params: {miss}")
+    summed = grads_into_tree(flat, params)
+    return summed, {"per_example_norms": norms, "clip_coef": coef}
+
+
+ENGINES = {
+    "pe": per_example_clipped_grads,
+    "masked_pe": per_example_clipped_grads,
+    "masked_ghost": ghost_clipped_grads,
+    "masked_bk": bk_clipped_grads,
+}

@@ -1,0 +1,172 @@
+"""The PrivacyEngine: DP-SGD steps with virtual batching (Algorithms 1 & 2).
+
+Step anatomy (paper Alg. 2 / Opacus BatchMemoryManager semantics):
+
+  * ``accumulate``: process ONE fixed-size physical batch — per-example clip
+    (by the configured engine) with the Poisson 0/1 mask, add into grad_acc.
+  * ``update``: once per logical batch — add N(0, (σC)²) noise, divide by the
+    *expected* logical batch size L, apply the optimizer, reset grad_acc.
+  * ``fused_step``: accumulate(+optional microbatch scan) + update in one jit —
+    the unit that is lowered in the multi-pod dry-run and rooflined.
+
+All functions are pure; the host-side BatchMemoryManager (repro.data.loader)
+drives them with seeded Poisson-sampled logical batches.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..optim import Optimizer
+from ..utils.tree import tree_noise_like, tree_zeros_like
+from . import clipping
+from .tape import Tape
+
+
+@dataclasses.dataclass(frozen=True)
+class DPConfig:
+    clip_norm: float = 1.0
+    noise_multiplier: float = 1.0        # sigma
+    expected_batch_size: float = 64.0    # L = q * N
+    engine: str = "masked_pe"            # pe|masked_pe|masked_ghost|masked_bk|nonprivate
+    microbatches: int = 1                # in-step grad accumulation (lax.scan)
+
+    @property
+    def private(self) -> bool:
+        return self.engine != "nonprivate"
+
+
+# Optional hook (set by the launcher): constrains summed-gradient sharding to
+# the parameter (FSDP) layout so GSPMD reduce-scatters instead of
+# all-reduce + all-gather per microbatch.
+_GRAD_CONSTRAINT = None
+
+
+def set_grad_constraint(fn) -> None:
+    global _GRAD_CONSTRAINT
+    _GRAD_CONSTRAINT = fn
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    grad_acc: Any
+    rng: jax.Array
+    step: jax.Array       # optimizer steps taken
+    seen: jax.Array       # masked examples accumulated since last update
+
+
+def init_state(params, optimizer: Optimizer, rng) -> TrainState:
+    return TrainState(
+        params=params,
+        opt_state=optimizer.init(params),
+        grad_acc=jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+        rng=rng,
+        step=jnp.zeros((), jnp.int32),
+        seen=jnp.zeros((), jnp.float32),
+    )
+
+
+def _clipped_sum(loss_fn, params, batch, mask, cfg: DPConfig):
+    fn = clipping.ENGINES[cfg.engine]
+    return fn(loss_fn, params, batch, mask, cfg.clip_norm)
+
+
+def _microbatched_clipped_sum(loss_fn, params, batch, mask, cfg: DPConfig):
+    """Split the physical batch into cfg.microbatches chunks and accumulate
+    sequentially inside the step (keeps activation/record liveness bounded for
+    the 67B/90B dry-runs — the in-jit analogue of virtual batching)."""
+    if cfg.microbatches <= 1:
+        return _clipped_sum(loss_fn, params, batch, mask, cfg)
+    m = cfg.microbatches
+
+    def resh(x):
+        return x.reshape((m, x.shape[0] // m) + x.shape[1:])
+
+    mb = jax.tree.map(resh, batch)
+    mmask = resh(mask)
+
+    def body(acc, xs):
+        b, mk = xs
+        g, aux = _clipped_sum(loss_fn, params, b, mk, cfg)
+        if _GRAD_CONSTRAINT is not None:
+            g = _GRAD_CONSTRAINT(g)
+        acc = jax.tree.map(jnp.add, acc, g)
+        return acc, aux["per_example_norms"]
+
+    acc0 = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    acc, norms = jax.lax.scan(body, acc0, (mb, mmask))
+    return acc, {"per_example_norms": norms.reshape(-1),
+                 "clip_coef": jnp.zeros_like(norms.reshape(-1))}
+
+
+def make_accumulate_fn(loss_fn: Callable, cfg: DPConfig):
+    """accumulate(state, batch, mask) -> (state, metrics). Jit-stable shapes."""
+
+    def accumulate(state: TrainState, batch, mask):
+        if cfg.private:
+            g, aux = _microbatched_clipped_sum(loss_fn, state.params, batch,
+                                               mask, cfg)
+            metrics = {"mean_grad_norm":
+                       (aux["per_example_norms"] * mask).sum() / jnp.maximum(mask.sum(), 1)}
+        else:
+            def mean_loss(p):
+                losses = loss_fn(p, batch, Tape())
+                return (losses * mask).sum() / jnp.maximum(mask.sum(), 1)
+            g = jax.grad(mean_loss)(state.params)
+            g = jax.tree.map(lambda x: x.astype(jnp.float32) * jnp.maximum(mask.sum(), 1),
+                             g)
+            metrics = {}
+        if _GRAD_CONSTRAINT is not None:
+            g = _GRAD_CONSTRAINT(g)
+        acc = jax.tree.map(jnp.add, state.grad_acc, g)
+        return state._replace(grad_acc=acc, seen=state.seen + mask.sum()), metrics
+
+    return accumulate
+
+
+def make_update_fn(optimizer: Optimizer, cfg: DPConfig):
+    """update(state) -> state. Noise + optimizer step + reset accumulator."""
+
+    def update(state: TrainState):
+        rng, nkey = jax.random.split(state.rng)
+        if cfg.private:
+            noisy = tree_noise_like(state.grad_acc, nkey,
+                                    cfg.noise_multiplier * cfg.clip_norm)
+            g = jax.tree.map(lambda a, z: (a + z) / cfg.expected_batch_size,
+                             state.grad_acc, noisy)
+        else:
+            g = jax.tree.map(lambda a: a / jnp.maximum(state.seen, 1.0),
+                             state.grad_acc)
+        updates, opt_state = optimizer.update(g, state.opt_state, state.params)
+        params = jax.tree.map(lambda p, u: (p + u).astype(p.dtype),
+                              state.params, updates)
+        return TrainState(params, opt_state,
+                          tree_zeros_like(state.grad_acc), rng,
+                          state.step + 1, jnp.zeros((), jnp.float32))
+
+    return update
+
+
+def make_fused_step(loss_fn: Callable, optimizer: Optimizer, cfg: DPConfig):
+    """One logical batch == one call: clip+accumulate then noise+update.
+    This is the function lowered in the dry-run."""
+    accumulate = make_accumulate_fn(loss_fn, cfg)
+    update = make_update_fn(optimizer, cfg)
+
+    def step(state: TrainState, batch, mask):
+        state, metrics = accumulate(state, batch, mask)
+        state = update(state)
+        return state, metrics
+
+    return step
+
+
+def make_eval_fn(loss_fn: Callable):
+    def evaluate(params, batch, mask):
+        losses = loss_fn(params, batch, Tape())
+        return (losses * mask).sum() / jnp.maximum(mask.sum(), 1)
+    return evaluate

@@ -1,0 +1,204 @@
+"""Tape: the recording context that powers ghost-norm / book-keeping clipping.
+
+Every parameterised op in the model zoo routes through the DP layer primitives in
+``repro.core.layers``.  Each primitive consults the Tape:
+
+* ``plain``   — ordinary forward; nothing recorded (non-private / per-example paths,
+                serving, smoke tests).
+* ``collect`` — shape-collection pass (run under ``jax.eval_shape``): each primitive
+                registers the *shape* of the zero perturbation ("eps") it would
+                inject at its output, plus a static LayerSpec.  The engine uses
+                this to build the eps pytree it differentiates against.
+* ``record``  — the instrumented forward: each primitive computes
+                ``y = f(x, w) + eps[name]`` and records its input(s) on the tape.
+                One backward pass w.r.t. all eps then yields the per-example
+                output-gradient dY at every injection point, from which per-example
+                parameter-gradient *norms* (ghost clipping) and clipped summed
+                gradients (book-keeping) follow analytically — without ever
+                materialising per-example parameter gradients.
+
+Records produced inside ``scan_blocks`` (layer-stacked transformer blocks) carry a
+leading stack axis.  The static LayerSpec says whether that axis enumerates
+*different* parameters per step (``stack='layers'`` — norms add across the axis) or
+*re-uses the same* parameters each step (``stack='uses'`` — the axis is folded into
+the sequence axis so cross-use inner products are exact; e.g. Zamba2's shared
+attention block).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """Static (non-traced) description of one recorded primitive."""
+    kind: str                 # dense | embed | scale | bias | conv1d
+    stack: Tuple[str, ...] = ()   # one entry per leading stack axis: 'layers'|'uses'
+    param_path: str = ""      # dotted path of the parameter inside the params tree
+    meta: Tuple[Tuple[str, Any], ...] = ()   # static extras (e.g. conv width)
+
+    def with_stack(self, s: str) -> "LayerSpec":
+        return dataclasses.replace(self, stack=(s,) + self.stack)
+
+    def get(self, key, default=None):
+        return dict(self.meta).get(key, default)
+
+
+class Tape:
+    """Mutable trace-time context threaded through model functions."""
+
+    PLAIN, COLLECT, RECORD = "plain", "collect", "record"
+
+    def __init__(self, mode: str = "plain", eps: Optional[Dict[str, Any]] = None):
+        assert mode in (self.PLAIN, self.COLLECT, self.RECORD)
+        self.mode = mode
+        self.eps = eps or {}            # name -> array (record) / ShapeDtypeStruct (collect)
+        self.records: Dict[str, Any] = {}   # name -> dict of traced arrays
+        self.specs: Dict[str, LayerSpec] = {}  # name -> static spec
+
+    # -- primitive-facing API ------------------------------------------------
+    def inject(self, name: str, y, spec: LayerSpec, record: Dict[str, Any]):
+        """Called by each primitive with its natural output ``y``.
+
+        Returns ``y`` (plain), ``y`` while registering the needed eps shape
+        (collect), or ``y + eps[name]`` while recording inputs (record).
+        """
+        if self.mode == self.PLAIN:
+            return y
+        if name in self.specs:
+            raise ValueError(f"duplicate tape name: {name!r}")
+        self.specs[name] = spec
+        if self.mode == self.COLLECT:
+            # eps inherits the activation dtype: dY buffers at e.g. a 150k
+            # vocab head would double in f32 (norm math upcasts to f32 anyway)
+            self.eps[name] = jax.ShapeDtypeStruct(y.shape, y.dtype)
+            self.records[name] = record
+            return y
+        # record mode
+        if name not in self.eps:
+            raise KeyError(f"eps missing for {name!r}; run a collect pass first")
+        self.records[name] = record
+        return y + self.eps[name].astype(y.dtype)
+
+    # -- scan support ----------------------------------------------------------
+    def subtape(self, eps_slice) -> "Tape":
+        return Tape(self.mode, eps_slice)
+
+    def absorb(self, scope: str, sub: "Tape", stack: Optional[str]):
+        """Merge a child tape's records/specs under ``scope`` (optionally stacked)."""
+        for n, spec in sub.specs.items():
+            full = f"{scope}/{n}"
+            st = "uses" if n.startswith("shared/") else stack
+            self.specs[full] = spec.with_stack(st) if st else spec
+        for n, rec in sub.records.items():
+            self.records[f"{scope}/{n}"] = rec
+        if self.mode == self.COLLECT:
+            for n, e in sub.eps.items():
+                full = f"{scope}/{n}"
+                if full not in self.eps:  # may pre-exist only in record mode
+                    self.eps[full] = e
+
+
+# Activation checkpointing for the layer scan (plain-mode bodies only — the
+# record-mode ghost passes NEED their records kept).  Set by the launcher.
+_REMAT = False
+
+
+def set_remat(on: bool) -> None:
+    global _REMAT
+    _REMAT = bool(on)
+
+
+# Global scan-unroll override: the dry-run sets this to fully unroll layer
+# loops so XLA cost_analysis sees every iteration (exact HLO flop counts on
+# configs where compile time allows it). Default 1 = rolled lax.scan.
+_SCAN_UNROLL = 1
+
+
+def set_scan_unroll(n: int) -> None:
+    global _SCAN_UNROLL
+    _SCAN_UNROLL = max(1, int(n))
+
+
+def get_scan_unroll() -> int:
+    return _SCAN_UNROLL
+
+
+def scan_blocks(tape: Tape, scope: str, body: Callable, stacked_params, carry,
+                n_layers: int, unroll: int = 0):
+    unroll = unroll or min(_SCAN_UNROLL, n_layers)
+    """Run ``carry = body(subtape, params_slice, carry)`` for each of ``n_layers``
+    stacked layers with lax.scan, while correctly threading eps slices in and
+    records out.
+
+    ``stacked_params`` leaves have a leading (n_layers,) axis.  Parameters the
+    body closes over (shared across iterations) must register their primitives
+    under a name starting with ``shared/`` so their records are folded as 'uses'.
+    """
+    if tape.mode == Tape.PLAIN:
+        fn = lambda p, c: body(tape.subtape({}), p, c)
+        if _REMAT:
+            fn = jax.checkpoint(fn)
+
+        def step(c, p):
+            return fn(p, c), None
+        carry, _ = jax.lax.scan(step, carry, stacked_params, length=n_layers,
+                                unroll=min(unroll, n_layers))
+        return carry
+
+    if tape.mode == Tape.COLLECT:
+        # One abstract pass through the body; prepend the layer axis to every
+        # collected eps/record shape. Blocks map (B,T,d)->(B,T,d) so a single
+        # slice-trace is shape-faithful for all layers.
+        p0 = jax.tree.map(lambda x: x[0], stacked_params)
+        sub = tape.subtape({})
+        sub.mode = Tape.COLLECT
+        carry = body(sub, p0, carry)
+        sub.eps = {n: jax.ShapeDtypeStruct((n_layers,) + e.shape, e.dtype)
+                   for n, e in sub.eps.items()}
+        sub.records = {
+            n: jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (n_layers,) + x.shape), rec)
+            for n, rec in sub.records.items()}
+        tape.absorb(scope, sub, stack="layers")
+        return carry
+
+    # RECORD mode: eps slices ride along as scan xs; records come out as ys.
+    prefix = scope + "/"
+    eps_stacked = {n[len(prefix):]: e for n, e in tape.eps.items()
+                   if n.startswith(prefix)}
+
+    def step(c, xs):
+        p, eps_slice = xs
+        sub = tape.subtape(eps_slice)
+        c = body(sub, p, c)
+        return c, sub.records
+
+    carry, recs = jax.lax.scan(step, carry, (stacked_params, eps_stacked),
+                               length=n_layers, unroll=min(unroll, n_layers))
+    # Specs: re-trace statically once to capture them (cheap, trace-time only).
+    p0 = jax.tree.map(lambda x: x[0], stacked_params)
+    spec_sub = Tape(Tape.COLLECT, {})
+    jax.eval_shape(lambda pp, cc: body(spec_sub, pp, cc), p0, carry)
+    sub = tape.subtape({})
+    sub.specs = spec_sub.specs
+    sub.records = recs
+    tape.absorb(scope, sub, stack="layers")
+    return carry
+
+
+def collect_eps(model_fn: Callable, *args) -> Tuple[Dict[str, jax.ShapeDtypeStruct], Dict[str, LayerSpec]]:
+    """Abstractly run ``model_fn(tape, *args)`` to learn the eps pytree shapes
+    and the static LayerSpecs. Returns (eps_shapes, specs)."""
+    tape = Tape(Tape.COLLECT)
+
+    def run(*a):
+        model_fn(tape, *a)
+        return 0
+
+    jax.eval_shape(run, *args)
+    return dict(tape.eps), dict(tape.specs)

@@ -1,0 +1,6 @@
+from .sampler import PoissonSampler, ShuffleSampler
+from .loader import BatchMemoryManager, PhysicalBatch
+from .synthetic import TokenDataset, EmbeddingDataset, ImageDataset
+
+__all__ = ["PoissonSampler", "ShuffleSampler", "BatchMemoryManager",
+           "PhysicalBatch", "TokenDataset", "EmbeddingDataset", "ImageDataset"]

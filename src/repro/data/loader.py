@@ -1,0 +1,51 @@
+"""BatchMemoryManager: logical -> fixed-size physical batches with masks.
+
+This is the host half of Algorithm 2.  A Poisson-sampled logical batch of
+variable size tl is padded up to k*p examples (k = ceil(tl / p)); the first tl
+mask entries are 1, the padding entries 0.  Every physical batch the device
+sees therefore has the SAME shape (p, ...) — jit compiles once — while the
+masked clipped-gradient sum is exactly the sum over the true logical batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterator, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class PhysicalBatch:
+    data: dict            # pytree of np arrays, leading dim = physical size p
+    mask: np.ndarray      # (p,) float32 0/1
+    is_last: bool         # True on the final physical batch of a logical batch
+    logical_size: int     # tl of the surrounding logical batch
+
+
+class BatchMemoryManager:
+    """Iterate physical batches for each logical index draw.
+
+    fetch(indices) -> pytree with leading axis len(indices); padding examples
+    re-fetch index 0 but are masked out, so their gradients never contribute.
+    """
+
+    def __init__(self, fetch: Callable[[np.ndarray], dict], physical: int):
+        self.fetch = fetch
+        self.p = physical
+
+    def batches(self, logical_indices: np.ndarray) -> Iterator[PhysicalBatch]:
+        tl = len(logical_indices)
+        k = max(1, -(-tl // self.p))          # ceil; at least one batch
+        m = k * self.p
+        padded = np.zeros(m, dtype=np.int64)
+        padded[:tl] = logical_indices
+        mask = np.zeros(m, dtype=np.float32)
+        mask[:tl] = 1.0
+        for s in range(k):
+            sl = slice(s * self.p, (s + 1) * self.p)
+            yield PhysicalBatch(
+                data=self.fetch(padded[sl]),
+                mask=mask[sl],
+                is_last=(s == k - 1),
+                logical_size=tl,
+            )

@@ -1,0 +1,5 @@
+from .ops import (clip_accum, ghost_norm_dense, noisy_sgd_update,
+                  tree_clip_accum, tree_noisy_update)
+
+__all__ = ["clip_accum", "ghost_norm_dense", "noisy_sgd_update",
+           "tree_clip_accum", "tree_noisy_update"]

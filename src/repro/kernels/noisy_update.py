@@ -1,0 +1,70 @@
+"""Pallas TPU kernel: fused DP noise + SGD parameter update.
+
+Paper Table 2: the DP optimizer step costs 99.65 ms vs 38.17 ms non-private —
+it re-reads the accumulated gradient, adds N(0, (σC)²) noise, rescales by the
+expected logical batch size, then the optimizer re-reads everything again.
+Fusing  p ← p − lr·(acc + σC·z)/L  (+ optional momentum) into one pass makes
+the DP step exactly one read+write of each buffer — the same HBM traffic as
+the non-private step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 4096
+
+
+def _kernel(p_ref, a_ref, z_ref, s_ref, newp_ref):
+    sc, inv_l, lr = s_ref[0, 0], s_ref[0, 1], s_ref[0, 2]
+    g = (a_ref[...] + sc * z_ref[...]) * inv_l
+    newp_ref[...] = p_ref[...] - lr * g
+
+
+def _kernel_mom(p_ref, a_ref, z_ref, m_ref, s_ref, newp_ref, newm_ref):
+    sc, inv_l, lr, mu = s_ref[0, 0], s_ref[0, 1], s_ref[0, 2], s_ref[0, 3]
+    g = (a_ref[...] + sc * z_ref[...]) * inv_l
+    m = mu * m_ref[...] + g
+    newm_ref[...] = m
+    newp_ref[...] = p_ref[...] - lr * m
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("interpret", "tile"))
+def noisy_sgd_update(params, acc, noise, sigma_c, expected_batch, lr,
+                     *, momentum_buf=None, momentum=0.0, interpret=True,
+                     tile=TILE):
+    """Flat f32 arrays (D,): p - lr * ((acc + sigma_c * noise)/L) [+momentum]."""
+    D = params.shape[0]
+    pad = (-D) % tile
+
+    def pp(a):
+        return jnp.pad(a.astype(jnp.float32), (0, pad)).reshape(1, -1)
+
+    p, a, z = pp(params), pp(acc), pp(noise)
+    Dp = D + pad
+    grid = (Dp // tile,)
+    bs = pl.BlockSpec((1, tile), lambda i: (0, i))
+    if momentum_buf is None:
+        s = jnp.array([[sigma_c, 1.0 / expected_batch, lr]], jnp.float32)
+        out = pl.pallas_call(
+            _kernel, grid=grid,
+            in_specs=[bs, bs, bs, pl.BlockSpec((1, 3), lambda i: (0, 0))],
+            out_specs=bs,
+            out_shape=jax.ShapeDtypeStruct((1, Dp), jnp.float32),
+            interpret=interpret,
+        )(p, a, z, s)
+        return out[0, :D]
+    m = pp(momentum_buf)
+    s = jnp.array([[sigma_c, 1.0 / expected_batch, lr, momentum]], jnp.float32)
+    newp, newm = pl.pallas_call(
+        _kernel_mom, grid=grid,
+        in_specs=[bs, bs, bs, bs, pl.BlockSpec((1, 4), lambda i: (0, 0))],
+        out_specs=[bs, bs],
+        out_shape=[jax.ShapeDtypeStruct((1, Dp), jnp.float32)] * 2,
+        interpret=interpret,
+    )(p, a, z, m, s)
+    return newp[0, :D], newm[0, :D]

@@ -1,0 +1,65 @@
+"""Jit'd pytree-level wrappers around the Pallas kernels.
+
+These are the integration points the engine can swap in on TPU:
+  * ``tree_clip_accum``    — replaces the clip+accumulate of the pe engines.
+  * ``tree_noisy_update``  — replaces noise-add + SGD apply in the DP step.
+  * ``ghost_norm_dense``   — drop-in for the dense direct-path norm.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..utils.tree import tree_zeros_like
+from .clip_accum import clip_accum
+from .ghost_norm import ghost_norm_dense  # re-export
+from .noisy_update import noisy_sgd_update
+
+__all__ = ["clip_accum", "ghost_norm_dense", "noisy_sgd_update",
+           "tree_clip_accum", "tree_noisy_update", "flatten_tree",
+           "unflatten_tree"]
+
+
+def flatten_tree(tree):
+    """Concatenate all leaves into one flat f32 vector (+ structure info)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    shapes = [l.shape for l in leaves]
+    sizes = [int(l.size) for l in leaves]
+    flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves])
+    return flat, (treedef, shapes, sizes)
+
+
+def unflatten_tree(flat, meta):
+    treedef, shapes, sizes = meta
+    out, off = [], 0
+    for sh, sz in zip(shapes, sizes):
+        out.append(flat[off:off + sz].reshape(sh))
+        off += sz
+    return jax.tree.unflatten(treedef, out)
+
+
+def tree_clip_accum(per_example_grads, norms, mask, clip_norm, *,
+                    interpret=True):
+    """per_example_grads: pytree with leading B axis -> clipped masked sum."""
+    leaves, treedef = jax.tree.flatten(per_example_grads)
+    B = leaves[0].shape[0]
+    flat = jnp.concatenate(
+        [l.reshape(B, -1).astype(jnp.float32) for l in leaves], axis=1)
+    summed = clip_accum(flat, norms, mask, clip_norm, interpret=interpret)
+    out, off = [], 0
+    for l in leaves:
+        sz = int(l.size) // B
+        out.append(summed[off:off + sz].reshape(l.shape[1:]))
+        off += sz
+    return jax.tree.unflatten(treedef, out)
+
+
+def tree_noisy_update(params, grad_acc, key, sigma_c, expected_batch, lr, *,
+                      interpret=True):
+    """Fused DP-SGD apply across a whole parameter pytree."""
+    pflat, meta = flatten_tree(params)
+    aflat, _ = flatten_tree(grad_acc)
+    z = jax.random.normal(key, pflat.shape, jnp.float32)
+    new = noisy_sgd_update(pflat, aflat, z, sigma_c, expected_batch, lr,
+                           interpret=interpret)
+    return unflatten_tree(new, meta)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def clip_accum_ref(grads, norms, mask, clip_norm):
+    coef = (mask.astype(jnp.float32)
+            * jnp.minimum(1.0, clip_norm / jnp.maximum(norms, 1e-12)))
+    return jnp.sum(grads.astype(jnp.float32) * coef[:, None], axis=0)
+
+
+def ghost_norm_dense_ref(x, dy):
+    m = jnp.einsum("bti,bto->bio", x.astype(jnp.float32),
+                   dy.astype(jnp.float32))
+    return jnp.sum(m * m, axis=(1, 2))
+
+
+def noisy_sgd_update_ref(params, acc, noise, sigma_c, expected_batch, lr,
+                         momentum_buf=None, momentum=0.0):
+    g = (acc + sigma_c * noise) / expected_batch
+    if momentum_buf is None:
+        return params - lr * g
+    m = momentum * momentum_buf + g
+    return params - lr * m, m

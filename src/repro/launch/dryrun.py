@@ -1,0 +1,358 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) combination
+on the production mesh, with ShapeDtypeStruct inputs (no allocation).
+
+For train/prefill shapes this lowers the fused DP-SGD step (clip + noise +
+update); for decode shapes it lowers serve_step (one token against a KV/SSM
+cache of seq_len).  Prints memory_analysis / cost_analysis / collective
+inventory and emits a JSON record consumed by the roofline report.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-0.5b \
+      --shape train_4k [--multi-pod] [--engine masked_pe] [--unroll]
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out runs/dryrun
+"""
+import argparse
+import dataclasses
+import json
+import math
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import SHAPES, input_specs
+from ..core import DPConfig, init_state, make_fused_step
+from ..core.tape import set_scan_unroll
+from ..models import build, get_config
+from ..optim import sgd
+from ..utils.sharding import (batch_pspec, cache_shardings, state_shardings)
+from . import costmodel, hlo
+from .mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16, make_production_mesh
+
+# Skips mandated by the assignment (full-attention archs on long_500k);
+# qwen3 runs it via its sliding-window variant.
+LONG_OK = {"mamba2-1.3b", "zamba2-1.2b", "qwen3-1.7b"}
+
+# Paper-faithful Algorithm 2 (masked per-example vmap clipping) where the
+# per-example gradient memory wall allows; ghost elsewhere (identical update
+# values — see DESIGN.md).  Microbatches = in-step physical batching
+# (Algorithm 1's virtual batching inside the jitted step).
+DEFAULT_ENGINE = {
+    "qwen2-0.5b": "masked_pe",
+    "whisper-base": "masked_pe",
+    "vit-base": "masked_pe",
+}
+FALLBACK_ENGINE = "masked_ghost"
+GIANTS = ("deepseek-67b", "llama-3.2-vision-90b")
+DEFAULT_MICROBATCH = {"deepseek-67b": 16, "llama-3.2-vision-90b": 16}
+DEFAULT_MB_OTHER = 16
+
+
+def _arch_config(arch: str, shape_name: str):
+    cfg = get_config(arch)
+    if shape_name == "long_500k" and arch == "qwen3-1.7b":
+        cfg = dataclasses.replace(cfg, sliding_window=4096,
+                                  name="qwen3-1.7b-swa")
+    return cfg
+
+
+def applicable(arch: str, shape_name: str) -> bool:
+    if shape_name == "long_500k" and arch not in LONG_OK:
+        return False
+    if arch == "vit-base" and shape_name != "train_4k":
+        return False        # classifier: no decode/prefill serving shapes
+    return True
+
+
+def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+              engine: str = None, microbatches: int = None,
+              unroll: bool = False, compile_: bool = True,
+              layout: str = "2d", ce_chunk: int = 512,
+              pe_bf16: bool = False, remat: bool = False) -> dict:
+    cfg = _arch_config(arch, shape_name)
+    if ce_chunk and shape_name.startswith("train"):
+        cfg = dataclasses.replace(cfg, ce_chunk=ce_chunk)
+    if remat or shape_name.startswith("train"):
+        # activation checkpointing on every plain-mode layer scan (the ghost
+        # record passes keep their records; pass-2/pe backwards recompute)
+        cfg = dataclasses.replace(cfg, remat=True)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = math.prod(mesh.shape.values())
+    model = build(cfg)
+    engine = engine or DEFAULT_ENGINE.get(arch, FALLBACK_ENGINE)
+    mb = microbatches if microbatches is not None else \
+        DEFAULT_MICROBATCH.get(arch, DEFAULT_MB_OTHER)
+    set_scan_unroll(cfg.n_layers if unroll else 1)
+    # flash attention from 4k up; sequence-parallel activations for giants so
+    # ghost records stay sharded over 'model' (see DESIGN.md §2.3)
+    from ..models import common as cm_mod
+    cm_mod.set_flash_min_t(4096)
+    seq_par_ok = (layout in ("2d", "dp_sp") and
+                  (shape.kind == "prefill" or
+                   (shape.kind == "train" and
+                    engine in ("masked_ghost", "masked_bk"))))
+    bp = batch_pspec(mesh, shape.global_batch)
+    bax = bp[0] if len(bp) else None
+    if seq_par_ok and shape.seq_len % mesh.shape["model"] == 0:
+        # sequence parallelism over 'model': block activations — and hence
+        # ghost records / eps / dY buffers — are T-sharded 16-way
+        cm_mod.set_act_sharding(P(bax, "model", None))
+    else:
+        cm_mod.set_act_sharding(None)
+    if cfg.n_experts and layout == "2d":
+        # expert-parallel dispatch buffers (E, B, cap, D)
+        cm_mod.set_expert_sharding(P("model", bax, None, None))
+    else:
+        cm_mod.set_expert_sharding(None)
+
+    # pin per-example gradient shardings (batch over data, param dims per
+    # the usual rules) — otherwise GSPMD replicates B x params buffers
+    from ..core import clipping as clip_mod
+    from ..utils.sharding import param_pspec
+
+    def pe_constraint(grads):
+        def one(path, g):
+            keys = tuple(getattr(p, "key", getattr(p, "idx", p))
+                         for p in path)
+            ps = param_pspec(keys, g.shape[1:], mesh)
+            # batch axis takes 'data'; param dims keep only 'model' entries
+            ps = [None if e in ("data", "pod") or
+                  (isinstance(e, tuple) and "data" in e) else e for e in ps]
+            return jax.lax.with_sharding_constraint(
+                g, NamedSharding(mesh, P("data", *ps)))
+        return jax.tree_util.tree_map_with_path(one, grads)
+
+    clip_mod.set_pe_grad_constraint(
+        pe_constraint if engine in ("pe", "masked_pe") else None)
+    clip_mod.set_pe_grad_dtype(jnp.bfloat16 if pe_bf16 else None)
+    from ..core.tape import set_remat
+    set_remat(cfg.remat)
+
+    from ..core import engine as engine_mod
+
+    def grad_constraint(g):
+        def one(path, leaf):
+            keys = tuple(getattr(p, "key", getattr(p, "idx", p))
+                         for p in path)
+            return jax.lax.with_sharding_constraint(
+                leaf, NamedSharding(mesh, param_pspec(keys, leaf.shape, mesh)))
+        return jax.tree_util.tree_map_with_path(one, g)
+
+    engine_mod.set_grad_constraint(grad_constraint)
+
+    rec = {"arch": arch, "shape": shape_name, "kind": shape.kind,
+           "mesh": dict(mesh.shape), "engine": engine,
+           "microbatches": mb, "unrolled": bool(unroll)}
+    t0 = time.time()
+
+    if shape.kind == "prefill":
+        # inference prefill: full-sequence forward producing logits
+        params_shape = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+        specs = input_specs(cfg, shape)
+        from ..utils.sharding import params_shardings
+        pshard = params_shardings(params_shape, mesh)
+        bspec = NamedSharding(mesh, batch_pspec(mesh, shape.global_batch))
+        bshard = jax.tree.map(lambda _: bspec, specs["batch"])
+
+        def prefill_step(params, batch):
+            # last-position logits only (XLA pushes the slice into the head
+            # matmul — the full (B,32k,V) logits never materialise; §Perf)
+            from ..core.tape import Tape
+            t = Tape()
+            if cfg.family in ("vlm", "audio"):
+                return model.logits(params, batch["tokens"],
+                                    batch["frontend"], t, last_only=True)
+            if cfg.family == "moe":
+                return model.logits_aux(params, batch["tokens"], t,
+                                        last_only=True)[0]
+            return model.logits(params, batch["tokens"], t, last_only=True)
+
+        with mesh:
+            lowered = jax.jit(prefill_step, in_shardings=(pshard, bshard),
+                              out_shardings=bspec).lower(
+                params_shape, specs["batch"])
+        costs = costmodel.train_costs(model, cfg, shape, "nonprivate",
+                                      dict(mesh.shape))
+        # forward-only: one pass instead of three
+        costs = dataclasses.replace(
+            costs, flops=costs.flops / 3.0,
+            hbm_bytes=costs.hbm_bytes / 3.0,
+            coll_bytes=costs.coll_bytes / 2.0,
+            model_flops=costs.model_flops / 3.0)
+    elif shape.kind == "train":
+        dpc = DPConfig(clip_norm=1.0, noise_multiplier=1.0,
+                       expected_batch_size=shape.global_batch,
+                       engine=engine, microbatches=mb)
+        opt = sgd(1e-3, momentum=0.9)
+        step = make_fused_step(lambda p, b, t: model.loss(p, b, t), opt, dpc)
+        state_shape = jax.eval_shape(
+            lambda: init_state(model.init(jax.random.PRNGKey(0)), opt,
+                               jax.random.PRNGKey(1)))
+        specs = input_specs(cfg, shape)
+        if layout in ("dp", "dp_sp"):
+            # pure data parallel: params replicated; batch over every axis
+            # (dp) or over data with sequence-parallel activations (dp_sp) —
+            # the right layouts for models that fit one chip (see §Perf)
+            rep = NamedSharding(mesh, P())
+            axes = tuple(mesh.shape.keys())
+            sshard = jax.tree.map(lambda _: rep, state_shape)
+            bspec = NamedSharding(
+                mesh, P(axes) if layout == "dp" else
+                P(tuple(a for a in axes if a != "model")))
+            clip_mod.set_pe_grad_constraint(None)
+            engine_mod.set_grad_constraint(None)
+        else:
+            sshard = state_shardings(state_shape, mesh)
+            bspec = NamedSharding(mesh, batch_pspec(mesh, shape.global_batch))
+        bshard = jax.tree.map(lambda _: bspec, specs["batch"])
+        mshard = bspec
+        with mesh:
+            lowered = jax.jit(
+                step, in_shardings=(sshard, bshard, mshard),
+                out_shardings=(sshard, None),
+                donate_argnums=(0,)).lower(state_shape, specs["batch"],
+                                           specs["mask"])
+        costs = costmodel.train_costs(model, cfg, shape, engine, dict(mesh.shape))
+    else:
+        params_shape = jax.eval_shape(
+            lambda: model.init(jax.random.PRNGKey(0)))
+        cache_shape = jax.eval_shape(
+            lambda p: model.init_cache(p, shape.global_batch, shape.seq_len),
+            params_shape)
+        from ..utils.sharding import params_shardings
+        pshard = params_shardings(params_shape, mesh)
+        cshard = cache_shardings(cache_shape, mesh, shape.global_batch)
+        tok = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        rep = NamedSharding(mesh, P())
+        bspec = NamedSharding(mesh, batch_pspec(mesh, shape.global_batch))
+
+        def serve_step(params, cache, tokens, p):
+            return model.decode_step(params, cache, tokens, p)
+
+        with mesh:
+            lowered = jax.jit(
+                serve_step,
+                in_shardings=(pshard, cshard, bspec, rep),
+                out_shardings=(bspec, cshard),
+                donate_argnums=(1,)).lower(params_shape, cache_shape, tok, pos)
+        costs = costmodel.decode_costs(model, cfg, shape, dict(mesh.shape))
+
+    rec["lower_s"] = round(time.time() - t0, 2)
+    if not compile_:
+        return rec
+
+    t1 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t1, 2)
+
+    ma = compiled.memory_analysis()
+    rec["memory"] = {
+        "argument_bytes": ma.argument_size_in_bytes,
+        "output_bytes": ma.output_size_in_bytes,
+        "temp_bytes": ma.temp_size_in_bytes,
+        "alias_bytes": ma.alias_size_in_bytes,
+        "per_device_total": (ma.argument_size_in_bytes
+                             + ma.temp_size_in_bytes
+                             + ma.output_size_in_bytes
+                             - ma.alias_size_in_bytes),
+    }
+    ca = compiled.cost_analysis() or {}
+    rec["hlo_cost"] = {"flops": ca.get("flops", -1.0),
+                       "bytes_accessed": ca.get("bytes accessed", -1.0),
+                       "transcendentals": ca.get("transcendentals", -1.0)}
+
+    L_eff = 1 if unroll else max(cfg.n_layers, 1)
+    if shape.kind == "train":
+        depth_factors = [mb, mb * L_eff, mb * L_eff]
+    else:
+        depth_factors = [L_eff, L_eff]
+    rec["collectives"] = hlo.summarize(compiled.as_text(), depth_factors)
+    coll_measured = rec["collectives"]["total_bytes"]
+
+    # roofline terms (seconds); collective term from the compiled schedule
+    # (per-device shard bytes x loop trip counts), analytic as cross-check
+    rec["analytic"] = {
+        "flops": costs.flops, "hbm_bytes": costs.hbm_bytes,
+        "coll_bytes_per_dev": costs.coll_bytes,
+        "model_flops": costs.model_flops,
+        "n_params": costs.n_params, "n_active": costs.n_active,
+        "detail": costs.detail,
+    }
+    rec["roofline"] = {
+        "t_compute": costs.flops / (chips * PEAK_FLOPS_BF16),
+        "t_memory": costs.hbm_bytes / (chips * HBM_BW),
+        "t_collective": coll_measured / ICI_BW,
+        "t_collective_analytic": costs.coll_bytes / ICI_BW,
+        "useful_ratio": costs.model_flops / max(costs.flops, 1.0),
+    }
+    rec["roofline"]["dominant"] = max(
+        ("t_compute", "t_memory", "t_collective"),
+        key=lambda k: rec["roofline"][k])
+    rec["fits_hbm"] = rec["memory"]["per_device_total"] <= 16 * 2 ** 30
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--engine")
+    ap.add_argument("--microbatches", type=int)
+    ap.add_argument("--unroll", action="store_true")
+    ap.add_argument("--layout", default="2d", choices=["2d", "dp", "dp_sp"])
+    ap.add_argument("--ce-chunk", type=int, default=512)
+    ap.add_argument("--pe-bf16", action="store_true")
+    ap.add_argument("--remat", action="store_true")
+    ap.add_argument("--no-compile", action="store_true")
+    ap.add_argument("--out", default=None, help="directory for JSON records")
+    args = ap.parse_args()
+
+    from ..models.registry import ARCH_IDS
+    combos = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in SHAPES:
+                if applicable(a, s):
+                    combos.append((a, s))
+    else:
+        combos = [(args.arch, args.shape)]
+
+    ok = fail = 0
+    for arch, shape in combos:
+        try:
+            rec = lower_one(arch, shape, multi_pod=args.multi_pod,
+                            engine=args.engine, microbatches=args.microbatches,
+                            unroll=args.unroll, compile_=not args.no_compile,
+                            layout=args.layout, ce_chunk=args.ce_chunk,
+                            pe_bf16=args.pe_bf16, remat=args.remat)
+            rec["status"] = "ok"
+            ok += 1
+        except Exception as e:
+            traceback.print_exc()
+            rec = {"arch": arch, "shape": shape, "status": "fail",
+                   "error": f"{type(e).__name__}: {e}"}
+            fail += 1
+        print(json.dumps({k: v for k, v in rec.items()
+                          if k not in ("analytic",)}, default=str))
+        if args.out:
+            os.makedirs(args.out, exist_ok=True)
+            tag = "mp" if args.multi_pod else "sp"
+            with open(os.path.join(
+                    args.out, f"{arch}__{shape}__{tag}.json"), "w") as f:
+                json.dump(rec, f, indent=1, default=str)
+    print(f"\nDRYRUN SUMMARY: {ok} ok, {fail} failed / {len(combos)}")
+    if fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,128 @@
+"""Post-SPMD HLO inspection: collective inventory + bytes estimation.
+
+``cost_analysis()`` gives FLOPs/bytes but counts while-loop (lax.scan) bodies
+ONCE and contains no collective info, so we parse ``compiled.as_text()``:
+
+  * every all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute op, with its result shape -> bytes (post-SPMD HLO
+    prints per-device shard shapes, so bytes are per-device),
+  * its while-loop nesting depth (scanned microbatch / layer loops), whose
+    trip counts the caller knows from the config; bytes are multiplied by
+    the supplied per-depth factors.
+
+The inventory is evidence of the compiled collective schedule; totals feed the
+roofline's collective term.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Sequence, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_HEADER_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_WHILE_RE = re.compile(r"=\s*.*?\bwhile\(.*?body=%?([\w.\-]+)")
+
+
+def _shape_bytes(sig: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(sig):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _computations(text: str) -> Dict[str, str]:
+    comps: Dict[str, str] = {}
+    cur, buf, depth = None, [], 0
+    for line in text.splitlines():
+        if cur is None:
+            m = _HEADER_RE.match(line)
+            if m:
+                cur, buf = m.group(1), [line]
+                depth = line.count("{") - line.count("}")
+                if depth <= 0:
+                    comps[cur] = line
+                    cur = None
+        else:
+            buf.append(line)
+            depth += line.count("{") - line.count("}")
+            if depth <= 0:
+                comps[cur] = "\n".join(buf)
+                cur = None
+    return comps
+
+
+def _loop_depths(comps: Dict[str, str]) -> Dict[str, int]:
+    """while-body computation name -> nesting depth (1 = outermost loop)."""
+    children: Dict[str, List[str]] = {}
+    for cname, body in comps.items():
+        children[cname] = [m.group(1) for m in _WHILE_RE.finditer(body)]
+    depths: Dict[str, int] = {}
+
+    def visit(cname: str, depth: int):
+        for b in children.get(cname, []):
+            if depths.get(b, 0) < depth + 1:
+                depths[b] = depth + 1
+                visit(b, depth + 1)
+
+    roots = set(comps) - {b for bs in children.values() for b in bs}
+    for r in roots:
+        visit(r, 0)
+    return depths
+
+
+def collective_inventory(text: str, depth_factors: Sequence[int] = (1,)
+                         ) -> Tuple[List[dict], Dict[str, float]]:
+    """depth_factors[d-1] = total executions of a depth-d loop body
+    (e.g. [microbatches, microbatches*n_layers])."""
+    comps = _computations(text)
+    depths = _loop_depths(comps)
+    ops: List[dict] = []
+    totals: Dict[str, float] = {k: 0.0 for k in COLLECTIVES}
+    for cname, body in comps.items():
+        d = depths.get(cname, 0)
+        if d == 0:
+            factor = 1
+        elif d <= len(depth_factors):
+            factor = depth_factors[d - 1]
+        else:
+            factor = depth_factors[-1]
+        for line in body.splitlines():
+            m = _OP_RE.match(line)
+            if not m:
+                continue
+            kind = m.group(2)
+            b = _shape_bytes(m.group(1))
+            ops.append({"kind": kind, "bytes": b, "depth": d,
+                        "factor": factor, "computation": cname})
+            totals[kind] += b * factor
+    return ops, totals
+
+
+def summarize(text: str, depth_factors: Sequence[int] = (1,)) -> dict:
+    ops, totals = collective_inventory(text, depth_factors)
+    return {
+        "n_collectives_static": len(ops),
+        "n_in_loop": sum(1 for o in ops if o["depth"] > 0),
+        "bytes_by_kind": {k: v for k, v in totals.items() if v},
+        "total_bytes": sum(totals.values()),
+    }

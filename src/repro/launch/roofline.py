@@ -1,0 +1,87 @@
+"""Aggregate dry-run JSON records into the EXPERIMENTS.md roofline tables.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.roofline runs/dryrun_sp [runs/dryrun_mp]
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def load(dirname):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def fmt_b(x):
+    for unit, div in (("GB", 2**30), ("MB", 2**20), ("KB", 2**10)):
+        if x >= div:
+            return f"{x / div:.1f}{unit}"
+    return f"{x:.0f}B"
+
+
+def table(recs, caption):
+    lines = [f"\n### {caption}\n"]
+    lines.append("| arch | shape | engine | per-dev mem | fits | t_compute | "
+                 "t_memory | t_coll(HLO) | t_coll(model) | dominant | "
+                 "useful% | compile_s |")
+    lines.append("|---|---|---|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | - | FAIL: "
+                         f"{r.get('error', '?')[:60]} |" + " - |" * 8)
+            continue
+        ro = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['engine']}"
+            f"{'/mb' + str(r['microbatches']) if r.get('microbatches', 1) > 1 else ''} "
+            f"| {fmt_b(r['memory']['per_device_total'])} "
+            f"| {'Y' if r.get('fits_hbm') else 'N'} "
+            f"| {fmt_s(ro['t_compute'])} | {fmt_s(ro['t_memory'])} "
+            f"| {fmt_s(ro['t_collective'])} "
+            f"| {fmt_s(ro.get('t_collective_analytic'))} "
+            f"| {ro['dominant'].replace('t_', '')} "
+            f"| {ro['useful_ratio'] * 100:.0f}% | {r.get('compile_s', '-')} |")
+    return "\n".join(lines)
+
+
+def main():
+    sp = load(sys.argv[1])
+    print(table(sp, f"Single-pod (16x16 = 256 chips) — {len(sp)} combos"))
+    ok = [r for r in sp if r.get("status") == "ok"]
+    print(f"\nSingle-pod: {len(ok)}/{len(sp)} lower+compile OK, "
+          f"{sum(1 for r in ok if r.get('fits_hbm'))} fit 16GB HBM")
+    if len(sys.argv) > 2:
+        mp = load(sys.argv[2])
+        print(table(mp, f"Multi-pod (2x16x16 = 512 chips) — {len(mp)} combos"))
+        okm = [r for r in mp if r.get("status") == "ok"]
+        print(f"\nMulti-pod: {len(okm)}/{len(mp)} lower+compile OK")
+
+    # hillclimb candidates
+    worst = sorted(ok, key=lambda r: -max(
+        r["roofline"]["t_compute"], r["roofline"]["t_memory"],
+        r["roofline"]["t_collective_analytic"]))
+    print("\nHillclimb candidates (by max roofline term):")
+    for r in worst[:6]:
+        print(f"  {r['arch']:24s} {r['shape']:12s} dominant="
+              f"{r['roofline']['dominant']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from .registry import ARCH_IDS, build, build_by_name, get_config
+
+__all__ = ["ARCH_IDS", "build", "build_by_name", "get_config"]

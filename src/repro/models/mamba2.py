@@ -1,0 +1,256 @@
+"""Mamba2 (SSD — state-space duality, Dao & Gu 2024), TPU-adapted.
+
+The SSD scan is computed chunkwise: quadratic attention-like math inside each
+chunk (MXU-friendly batched matmuls) and a linear inter-chunk state
+recurrence (lax.scan) — the TPU-native layout of the paper's algorithm.
+
+DP note: SSM parameters decompose exactly onto the DP primitives —
+  in/out projections -> dense, conv -> conv1d_depthwise, dt_bias -> bias,
+  A (stored directly as the negative decay rate ``a_neg``; HF stores A_log,
+  an init-time reparameterisation) and D -> scale.
+The recurrence itself is parameter-free, so ghost/BK clipping covers the full
+parameter set (see DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..core import layers as L
+from ..core.tape import Tape, scan_blocks
+from . import common as cm
+
+
+# ---------------------------------------------------------------------------
+# SSD core (parameter-free)
+# ---------------------------------------------------------------------------
+
+def ssd_chunked(x, dt, u, Bm, Cm, chunk: int, init_state=None):
+    """Chunked SSD scan.
+
+    x  (B,T,H,P) inputs per head
+    dt (B,T,H)   step sizes (post-softplus)
+    u  (B,T,H)   log-decay per step = dt * a  (a < 0)
+    Bm (B,T,N), Cm (B,T,N)  input/output projections (single group)
+    Returns (y (B,T,H,P), final_state (B,H,N,P)).
+    """
+    Bsz, T, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, T)
+    assert T % Q == 0, f"T={T} not divisible by chunk={Q}"
+    nc = T // Q
+
+    xr = x.reshape(Bsz, nc, Q, H, P).astype(jnp.float32)
+    dtr = dt.reshape(Bsz, nc, Q, H).astype(jnp.float32)
+    ur = u.reshape(Bsz, nc, Q, H).astype(jnp.float32)
+    Br = Bm.reshape(Bsz, nc, Q, N).astype(jnp.float32)
+    Cr = Cm.reshape(Bsz, nc, Q, N).astype(jnp.float32)
+
+    cs = jnp.cumsum(ur, axis=2)                       # inclusive (B,nc,Q,H)
+    # intra-chunk: L[q,k] = exp(cs_q - cs_k) for k<=q
+    diff = cs[:, :, :, None, :] - cs[:, :, None, :, :]    # (B,nc,Q,Q,H)
+    tri = jnp.arange(Q)[:, None] >= jnp.arange(Q)[None, :]
+    Lmat = jnp.exp(jnp.where(tri[None, None, :, :, None], diff, -1e30))
+    CB = jnp.einsum("bcqn,bckn->bcqk", Cr, Br)            # (B,nc,Q,Q)
+    xdt = xr * dtr[..., None]
+    y_intra = jnp.einsum("bcqk,bcqkh,bckhp->bcqhp", CB, Lmat, xdt)
+
+    # chunk states: S_c = sum_k exp(cs_last - cs_k) dt_k B_k (x_k)^T
+    dte = jnp.exp(cs[:, :, -1:, :] - cs) * dtr           # (B,nc,Q,H)
+    S_chunks = jnp.einsum("bckn,bckh,bckhp->bchnp", Br, dte, xr)
+    chunk_decay = jnp.exp(cs[:, :, -1, :])               # (B,nc,H)
+
+    def scanf(S, inp):
+        Sc, dec = inp                                    # (B,H,N,P), (B,H)
+        return S * dec[:, :, None, None] + Sc, S         # emit state BEFORE chunk
+
+    S0 = (jnp.zeros((Bsz, H, N, P), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+    S_fin, S_prev = jax.lax.scan(
+        scanf, S0, (S_chunks.transpose(1, 0, 2, 3, 4),
+                    chunk_decay.transpose(1, 0, 2)))
+    S_prev = S_prev.transpose(1, 0, 2, 3, 4)             # (B,nc,H,N,P)
+
+    y_inter = jnp.einsum("bcqn,bcqh,bchnp->bcqhp", Cr, jnp.exp(cs), S_prev)
+    y = (y_intra + y_inter).reshape(Bsz, T, H, P)
+    return y, S_fin
+
+
+def ssd_step(state, x, dt, u, Bm, Cm):
+    """One-token recurrence. state (B,H,N,P); x (B,H,P); dt,u (B,H); B,C (B,N)."""
+    dec = jnp.exp(u.astype(jnp.float32))
+    upd = jnp.einsum("bn,bh,bhp->bhnp", Bm.astype(jnp.float32),
+                     dt.astype(jnp.float32), x.astype(jnp.float32))
+    state = state * dec[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", Cm.astype(jnp.float32), state)
+    return y, state
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block (params through DP primitives)
+# ---------------------------------------------------------------------------
+
+def mamba_params(key, cfg: ArchConfig):
+    D = cfg.d_model
+    di = cfg.d_inner
+    H = cfg.nheads_ssm
+    N = cfg.ssm_state
+    conv_dim = di + 2 * N
+    ks = jax.random.split(key, 5)
+    return {
+        "in_proj": cm.dense_params(ks[0], D, 2 * di + 2 * N + H),
+        "conv": {"w": jax.random.normal(ks[1], (cfg.conv_width, conv_dim)) * 0.2},
+        "dt_bias": {"w": jnp.zeros((H,), jnp.float32)},
+        "a_neg": {"w": -jnp.exp(jax.random.uniform(
+            ks[2], (H,), minval=jnp.log(1.0), maxval=jnp.log(16.0)))},
+        "D": {"w": jnp.ones((H,), jnp.float32)},
+        "ssm_norm": cm.norm_params(di),
+        "out_proj": cm.dense_params(ks[3], di, D),
+    }
+
+
+def _mamba_pre(tape: Tape, scope: str, path: str, p, x, cfg: ArchConfig,
+               conv_window=None):
+    """Shared projection/conv/gating prologue. Returns
+    (z, xs, Bm, Cm, dt, u, new_conv_tail)."""
+    B, T, D = x.shape
+    di, H, N = cfg.d_inner, cfg.nheads_ssm, cfg.ssm_state
+
+    zxbcdt = L.dense(tape, f"{scope}.in_proj", x, p["in_proj"]["w"],
+                     param_path=f"{path}.in_proj")
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * N]
+    dt_raw = zxbcdt[..., -H:]
+
+    if conv_window is None:
+        xbc_c = L.conv1d_depthwise(tape, f"{scope}.conv", xbc, p["conv"]["w"],
+                                   param_path=f"{path}.conv.w")
+        new_tail = None
+    else:
+        win = jnp.concatenate([conv_window, xbc], axis=1)      # (B,K,C)
+        xbc_c = jnp.einsum("bkc,kc->bc", win.astype(jnp.float32),
+                           p["conv"]["w"])[:, None].astype(x.dtype)
+        new_tail = win[:, 1:]
+    xbc_c = jax.nn.silu(xbc_c.astype(jnp.float32)).astype(x.dtype)
+    xs, Bm, Cm = (xbc_c[..., :di], xbc_c[..., di:di + N],
+                  xbc_c[..., di + N:])
+
+    dt_raw = L.bias(tape, f"{scope}.dt_bias", dt_raw, p["dt_bias"]["w"],
+                    param_path=f"{path}.dt_bias.w")
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)).astype(x.dtype)
+    u = L.scale(tape, f"{scope}.a_neg", dt, p["a_neg"]["w"],
+                param_path=f"{path}.a_neg.w")
+    return z, xs, Bm, Cm, dt, u, new_tail
+
+
+def _mamba_post(tape: Tape, scope: str, path: str, p, y, xs, z, cfg: ArchConfig):
+    """Skip (D), gate, norm, out-projection. y/xs (B,T,H,P) ; z (B,T,di)."""
+    B, T = y.shape[:2]
+    di, H = cfg.d_inner, cfg.nheads_ssm
+    P = cfg.ssm_head_dim
+    # y += D * xs  (scale over trailing H after transpose)
+    xt = xs.reshape(B, T, H, P).transpose(0, 1, 3, 2)          # (B,T,P,H)
+    dterm = L.scale(tape, f"{scope}.D", xt, p["D"]["w"],
+                    param_path=f"{path}.D.w").transpose(0, 1, 3, 2)
+    y = y + dterm
+    y = y.reshape(B, T, di)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    y = cm.rmsnorm(tape, f"{scope}.ssm_norm", y, p["ssm_norm"],
+                   path=f"{path}.ssm_norm")
+    return L.dense(tape, f"{scope}.out_proj", y, p["out_proj"]["w"],
+                   param_path=f"{path}.out_proj")
+
+
+def mamba_block(tape: Tape, scope: str, path: str, p, x, cfg: ArchConfig):
+    B, T, D = x.shape
+    H, P = cfg.nheads_ssm, cfg.ssm_head_dim
+    z, xs, Bm, Cm, dt, u, _ = _mamba_pre(tape, scope, path, p, x, cfg)
+    y, _ = ssd_chunked(xs.reshape(B, T, H, P), dt, u, Bm, Cm, cfg.ssm_chunk)
+    y = y.astype(x.dtype)
+    return _mamba_post(tape, scope, path, p, y, xs, z, cfg)
+
+
+def mamba_decode(p, x, cfg: ArchConfig, cache):
+    """One-token decode. cache {'state' (B,H,N,P), 'conv' (B,K-1,C)}."""
+    B, T, D = x.shape
+    H, P = cfg.nheads_ssm, cfg.ssm_head_dim
+    tape = Tape()
+    z, xs, Bm, Cm, dt, u, new_tail = _mamba_pre(
+        tape, "m", "-", p, x, cfg, conv_window=cache["conv"])
+    y1, state = ssd_step(cache["state"], xs[:, 0].reshape(B, H, P),
+                         dt[:, 0], u[:, 0], Bm[:, 0], Cm[:, 0])
+    y = y1[:, None].astype(x.dtype)                            # (B,1,H,P)
+    out = _mamba_post(tape, "m", "-", p, y, xs, z, cfg)
+    return out, {"state": state, "conv": new_tail}
+
+
+class Mamba2LM:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+
+    def init(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, 3)
+
+        def one_block(k):
+            return {"ln": cm.norm_params(cfg.d_model),
+                    "mamba": mamba_params(k, cfg)}
+
+        return {
+            "emb": {"w": jax.random.normal(ks[0], (cfg.vocab, cfg.d_model)) * 0.02},
+            "blocks": cm.stacked_init(one_block, ks[1], cfg.n_layers),
+            "lnf": cm.norm_params(cfg.d_model),
+            "head": cm.dense_params(ks[2], cfg.d_model, cfg.vocab),
+        }
+
+    def backbone(self, params, tokens, tape: Tape):
+        cfg = self.cfg
+        x = L.embed(tape, "emb", tokens, params["emb"]["w"], param_path="emb.w")
+        x = x.astype(cfg.act_dtype)
+
+        def body(sub, p, x):
+            x = cm.maybe_shard(x)
+            h = cm.rmsnorm(sub, "ln", x, p["ln"], path="blocks.ln")
+            return x + mamba_block(sub, "mamba", "blocks.mamba", p["mamba"],
+                                   h, cfg)
+
+        x = scan_blocks(tape, "blocks", body, params["blocks"], x, cfg.n_layers)
+        return cm.rmsnorm(tape, "lnf", x, params["lnf"], path="lnf")
+
+    def logits(self, params, tokens, tape: Tape, last_only: bool = False):
+        x = self.backbone(params, tokens, tape)
+        if last_only:
+            x = x[:, -1:]
+        return L.dense(tape, "head", x, params["head"]["w"], param_path="head")
+
+    def loss(self, params, batch, tape: Tape):
+        x = self.backbone(params, batch["tokens"], tape)
+        return cm.lm_head_ce(tape, params["head"], x, batch["labels"], self.cfg)
+
+    # -- serving: O(1) state decode, no KV cache -------------------------------
+    def init_cache(self, params, B, S, dtype=jnp.float32, **extras):
+        cfg = self.cfg
+        H, P, N = cfg.nheads_ssm, cfg.ssm_head_dim, cfg.ssm_state
+        conv_dim = cfg.d_inner + 2 * N
+        one = {"state": jnp.zeros((B, H, N, P), jnp.float32),
+               "conv": jnp.zeros((B, cfg.conv_width - 1, conv_dim), dtype)}
+        n = self.cfg.n_layers
+        return {"blocks": jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n,) + a.shape), one)}
+
+    def decode_step(self, params, cache, tokens, pos):
+        cfg = self.cfg
+        x = jnp.take(params["emb"]["w"], tokens, axis=0).astype(cfg.act_dtype)
+
+        def step(carry, xs):
+            p, c = xs
+            t = Tape()
+            h = cm.rmsnorm(t, "ln", carry, p["ln"], path="-")
+            o, nc = mamba_decode(p["mamba"], h, cfg, c)
+            return carry + o, nc
+
+        x, ncache = jax.lax.scan(step, x, (params["blocks"], cache["blocks"]))
+        x = cm.rmsnorm(Tape(), "lnf", x, params["lnf"], path="lnf")
+        logits = x @ params["head"]["w"].astype(x.dtype)
+        return logits[:, 0], {"blocks": ncache}

@@ -1,0 +1,250 @@
+"""Multi-head Latent Attention (DeepSeek-V2) and the DeepseekV2 MoE LM.
+
+MLA compresses K/V into a rank-``kv_lora`` latent c plus a small shared RoPE
+key.  The decode cache stores only (c, k_rope) — (kv_lora + rope_dim) floats
+per token instead of 2·H·Dh — and decoding uses the absorbed-matmul form
+(scores against c directly), which is the arch's whole point.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..core import layers as L
+from ..core.tape import Tape, scan_blocks
+from . import common as cm
+from .moe import moe_block, moe_params
+
+QK_NOPE = 128
+V_HEAD = 128
+
+
+def mla_params(key, cfg: ArchConfig):
+    D, H = cfg.d_model, cfg.n_heads
+    r, rd = cfg.kv_lora, cfg.rope_dim
+    nope, vh = min(QK_NOPE, cfg.hd), min(V_HEAD, cfg.hd)
+    ks = jax.random.split(key, 5)
+    return {
+        "wq": cm.dense_params(ks[0], D, H * (nope + rd)),
+        "wdkv": cm.dense_params(ks[1], D, r),
+        "ckv_norm": cm.norm_params(r),
+        "wukv": cm.dense_params(ks[2], r, H * (nope + vh)),
+        "wkr": cm.dense_params(ks[3], D, rd),
+        "wo": cm.dense_params(ks[4], H * vh, D),
+    }
+
+
+def _dims(cfg: ArchConfig):
+    nope, vh = min(QK_NOPE, cfg.hd), min(V_HEAD, cfg.hd)
+    return nope, vh, cfg.rope_dim
+
+
+def mla_attention(tape: Tape, scope: str, path: str, p, x, cfg: ArchConfig,
+                  positions):
+    """Training/prefill MLA (full sequence, causal)."""
+    B, T, D = x.shape
+    H = cfg.n_heads
+    nope, vh, rd = _dims(cfg)
+
+    q = L.dense(tape, f"{scope}.wq", x, p["wq"]["w"], param_path=f"{path}.wq")
+    q = q.reshape(B, T, H, nope + rd)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+
+    c = L.dense(tape, f"{scope}.wdkv", x, p["wdkv"]["w"],
+                param_path=f"{path}.wdkv")
+    c = cm.rmsnorm(tape, f"{scope}.ckv_norm", c, p["ckv_norm"],
+                   path=f"{path}.ckv_norm")
+    kv = L.dense(tape, f"{scope}.wukv", c, p["wukv"]["w"],
+                 param_path=f"{path}.wukv").reshape(B, T, H, nope + vh)
+    k_nope, v = kv[..., :nope], kv[..., nope:]
+    k_rope = L.dense(tape, f"{scope}.wkr", x, p["wkr"]["w"],
+                     param_path=f"{path}.wkr").reshape(B, T, 1, rd)
+
+    q_rope = cm.apply_rope(q_rope, positions, cfg.rope_theta)
+    k_rope = cm.apply_rope(k_rope, positions, cfg.rope_theta)
+
+    scl = (nope + rd) ** -0.5
+    s = (jnp.einsum("bthd,bshd->bhts", q_nope.astype(jnp.float32),
+                    k_nope.astype(jnp.float32))
+         + jnp.einsum("bthd,bsxd->bhts", q_rope.astype(jnp.float32),
+                      jnp.broadcast_to(k_rope, (B, T, 1, rd)).astype(jnp.float32))) * scl
+    mask = jnp.arange(T)[None, :] <= jnp.arange(T)[:, None]
+    s = jnp.where(mask[None, None], s, -1e30)
+    a = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhts,bshd->bthd", a, v.astype(jnp.float32)).astype(x.dtype)
+    return L.dense(tape, f"{scope}.wo", o.reshape(B, T, H * vh), p["wo"]["w"],
+                   param_path=f"{path}.wo")
+
+
+def mla_decode(p, x, cfg: ArchConfig, cache, pos):
+    """Absorbed-matmul single-token decode against the (c, k_rope) cache."""
+    B, T, D = x.shape
+    H = cfg.n_heads
+    nope, vh, rd = _dims(cfg)
+    r = cfg.kv_lora
+
+    q = (x @ p["wq"]["w"]).reshape(B, T, H, nope + rd)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    pp = jnp.full((B, T), pos, jnp.int32)
+    q_rope = cm.apply_rope(q_rope, pp, cfg.rope_theta)
+
+    c1 = x @ p["wdkv"]["w"]
+    c1f = c1.astype(jnp.float32)
+    c1 = (c1f * jax.lax.rsqrt(jnp.mean(c1f * c1f, -1, keepdims=True) + 1e-6)
+          ).astype(x.dtype) * p["ckv_norm"]["w"].astype(x.dtype)
+    kr1 = (x @ p["wkr"]["w"]).reshape(B, T, 1, rd)
+    kr1 = cm.apply_rope(kr1, pp, cfg.rope_theta)
+
+    cc = jax.lax.dynamic_update_slice(cache["c"], c1.astype(cache["c"].dtype),
+                                      (0, pos, 0))
+    ckr = jax.lax.dynamic_update_slice(cache["kr"],
+                                       kr1[:, :, 0].astype(cache["kr"].dtype),
+                                       (0, pos, 0))
+    S = cc.shape[1]
+
+    wukv = p["wukv"]["w"].reshape(r, H, nope + vh)
+    w_uk, w_uv = wukv[..., :nope], wukv[..., nope:]
+    # absorb: q against latent space
+    q_c = jnp.einsum("bthd,rhd->bthr", q_nope.astype(jnp.float32),
+                     w_uk.astype(jnp.float32))
+    s = (jnp.einsum("bthr,bsr->bhts", q_c, cc.astype(jnp.float32))
+         + jnp.einsum("bthd,bsd->bhts", q_rope.astype(jnp.float32),
+                      ckr.astype(jnp.float32))) * (nope + rd) ** -0.5
+    valid = jnp.arange(S) <= pos
+    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    a = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhts,bsr->bthr", a, cc.astype(jnp.float32))
+    o = jnp.einsum("bthr,rhd->bthd", ctx, w_uv.astype(jnp.float32))
+    o = o.astype(x.dtype).reshape(B, T, H * vh)
+    out = o @ p["wo"]["w"].astype(x.dtype)
+    return out, {"c": cc, "kr": ckr}
+
+
+class DeepseekV2LM:
+    """MLA attention + (2 shared + E routed top-k) MoE FFN; leading dense FFN
+    layer(s) per the model card."""
+
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+
+    def init(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, 5)
+        shared_ff = cfg.n_shared_experts * (cfg.moe_d_ff or cfg.d_ff)
+
+        def dense_block(k):
+            k1, k2 = jax.random.split(k)
+            return {"ln1": cm.norm_params(cfg.d_model),
+                    "attn": mla_params(k1, cfg),
+                    "ln2": cm.norm_params(cfg.d_model),
+                    "mlp": cm.swiglu_params(k2, cfg.d_model,
+                                            cfg.dense_d_ff or 4 * cfg.d_model)}
+
+        def moe_blockp(k):
+            k1, k2, k3 = jax.random.split(k, 3)
+            return {"ln1": cm.norm_params(cfg.d_model),
+                    "attn": mla_params(k1, cfg),
+                    "ln2": cm.norm_params(cfg.d_model),
+                    "moe": moe_params(k2, cfg.d_model, cfg.n_experts,
+                                      cfg.moe_d_ff or cfg.d_ff),
+                    "shared": cm.swiglu_params(k3, cfg.d_model, shared_ff)}
+
+        nd = cfg.first_dense_layers
+        return {
+            "emb": {"w": jax.random.normal(ks[0], (cfg.vocab, cfg.d_model)) * 0.02},
+            "dense_blocks": cm.stacked_init(dense_block, ks[1], nd),
+            "moe_blocks": cm.stacked_init(moe_blockp, ks[2], cfg.n_layers - nd),
+            "lnf": cm.norm_params(cfg.d_model),
+            "head": cm.dense_params(ks[3], cfg.d_model, cfg.vocab),
+        }
+
+    def backbone_aux(self, params, tokens, tape: Tape):
+        cfg = self.cfg
+        x = L.embed(tape, "emb", tokens, params["emb"]["w"], param_path="emb.w")
+        x = x.astype(cfg.act_dtype)
+        positions = jnp.broadcast_to(jnp.arange(tokens.shape[1], dtype=jnp.int32),
+                                     tokens.shape)
+
+        def dense_body(sub, p, x):
+            x = cm.maybe_shard(x)
+            h = cm.rmsnorm(sub, "ln1", x, p["ln1"], path="dense_blocks.ln1")
+            x = x + mla_attention(sub, "attn", "dense_blocks.attn", p["attn"],
+                                  h, cfg, positions)
+            h = cm.rmsnorm(sub, "ln2", x, p["ln2"], path="dense_blocks.ln2")
+            return x + cm.swiglu(sub, "mlp", "dense_blocks.mlp", p["mlp"], h)
+
+        def moe_body(sub, p, carry):
+            x, aux = carry
+            x = cm.maybe_shard(x)
+            h = cm.rmsnorm(sub, "ln1", x, p["ln1"], path="moe_blocks.ln1")
+            x = x + mla_attention(sub, "attn", "moe_blocks.attn", p["attn"],
+                                  h, cfg, positions)
+            h = cm.rmsnorm(sub, "ln2", x, p["ln2"], path="moe_blocks.ln2")
+            y, aux_l = moe_block(sub, "moe", "moe_blocks.moe", p["moe"], h, cfg)
+            y = y + cm.swiglu(sub, "shared", "moe_blocks.shared", p["shared"], h)
+            return x + y, aux + aux_l
+
+        x = scan_blocks(tape, "dense_blocks", dense_body, params["dense_blocks"],
+                        x, cfg.first_dense_layers)
+        x, aux = scan_blocks(tape, "moe_blocks", moe_body, params["moe_blocks"],
+                             (x, jnp.zeros(tokens.shape[0], jnp.float32)),
+                             cfg.n_layers - cfg.first_dense_layers)
+        return cm.rmsnorm(tape, "lnf", x, params["lnf"], path="lnf"), aux
+
+    def logits_aux(self, params, tokens, tape: Tape, last_only: bool = False):
+        x, aux = self.backbone_aux(params, tokens, tape)
+        if last_only:
+            x = x[:, -1:]
+        return L.dense(tape, "head", x, params["head"]["w"],
+                       param_path="head"), aux
+
+    def loss(self, params, batch, tape: Tape):
+        x, aux = self.backbone_aux(params, batch["tokens"], tape)
+        return cm.lm_head_ce(tape, params["head"], x, batch["labels"],
+                             self.cfg) + aux
+
+    # -- serving --------------------------------------------------------------
+    def init_cache(self, params, B, S, dtype=jnp.bfloat16, **extras):
+        cfg = self.cfg
+        one = {"c": jnp.zeros((B, S, cfg.kv_lora), dtype),
+               "kr": jnp.zeros((B, S, cfg.rope_dim), dtype)}
+        nd = cfg.first_dense_layers
+        return {"dense_blocks": jax.tree.map(
+                    lambda a: jnp.broadcast_to(a, (nd,) + a.shape), one),
+                "moe_blocks": jax.tree.map(
+                    lambda a: jnp.broadcast_to(a, (cfg.n_layers - nd,) + a.shape), one)}
+
+    def decode_step(self, params, cache, tokens, pos):
+        cfg = self.cfg
+        x = jnp.take(params["emb"]["w"], tokens, axis=0).astype(cfg.act_dtype)
+
+        def rms(x, p):
+            xf = x.astype(jnp.float32)
+            return (xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + 1e-6)
+                    ).astype(x.dtype) * p["w"].astype(x.dtype)
+
+        def dense_step(carry, xs):
+            p, c = xs
+            a, nc = mla_decode(p["attn"], rms(carry, p["ln1"]), cfg, c, pos)
+            carry = carry + a
+            h = rms(carry, p["ln2"])
+            carry = carry + cm.swiglu(Tape(), "mlp", "-", p["mlp"], h)
+            return carry, nc
+
+        def moe_step(carry, xs):
+            p, c = xs
+            a, nc = mla_decode(p["attn"], rms(carry, p["ln1"]), cfg, c, pos)
+            carry = carry + a
+            h = rms(carry, p["ln2"])
+            y, _ = moe_block(Tape(), "moe", "-", p["moe"], h, cfg)
+            y = y + cm.swiglu(Tape(), "shared", "-", p["shared"], h)
+            return carry + y, nc
+
+        x, ndc = jax.lax.scan(dense_step, x,
+                              (params["dense_blocks"], cache["dense_blocks"]))
+        x, nmc = jax.lax.scan(moe_step, x,
+                              (params["moe_blocks"], cache["moe_blocks"]))
+        x = rms(x, params["lnf"])
+        logits = x @ params["head"]["w"].astype(x.dtype)
+        return logits[:, 0], {"dense_blocks": ndc, "moe_blocks": nmc}

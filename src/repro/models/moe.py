@@ -1,0 +1,187 @@
+"""Mixture-of-Experts: top-k routing with capacity-bounded scatter dispatch.
+
+Dispatch is gather/scatter-based (not the one-hot einsum, whose (B,T,E,Cap)
+tensor is quadratic-memory), so active-FLOPs in the compiled HLO match
+6·N_active·D — keeping the roofline honest.  Expert weights are stacked along
+a leading E axis and sharded over the 'model' mesh axis (expert parallelism);
+the per-example clipping engines see them through ``dense_stacked``.
+
+Router load-balance aux loss is computed PER EXAMPLE and added to the CE loss
+before clipping — so the DP guarantee covers the router gradient too (see
+DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..core import layers as L
+from ..core.tape import Tape, scan_blocks
+from . import common as cm
+
+
+def moe_params(key, d_model: int, n_experts: int, d_ff: int):
+    ks = jax.random.split(key, 4)
+    s = d_model ** -0.5
+    return {
+        "router": cm.dense_params(ks[0], d_model, n_experts, scale=s),
+        "w1": {"w": jax.random.normal(ks[1], (n_experts, d_model, d_ff)) * s},
+        "w3": {"w": jax.random.normal(ks[2], (n_experts, d_model, d_ff)) * s},
+        "w2": {"w": jax.random.normal(ks[3], (n_experts, d_ff, d_model)) * d_ff ** -0.5},
+    }
+
+
+def moe_block(tape: Tape, scope: str, path: str, p, x, cfg: ArchConfig):
+    """x (B,T,D) -> (out (B,T,D), aux_loss (B,))."""
+    B, T, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    cap = max(1, math.ceil(T * K * cfg.capacity_factor / E))
+
+    logits = L.dense(tape, f"{scope}.router", x, p["router"]["w"],
+                     param_path=f"{path}.router")
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)   # (B,T,E)
+    topv, topi = jax.lax.top_k(probs, K)                          # (B,T,K)
+    topv = topv / (topv.sum(-1, keepdims=True) + 1e-9)
+
+    # ---- position-in-expert over the T*K virtual-token axis ----
+    e_flat = topi.reshape(B, T * K)
+    oh = jax.nn.one_hot(e_flat, E, dtype=jnp.int32)               # (B,TK,E)
+    pos = jnp.cumsum(oh, axis=1) - oh                              # exclusive
+    pos = jnp.take_along_axis(pos, e_flat[..., None], -1)[..., 0]  # (B,TK)
+    valid = pos < cap
+    idx = jnp.where(valid, e_flat * cap + pos, E * cap)            # E*cap = drop
+
+    # ---- dispatch: scatter tokens into per-expert capacity buffers ----
+    x_rep = jnp.repeat(x, K, axis=1)                               # (B,TK,D)
+
+    def scatter_one(xi, ii):
+        return jnp.zeros((E * cap, D), x.dtype).at[ii].add(
+            xi, mode="drop")
+    buf = jax.vmap(scatter_one)(x_rep, idx)                        # (B,E*cap,D)
+    buf = buf.reshape(B, E, cap, D).transpose(1, 0, 2, 3)          # (E,B,cap,D)
+    buf = cm.maybe_shard_expert(buf)
+
+    # ---- expert computation (stacked over E -> expert parallel) ----
+    # w1/w3 share the dispatch buffer: record it once (halves MoE records)
+    g, u = L.dense_stacked_pair(tape, f"{scope}.w13", buf,
+                                p["w1"]["w"], p["w3"]["w"],
+                                param_path1=f"{path}.w1",
+                                param_path2=f"{path}.w3")
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    yb = L.dense_stacked(tape, f"{scope}.w2", h, p["w2"]["w"],
+                         param_path=f"{path}.w2")                  # (E,B,cap,D)
+
+    # ---- combine: gather back, weight by gates ----
+    yb = yb.transpose(1, 0, 2, 3).reshape(B, E * cap, D)
+    gathered = jnp.take_along_axis(
+        yb, jnp.minimum(idx, E * cap - 1)[..., None], axis=1)      # (B,TK,D)
+    w = (topv.reshape(B, T * K) * valid.astype(jnp.float32))
+    y = (gathered.astype(jnp.float32) * w[..., None]).reshape(B, T, K, D)
+    y = y.sum(axis=2).astype(x.dtype)
+
+    # ---- per-example load-balance aux loss (Switch-style) ----
+    f = oh.astype(jnp.float32).mean(axis=1)                        # (B,E)
+    pmean = probs.mean(axis=1)                                     # (B,E)
+    aux = E * jnp.sum(f * pmean, axis=-1) * cfg.router_aux_coef    # (B,)
+    return y, aux
+
+
+class MoeLM:
+    """OLMoE-style decoder LM: every FFN is a top-k MoE."""
+
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.acfg = cm.AttnCfg(
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
+            qkv_bias=cfg.qkv_bias, qk_norm=cfg.qk_norm,
+            rope_theta=cfg.rope_theta, window=cfg.sliding_window)
+
+    def init(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, 4)
+
+        def one_block(k):
+            k1, k2 = jax.random.split(k)
+            return {"ln1": cm.norm_params(cfg.d_model),
+                    "attn": cm.attn_params(k1, cfg.d_model, self.acfg),
+                    "ln2": cm.norm_params(cfg.d_model),
+                    "moe": moe_params(k2, cfg.d_model, cfg.n_experts,
+                                      cfg.moe_d_ff or cfg.d_ff)}
+
+        return {
+            "emb": {"w": jax.random.normal(ks[0], (cfg.vocab, cfg.d_model)) * 0.02},
+            "blocks": cm.stacked_init(one_block, ks[1], cfg.n_layers),
+            "lnf": cm.norm_params(cfg.d_model),
+            "head": cm.dense_params(ks[2], cfg.d_model, cfg.vocab),
+        }
+
+    def _block(self, sub: Tape, p, x, aux, positions):
+        x = cm.maybe_shard(x)
+        h = cm.rmsnorm(sub, "ln1", x, p["ln1"], path="blocks.ln1")
+        a, _ = cm.attention(sub, "attn", "blocks.attn", p["attn"], h, self.acfg,
+                            positions=positions)
+        x = x + a
+        h = cm.rmsnorm(sub, "ln2", x, p["ln2"], path="blocks.ln2")
+        y, aux_l = moe_block(sub, "moe", "blocks.moe", p["moe"], h, self.cfg)
+        return x + y, aux + aux_l
+
+    def backbone_aux(self, params, tokens, tape: Tape):
+        cfg = self.cfg
+        x = L.embed(tape, "emb", tokens, params["emb"]["w"], param_path="emb.w")
+        x = x.astype(cfg.act_dtype)
+        positions = jnp.broadcast_to(jnp.arange(tokens.shape[1], dtype=jnp.int32),
+                                     tokens.shape)
+
+        def body(sub, p, carry):
+            x, aux = carry
+            return self._block(sub, p, x, aux, positions)
+
+        x, aux = scan_blocks(tape, "blocks", body, params["blocks"],
+                             (x, jnp.zeros(tokens.shape[0], jnp.float32)),
+                             cfg.n_layers)
+        return cm.rmsnorm(tape, "lnf", x, params["lnf"], path="lnf"), aux
+
+    def logits_aux(self, params, tokens, tape: Tape, last_only: bool = False):
+        x, aux = self.backbone_aux(params, tokens, tape)
+        if last_only:
+            x = x[:, -1:]
+        return L.dense(tape, "head", x, params["head"]["w"],
+                       param_path="head"), aux
+
+    def loss(self, params, batch, tape: Tape):
+        x, aux = self.backbone_aux(params, batch["tokens"], tape)
+        return cm.lm_head_ce(tape, params["head"], x, batch["labels"],
+                             self.cfg) + aux
+
+    # -- serving -------------------------------------------------------------
+    def init_cache(self, params, B, S, dtype=jnp.bfloat16, **extras):
+        c = cm.init_attn_cache(B, S, self.acfg, dtype)
+        n = self.cfg.n_layers
+        return {"blocks": jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n,) + a.shape), c)}
+
+    def decode_step(self, params, cache, tokens, pos):
+        cfg = self.cfg
+        tape = Tape()
+        x = L.embed(tape, "emb", tokens, params["emb"]["w"], param_path="emb.w")
+        x = x.astype(cfg.act_dtype)
+
+        def step(carry, xs):
+            p, c = xs
+            t = Tape()
+            h = cm.rmsnorm(t, "ln1", carry, p["ln1"], path="-")
+            a, nc = cm.attention(t, "attn", "-", p["attn"], h, self.acfg,
+                                 cache=c, pos=pos)
+            carry = carry + a
+            t2 = Tape()
+            h = cm.rmsnorm(t2, "ln2", carry, p["ln2"], path="-")
+            y, _ = moe_block(t2, "moe", "-", p["moe"], h, self.cfg)
+            return carry + y, nc
+
+        x, new_blocks = jax.lax.scan(step, x, (params["blocks"], cache["blocks"]))
+        x = cm.rmsnorm(Tape(), "lnf", x, params["lnf"], path="lnf")
+        logits = L.dense(Tape(), "head", x, params["head"]["w"], param_path="head")
+        return logits[:, 0], {"blocks": new_blocks}

@@ -1,0 +1,55 @@
+"""Architecture registry: family -> model class, name -> ArchConfig."""
+from __future__ import annotations
+
+import importlib
+
+from ..configs.base import ArchConfig
+from .mamba2 import Mamba2LM
+from .mla import DeepseekV2LM
+from .moe import MoeLM
+from .transformer import DenseLM
+from .vit import ViT
+from .vlm import VisionLM
+from .whisper import WhisperLM
+from .zamba2 import Zamba2LM
+
+ARCH_IDS = [
+    "olmoe-1b-7b", "llama-3.2-vision-90b", "deepseek-67b",
+    "deepseek-v2-lite-16b", "qwen2-0.5b", "zamba2-1.2b", "qwen3-1.7b",
+    "mamba2-1.3b", "whisper-base", "llama3.2-3b", "vit-base",
+]
+
+
+def _family_cls(cfg: ArchConfig):
+    if cfg.family == "dense":
+        return DenseLM
+    if cfg.family == "moe":
+        return DeepseekV2LM if cfg.kv_lora else MoeLM
+    if cfg.family == "ssm":
+        return Mamba2LM
+    if cfg.family == "hybrid":
+        return Zamba2LM
+    if cfg.family == "vlm":
+        return VisionLM
+    if cfg.family == "audio":
+        return WhisperLM
+    if cfg.family == "vit":
+        return ViT
+    raise ValueError(cfg.family)
+
+
+def get_config(name: str) -> ArchConfig:
+    mod = importlib.import_module(
+        f"repro.configs.{name.replace('-', '_').replace('.', '_')}")
+    return mod.CONFIG
+
+
+def build(cfg: ArchConfig):
+    return _family_cls(cfg)(cfg)
+
+
+def build_by_name(name: str, smoke: bool = False):
+    cfg = get_config(name)
+    if smoke:
+        cfg = cfg.reduced()
+    return build(cfg), cfg

@@ -1,0 +1,98 @@
+"""Dense decoder-only LM: llama-style (deepseek-67b, llama3.2-3b), qwen2
+(QKV bias), qwen3 (qk-norm), with optional sliding-window attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..core import layers as L
+from ..core.tape import Tape, scan_blocks
+from . import common as cm
+
+
+class DenseLM:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.acfg = cm.AttnCfg(
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
+            qkv_bias=cfg.qkv_bias, qk_norm=cfg.qk_norm,
+            rope_theta=cfg.rope_theta, window=cfg.sliding_window)
+
+    # -- params ---------------------------------------------------------------
+    def init(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, 4)
+
+        def one_block(k):
+            k1, k2 = jax.random.split(k)
+            return {"ln1": cm.norm_params(cfg.d_model),
+                    "attn": cm.attn_params(k1, cfg.d_model, self.acfg),
+                    "ln2": cm.norm_params(cfg.d_model),
+                    "mlp": cm.swiglu_params(k2, cfg.d_model, cfg.d_ff)}
+
+        return {
+            "emb": {"w": jax.random.normal(ks[0], (cfg.vocab, cfg.d_model)) * 0.02},
+            "blocks": cm.stacked_init(one_block, ks[1], cfg.n_layers),
+            "lnf": cm.norm_params(cfg.d_model),
+            "head": cm.dense_params(ks[2], cfg.d_model, cfg.vocab),
+        }
+
+    # -- forward --------------------------------------------------------------
+    def _block(self, sub: Tape, p, x, positions):
+        x = cm.maybe_shard(x)
+        h = cm.rmsnorm(sub, "ln1", x, p["ln1"], path="blocks.ln1")
+        a, _ = cm.attention(sub, "attn", "blocks.attn", p["attn"], h, self.acfg,
+                            positions=positions)
+        x = x + a
+        h = cm.rmsnorm(sub, "ln2", x, p["ln2"], path="blocks.ln2")
+        return x + cm.swiglu(sub, "mlp", "blocks.mlp", p["mlp"], h)
+
+    def backbone(self, params, tokens, tape: Tape):
+        cfg = self.cfg
+        x = L.embed(tape, "emb", tokens, params["emb"]["w"], param_path="emb.w")
+        x = x.astype(cfg.act_dtype)
+        positions = jnp.broadcast_to(jnp.arange(tokens.shape[1], dtype=jnp.int32),
+                                     tokens.shape)
+        body = lambda sub, p, c: self._block(sub, p, c, positions)
+        x = scan_blocks(tape, "blocks", body, params["blocks"], x, cfg.n_layers)
+        return cm.rmsnorm(tape, "lnf", x, params["lnf"], path="lnf")
+
+    def logits(self, params, tokens, tape: Tape, last_only: bool = False):
+        x = self.backbone(params, tokens, tape)
+        if last_only:
+            x = x[:, -1:]
+        return L.dense(tape, "head", x, params["head"]["w"], param_path="head")
+
+    def loss(self, params, batch, tape: Tape):
+        x = self.backbone(params, batch["tokens"], tape)
+        return cm.lm_head_ce(tape, params["head"], x, batch["labels"], self.cfg)
+
+    # -- serving --------------------------------------------------------------
+    def init_cache(self, params, B, S, dtype=jnp.bfloat16, **extras):
+        c = cm.init_attn_cache(B, S, self.acfg, dtype)
+        L_ = self.cfg.n_layers
+        return {"blocks": jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (L_,) + a.shape), c)}
+
+    def decode_step(self, params, cache, tokens, pos):
+        """One-token decode: tokens (B,1) -> (logits (B,V), new cache)."""
+        cfg = self.cfg
+        tape = Tape()
+        x = L.embed(tape, "emb", tokens, params["emb"]["w"], param_path="emb.w")
+        x = x.astype(cfg.act_dtype)
+
+        def step(carry, xs):
+            p, c = xs
+            h = cm.rmsnorm(tape.subtape({}), "ln1", carry, p["ln1"], path="-")
+            a, nc = cm.attention(tape.subtape({}), "attn", "-", p["attn"], h,
+                                 self.acfg, cache=c, pos=pos)
+            carry = carry + a
+            h = cm.rmsnorm(tape.subtape({}), "ln2", carry, p["ln2"], path="-")
+            carry = carry + cm.swiglu(tape.subtape({}), "mlp", "-", p["mlp"], h)
+            return carry, nc
+
+        x, new_blocks = jax.lax.scan(step, x, (params["blocks"], cache["blocks"]))
+        x = cm.rmsnorm(tape, "lnf", x, params["lnf"], path="lnf")
+        logits = L.dense(tape, "head", x, params["head"]["w"], param_path="head")
+        return logits[:, 0], {"blocks": new_blocks}

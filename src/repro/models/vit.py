@@ -1,0 +1,80 @@
+"""ViT classifier — the paper's own benchmark model (ViT-Base/16 @ 224,
+CIFAR-100 head).  Patch embedding is a dense on flattened patches (exactly
+equivalent to the conv patchifier), so nothing is stubbed here."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..core import layers as L
+from ..core.tape import Tape, scan_blocks
+from . import common as cm
+
+
+class ViT:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.acfg = cm.AttnCfg(
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
+            qkv_bias=True, use_rope=False, causal=False)
+        self.n_patches = (cfg.image_size // cfg.patch) ** 2
+
+    def init(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, 5)
+        pd = cfg.patch * cfg.patch * 3
+
+        def one_block(k):
+            k1, k2 = jax.random.split(k)
+            return {"ln1": cm.layernorm_params(cfg.d_model),
+                    "attn": cm.attn_params(k1, cfg.d_model, self.acfg),
+                    "ln2": cm.layernorm_params(cfg.d_model),
+                    "mlp": cm.gelu_mlp_params(k2, cfg.d_model, cfg.d_ff)}
+
+        return {
+            "patch": cm.dense_params(ks[0], pd, cfg.d_model, use_bias=True),
+            "cls": {"w": jnp.zeros((1, cfg.d_model), jnp.float32)},
+            "pos": {"w": jax.random.normal(
+                ks[1], (self.n_patches + 1, cfg.d_model)) * 0.02},
+            "blocks": cm.stacked_init(one_block, ks[2], cfg.n_layers),
+            "lnf": cm.layernorm_params(cfg.d_model),
+            "head": cm.dense_params(ks[3], cfg.d_model, cfg.n_classes,
+                                    use_bias=True),
+        }
+
+    def _patchify(self, images):
+        cfg = self.cfg
+        B, S, _, C = images.shape
+        p = cfg.patch
+        n = S // p
+        x = images.reshape(B, n, p, n, p, C).transpose(0, 1, 3, 2, 4, 5)
+        return x.reshape(B, n * n, p * p * C)
+
+    def logits(self, params, images, tape: Tape):
+        cfg = self.cfg
+        x = self._patchify(images.astype(cfg.act_dtype))
+        x = L.dense(tape, "patch", x, params["patch"]["w"], params["patch"]["b"],
+                    param_path="patch")
+        B = x.shape[0]
+        cls = L.bias(tape, "cls", jnp.zeros((B, 1, cfg.d_model), x.dtype),
+                     params["cls"]["w"], param_path="cls.w")
+        x = jnp.concatenate([cls, x], axis=1)
+        x = L.bias(tape, "pos", x, params["pos"]["w"], param_path="pos.w")
+
+        def body(sub, p, x):
+            h = cm.layernorm(sub, "ln1", x, p["ln1"], path="blocks.ln1")
+            a, _ = cm.attention(sub, "attn", "blocks.attn", p["attn"], h,
+                                self.acfg)
+            x = x + a
+            h = cm.layernorm(sub, "ln2", x, p["ln2"], path="blocks.ln2")
+            return x + cm.gelu_mlp(sub, "mlp", "blocks.mlp", p["mlp"], h)
+
+        x = scan_blocks(tape, "blocks", body, params["blocks"], x, cfg.n_layers)
+        x = cm.layernorm(tape, "lnf", x, params["lnf"], path="lnf")
+        return L.dense(tape, "head", x[:, 0], params["head"]["w"],
+                       params["head"]["b"], param_path="head")
+
+    def loss(self, params, batch, tape: Tape):
+        return cm.per_example_ce_single(
+            self.logits(params, batch["image"], tape), batch["label"])

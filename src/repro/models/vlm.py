@@ -1,0 +1,169 @@
+"""Llama-3.2-Vision-style VLM backbone: a dense decoder with gated
+cross-attention layers every ``cross_every`` layers.
+
+The ViT/SigLIP vision encoder + adapter is a STUB per the assignment:
+``batch["frontend"]`` carries precomputed patch embeddings
+(B, n_image_tokens, frontend_dim); a trained projector maps them to d_model.
+Cross-attn gates are plain learnable scalars initialised to 0 (the reference
+uses tanh(gate), tanh(0)=0 — same training start, simpler DP primitive).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..core import layers as L
+from ..core.tape import Tape, scan_blocks
+from . import common as cm
+
+
+class VisionLM:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.acfg = cm.AttnCfg(
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
+            rope_theta=cfg.rope_theta)
+        self.xacfg = cm.AttnCfg(
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
+            use_rope=False, causal=False)
+        self.n_super = cfg.n_layers // cfg.cross_every
+        self.self_per = cfg.cross_every - 1
+
+    def init(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, 6)
+
+        def self_block(k):
+            k1, k2 = jax.random.split(k)
+            return {"ln1": cm.norm_params(cfg.d_model),
+                    "attn": cm.attn_params(k1, cfg.d_model, self.acfg),
+                    "ln2": cm.norm_params(cfg.d_model),
+                    "mlp": cm.swiglu_params(k2, cfg.d_model, cfg.d_ff)}
+
+        def cross_block(k):
+            k1, k2 = jax.random.split(k)
+            return {"ln1": cm.norm_params(cfg.d_model),
+                    "xattn": cm.attn_params(k1, cfg.d_model, self.xacfg),
+                    "gate": {"w": jnp.zeros((), jnp.float32)},
+                    "ln2": cm.norm_params(cfg.d_model),
+                    "mlp": cm.swiglu_params(k2, cfg.d_model, cfg.d_ff)}
+
+        def super_block(k):
+            k1, k2 = jax.random.split(k)
+            return {"selfb": cm.stacked_init(self_block, k1, self.self_per),
+                    "crossb": cross_block(k2)}
+
+        return {
+            "emb": {"w": jax.random.normal(ks[0], (cfg.vocab, cfg.d_model)) * 0.02},
+            "proj": cm.dense_params(ks[1], cfg.frontend_dim, cfg.d_model),
+            "supers": cm.stacked_init(super_block, ks[2], self.n_super),
+            "lnf": cm.norm_params(cfg.d_model),
+            "head": cm.dense_params(ks[3], cfg.d_model, cfg.vocab),
+        }
+
+    def _self_body(self, positions):
+        def body(sub, p, x):
+            x = cm.maybe_shard(x)
+            h = cm.rmsnorm(sub, "ln1", x, p["ln1"], path="supers.selfb.ln1")
+            a, _ = cm.attention(sub, "attn", "supers.selfb.attn", p["attn"], h,
+                                self.acfg, positions=positions)
+            x = x + a
+            h = cm.rmsnorm(sub, "ln2", x, p["ln2"], path="supers.selfb.ln2")
+            return x + cm.swiglu(sub, "mlp", "supers.selfb.mlp", p["mlp"], h)
+        return body
+
+    def _cross_block(self, sub: Tape, p, x, img):
+        h = cm.rmsnorm(sub, "xln1", x, p["ln1"], path="supers.crossb.ln1")
+        a, _ = cm.attention(sub, "xattn", "supers.crossb.xattn", p["xattn"], h,
+                            self.xacfg, kv_x=img)
+        a = L.scale(sub, "gate", a, p["gate"]["w"],
+                    param_path="supers.crossb.gate.w")
+        x = x + a
+        h = cm.rmsnorm(sub, "xln2", x, p["ln2"], path="supers.crossb.ln2")
+        return x + cm.swiglu(sub, "xmlp", "supers.crossb.mlp", p["mlp"], h)
+
+    def backbone(self, params, tokens, frontend, tape: Tape):
+        cfg = self.cfg
+        img = L.dense(tape, "proj", frontend.astype(cfg.act_dtype),
+                      params["proj"]["w"], param_path="proj")
+        x = L.embed(tape, "emb", tokens, params["emb"]["w"], param_path="emb.w")
+        x = x.astype(cfg.act_dtype)
+        positions = jnp.broadcast_to(jnp.arange(tokens.shape[1], dtype=jnp.int32),
+                                     tokens.shape)
+        self_body = self._self_body(positions)
+
+        def super_body(sub, p, x):
+            x = scan_blocks(sub, "selfb", self_body, p["selfb"], x, self.self_per)
+            return self._cross_block(sub, p["crossb"], x, img)
+
+        x = scan_blocks(tape, "supers", super_body, params["supers"], x,
+                        self.n_super)
+        return cm.rmsnorm(tape, "lnf", x, params["lnf"], path="lnf")
+
+    def logits(self, params, tokens, frontend, tape: Tape,
+               last_only: bool = False):
+        x = self.backbone(params, tokens, frontend, tape)
+        if last_only:
+            x = x[:, -1:]
+        return L.dense(tape, "head", x, params["head"]["w"], param_path="head")
+
+    def loss(self, params, batch, tape: Tape):
+        x = self.backbone(params, batch["tokens"], batch["frontend"], tape)
+        return cm.lm_head_ce(tape, params["head"], x, batch["labels"], self.cfg)
+
+    # -- serving ----------------------------------------------------------------
+    def init_cache(self, params, B, S, dtype=jnp.bfloat16, *, frontend=None,
+                   **extras):
+        cfg = self.cfg
+        if frontend is None:
+            frontend = jnp.zeros((B, cfg.n_image_tokens, cfg.frontend_dim),
+                                 cfg.act_dtype)
+        img = (frontend.astype(cfg.act_dtype) @
+               params["proj"]["w"].astype(cfg.act_dtype))
+
+        def one_cross(p):
+            k, v = cm.cross_kv(Tape(), "x", "-", p["crossb"]["xattn"], img,
+                               self.xacfg)
+            return {"xk": k.astype(dtype), "xv": v.astype(dtype)}
+
+        cross = jax.vmap(one_cross)(params["supers"])
+        sc = cm.init_attn_cache(B, S, self.acfg, dtype)
+        return {"self": jax.tree.map(
+                    lambda a: jnp.broadcast_to(
+                        a, (self.n_super, self.self_per) + a.shape), sc),
+                "cross": cross}
+
+    def decode_step(self, params, cache, tokens, pos):
+        cfg = self.cfg
+        x = jnp.take(params["emb"]["w"], tokens, axis=0).astype(cfg.act_dtype)
+
+        def self_step(carry, xs):
+            p, c = xs
+            t = Tape()
+            h = cm.rmsnorm(t, "ln1", carry, p["ln1"], path="-")
+            a, nc = cm.attention(t, "attn", "-", p["attn"], h, self.acfg,
+                                 cache=c, pos=pos)
+            carry = carry + a
+            h = cm.rmsnorm(Tape(), "ln2", carry, p["ln2"], path="-")
+            carry = carry + cm.swiglu(Tape(), "mlp", "-", p["mlp"], h)
+            return carry, nc
+
+        def super_step(carry, xs):
+            p, sc, cc = xs
+            carry, nsc = jax.lax.scan(self_step, carry, (p["selfb"], sc))
+            t = Tape()
+            pc = p["crossb"]
+            h = cm.rmsnorm(t, "xln1", carry, pc["ln1"], path="-")
+            a, _ = cm.attention(t, "xattn", "-", pc["xattn"], h, self.xacfg,
+                                cache=cc)
+            carry = carry + a * pc["gate"]["w"].astype(carry.dtype)
+            h = cm.rmsnorm(Tape(), "xln2", carry, pc["ln2"], path="-")
+            carry = carry + cm.swiglu(Tape(), "xmlp", "-", pc["mlp"], h)
+            return carry, nsc
+
+        x, nself = jax.lax.scan(super_step, x,
+                                (params["supers"], cache["self"], cache["cross"]))
+        x = cm.rmsnorm(Tape(), "lnf", x, params["lnf"], path="-")
+        logits = x @ params["head"]["w"].astype(x.dtype)
+        return logits[:, 0], {"self": nself, "cross": cache["cross"]}

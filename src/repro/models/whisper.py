@@ -1,0 +1,172 @@
+"""Whisper-style encoder-decoder transformer backbone.
+
+Per the assignment, the mel-spectrogram + conv feature extractor is a STUB:
+``batch["frontend"]`` carries precomputed frame embeddings (B, frames, d).
+Positions are sinusoidal for both encoder and decoder (the original uses a
+learned decoder table capped at 448 positions — sinusoids let the assigned
+decode_32k shape run; noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..core import layers as L
+from ..core.tape import Tape, scan_blocks
+from . import common as cm
+
+
+def sinusoid(positions, dim):
+    """positions (...,T) -> (...,T,dim) float32 sin/cos table."""
+    half = dim // 2
+    freq = jnp.exp(-jnp.log(10000.0) * jnp.arange(half) / max(half - 1, 1))
+    ang = positions[..., None].astype(jnp.float32) * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+class WhisperLM:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.acfg = cm.AttnCfg(
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
+            qkv_bias=True, use_rope=False)
+        self.enc_acfg = cm.AttnCfg(
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
+            qkv_bias=True, use_rope=False, causal=False)
+
+    def init(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, 6)
+
+        def enc_block(k):
+            k1, k2 = jax.random.split(k)
+            return {"ln1": cm.layernorm_params(cfg.d_model),
+                    "attn": cm.attn_params(k1, cfg.d_model, self.enc_acfg),
+                    "ln2": cm.layernorm_params(cfg.d_model),
+                    "mlp": cm.gelu_mlp_params(k2, cfg.d_model, cfg.d_ff)}
+
+        def dec_block(k):
+            k1, k2, k3 = jax.random.split(k, 3)
+            return {"ln1": cm.layernorm_params(cfg.d_model),
+                    "attn": cm.attn_params(k1, cfg.d_model, self.acfg),
+                    "lnx": cm.layernorm_params(cfg.d_model),
+                    "xattn": cm.attn_params(k2, cfg.d_model, self.acfg),
+                    "ln2": cm.layernorm_params(cfg.d_model),
+                    "mlp": cm.gelu_mlp_params(k3, cfg.d_model, cfg.d_ff)}
+
+        n_enc = cfg.n_encoder_layers or cfg.n_layers
+        return {
+            "emb": {"w": jax.random.normal(ks[0], (cfg.vocab, cfg.d_model)) * 0.02},
+            "enc_blocks": cm.stacked_init(enc_block, ks[1], n_enc),
+            "enc_lnf": cm.layernorm_params(cfg.d_model),
+            "dec_blocks": cm.stacked_init(dec_block, ks[2], cfg.n_layers),
+            "dec_lnf": cm.layernorm_params(cfg.d_model),
+            "head": cm.dense_params(ks[3], cfg.d_model, cfg.vocab),
+        }
+
+    # -- encoder ----------------------------------------------------------------
+    def encode(self, params, frontend, tape: Tape):
+        cfg = self.cfg
+        x = frontend.astype(cfg.act_dtype)
+        pos = jnp.arange(x.shape[1], dtype=jnp.int32)
+        x = x + sinusoid(pos, cfg.d_model)[None].astype(x.dtype)
+
+        def body(sub, p, x):
+            h = cm.layernorm(sub, "ln1", x, p["ln1"], path="enc_blocks.ln1")
+            a, _ = cm.attention(sub, "attn", "enc_blocks.attn", p["attn"], h,
+                                self.enc_acfg)
+            x = x + a
+            h = cm.layernorm(sub, "ln2", x, p["ln2"], path="enc_blocks.ln2")
+            return x + cm.gelu_mlp(sub, "mlp", "enc_blocks.mlp", p["mlp"], h)
+
+        n_enc = cfg.n_encoder_layers or cfg.n_layers
+        x = scan_blocks(tape, "enc_blocks", body, params["enc_blocks"], x, n_enc)
+        return cm.layernorm(tape, "enc_lnf", x, params["enc_lnf"],
+                            path="enc_lnf")
+
+    # -- decoder ----------------------------------------------------------------
+    def backbone(self, params, tokens, frontend, tape: Tape):
+        cfg = self.cfg
+        enc = self.encode(params, frontend, tape)
+        x = L.embed(tape, "emb", tokens, params["emb"]["w"], param_path="emb.w")
+        x = x.astype(cfg.act_dtype)
+        pos = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+        x = x + sinusoid(pos, cfg.d_model)[None].astype(x.dtype)
+
+        def body(sub, p, x):
+            x = cm.maybe_shard(x)
+            h = cm.layernorm(sub, "ln1", x, p["ln1"], path="dec_blocks.ln1")
+            a, _ = cm.attention(sub, "attn", "dec_blocks.attn", p["attn"], h,
+                                self.acfg)
+            x = x + a
+            h = cm.layernorm(sub, "lnx", x, p["lnx"], path="dec_blocks.lnx")
+            a, _ = cm.attention(sub, "xattn", "dec_blocks.xattn", p["xattn"],
+                                h, self.acfg, kv_x=enc)
+            x = x + a
+            h = cm.layernorm(sub, "ln2", x, p["ln2"], path="dec_blocks.ln2")
+            return x + cm.gelu_mlp(sub, "mlp", "dec_blocks.mlp", p["mlp"], h)
+
+        x = scan_blocks(tape, "dec_blocks", body, params["dec_blocks"], x,
+                        cfg.n_layers)
+        return cm.layernorm(tape, "dec_lnf", x, params["dec_lnf"],
+                            path="dec_lnf")
+
+    def logits(self, params, tokens, frontend, tape: Tape,
+               last_only: bool = False):
+        x = self.backbone(params, tokens, frontend, tape)
+        if last_only:
+            x = x[:, -1:]
+        return L.dense(tape, "head", x, params["head"]["w"], param_path="head")
+
+    def loss(self, params, batch, tape: Tape):
+        x = self.backbone(params, batch["tokens"], batch["frontend"], tape)
+        return cm.lm_head_ce(tape, params["head"], x, batch["labels"], self.cfg)
+
+    # -- serving ------------------------------------------------------------------
+    def init_cache(self, params, B, S, dtype=jnp.bfloat16, *, frontend=None,
+                   **extras):
+        cfg = self.cfg
+        if frontend is None:
+            frontend = jnp.zeros((B, cfg.n_audio_frames, cfg.d_model),
+                                 cfg.act_dtype)
+        enc = self.encode(params, frontend, Tape())
+
+        def one_cross(p):
+            k, v = cm.cross_kv(Tape(), "xattn", "-", p["xattn"], enc, self.acfg)
+            return {"xk": k.astype(dtype), "xv": v.astype(dtype)}
+
+        cross = jax.vmap(one_cross)(params["dec_blocks"])
+        sc = cm.init_attn_cache(B, S, self.acfg, dtype)
+        return {"self": jax.tree.map(
+                    lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape), sc),
+                "cross": cross}
+
+    def decode_step(self, params, cache, tokens, pos):
+        cfg = self.cfg
+        x = jnp.take(params["emb"]["w"], tokens, axis=0).astype(cfg.act_dtype)
+        x = x + sinusoid(jnp.full((1,), pos, jnp.int32),
+                         cfg.d_model)[None].astype(x.dtype)
+
+        def step(carry, xs):
+            p, sc, cc = xs
+            t = Tape()
+            h = cm.layernorm(t, "ln1", carry, p["ln1"], path="-")
+            a, nsc = cm.attention(t, "attn", "-", p["attn"], h, self.acfg,
+                                  cache=sc, pos=pos)
+            carry = carry + a
+            t2 = Tape()
+            h = cm.layernorm(t2, "lnx", carry, p["lnx"], path="-")
+            a, _ = cm.attention(t2, "xattn", "-", p["xattn"], h, self.acfg,
+                                cache=cc)
+            carry = carry + a
+            t3 = Tape()
+            h = cm.layernorm(t3, "ln2", carry, p["ln2"], path="-")
+            carry = carry + cm.gelu_mlp(t3, "mlp", "-", p["mlp"], h)
+            return carry, nsc
+
+        x, nself = jax.lax.scan(step, x, (params["dec_blocks"], cache["self"],
+                                          cache["cross"]))
+        x = cm.layernorm(Tape(), "dec_lnf", x, params["dec_lnf"], path="-")
+        logits = x @ params["head"]["w"].astype(x.dtype)
+        return logits[:, 0], {"self": nself, "cross": cache["cross"]}

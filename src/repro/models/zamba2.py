@@ -1,0 +1,154 @@
+"""Zamba2-style hybrid: Mamba2 backbone + a SHARED attention block applied
+once every ``attn_every`` SSM layers.
+
+The shared block's parameters are re-used at every application — its records
+are registered under the ``shared/`` scope so the clipping engines fold the
+use axis into the token axis and compute exact (cross-use) per-example norms.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..core import layers as L
+from ..core.tape import Tape, scan_blocks
+from . import common as cm
+from .mamba2 import mamba_block, mamba_decode, mamba_params
+
+
+class Zamba2LM:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.acfg = cm.AttnCfg(
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
+            rope_theta=cfg.rope_theta)
+        self.n_super = cfg.n_layers // cfg.attn_every
+        self.tail = cfg.n_layers - self.n_super * cfg.attn_every
+
+    def init(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, 6)
+
+        def mblock(k):
+            return {"ln": cm.norm_params(cfg.d_model),
+                    "mamba": mamba_params(k, cfg)}
+
+        def inner(k):
+            return cm.stacked_init(mblock, k, cfg.attn_every)
+
+        k1, k2 = jax.random.split(ks[1])
+        params = {
+            "emb": {"w": jax.random.normal(ks[0], (cfg.vocab, cfg.d_model)) * 0.02},
+            "shared": {"ln1": cm.norm_params(cfg.d_model),
+                       "attn": cm.attn_params(k1, cfg.d_model, self.acfg),
+                       "ln2": cm.norm_params(cfg.d_model),
+                       "mlp": cm.swiglu_params(k2, cfg.d_model, cfg.d_ff)},
+            "supers": {"inner": cm.stacked_init(inner, ks[2], self.n_super)},
+            "lnf": cm.norm_params(cfg.d_model),
+            "head": cm.dense_params(ks[3], cfg.d_model, cfg.vocab),
+        }
+        if self.tail:
+            params["tailb"] = cm.stacked_init(mblock, ks[4], self.tail)
+        return params
+
+    # -- blocks ----------------------------------------------------------------
+    def _shared_block(self, sub: Tape, sp, x, positions):
+        h = cm.rmsnorm(sub, "shared/ln1", x, sp["ln1"], path="shared.ln1")
+        a, _ = cm.attention(sub, "shared/attn", "shared.attn", sp["attn"], h,
+                            self.acfg, positions=positions)
+        x = x + a
+        h = cm.rmsnorm(sub, "shared/ln2", x, sp["ln2"], path="shared.ln2")
+        return x + cm.swiglu(sub, "shared/mlp", "shared.mlp", sp["mlp"], h)
+
+    def _mamba_body(self, path):
+        def body(sub, p, x):
+            x = cm.maybe_shard(x)
+            h = cm.rmsnorm(sub, "ln", x, p["ln"], path=f"{path}.ln")
+            return x + mamba_block(sub, "mamba", f"{path}.mamba", p["mamba"],
+                                   h, self.cfg)
+        return body
+
+    def backbone(self, params, tokens, tape: Tape):
+        cfg = self.cfg
+        x = L.embed(tape, "emb", tokens, params["emb"]["w"], param_path="emb.w")
+        x = x.astype(cfg.act_dtype)
+        positions = jnp.broadcast_to(jnp.arange(tokens.shape[1], dtype=jnp.int32),
+                                     tokens.shape)
+        sp = params["shared"]
+
+        def super_body(sub, p, x):
+            x = self._shared_block(sub, sp, x, positions)
+            return scan_blocks(sub, "inner", self._mamba_body("supers.inner"),
+                               p["inner"], x, cfg.attn_every)
+
+        x = scan_blocks(tape, "supers", super_body, params["supers"], x,
+                        self.n_super)
+        if self.tail:
+            x = scan_blocks(tape, "tailb", self._mamba_body("tailb"),
+                            params["tailb"], x, self.tail)
+        return cm.rmsnorm(tape, "lnf", x, params["lnf"], path="lnf")
+
+    def logits(self, params, tokens, tape: Tape, last_only: bool = False):
+        x = self.backbone(params, tokens, tape)
+        if last_only:
+            x = x[:, -1:]
+        return L.dense(tape, "head", x, params["head"]["w"], param_path="head")
+
+    def loss(self, params, batch, tape: Tape):
+        x = self.backbone(params, batch["tokens"], tape)
+        return cm.lm_head_ce(tape, params["head"], x, batch["labels"], self.cfg)
+
+    # -- serving ----------------------------------------------------------------
+    def init_cache(self, params, B, S, dtype=jnp.bfloat16, **extras):
+        cfg = self.cfg
+        H, P, N = cfg.nheads_ssm, cfg.ssm_head_dim, cfg.ssm_state
+        conv_dim = cfg.d_inner + 2 * N
+        mc = {"state": jnp.zeros((B, H, N, P), jnp.float32),
+              "conv": jnp.zeros((B, cfg.conv_width - 1, conv_dim), dtype)}
+        ac = cm.init_attn_cache(B, S, self.acfg, dtype)
+        cache = {
+            "attn": jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (self.n_super,) + a.shape), ac),
+            "supers": jax.tree.map(
+                lambda a: jnp.broadcast_to(
+                    a, (self.n_super, cfg.attn_every) + a.shape), mc),
+        }
+        if self.tail:
+            cache["tailb"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (self.tail,) + a.shape), mc)
+        return cache
+
+    def decode_step(self, params, cache, tokens, pos):
+        cfg = self.cfg
+        x = jnp.take(params["emb"]["w"], tokens, axis=0).astype(cfg.act_dtype)
+        sp = params["shared"]
+        t = Tape()
+
+        def mamba_step(carry, xs):
+            p, c = xs
+            h = cm.rmsnorm(Tape(), "ln", carry, p["ln"], path="-")
+            o, nc = mamba_decode(p["mamba"], h, cfg, c)
+            return carry + o, nc
+
+        def super_step(carry, xs):
+            p, ac, mcs = xs
+            h = cm.rmsnorm(Tape(), "ln1", carry, sp["ln1"], path="-")
+            a, nac = cm.attention(Tape(), "attn", "-", sp["attn"], h, self.acfg,
+                                  cache=ac, pos=pos)
+            carry = carry + a
+            h = cm.rmsnorm(Tape(), "ln2", carry, sp["ln2"], path="-")
+            carry = carry + cm.swiglu(Tape(), "mlp", "-", sp["mlp"], h)
+            carry, nmc = jax.lax.scan(mamba_step, carry, (p["inner"], mcs))
+            return carry, (nac, nmc)
+
+        x, (nattn, nsup) = jax.lax.scan(
+            super_step, x, (params["supers"], cache["attn"], cache["supers"]))
+        new_cache = {"attn": nattn, "supers": nsup}
+        if self.tail:
+            x, ntail = jax.lax.scan(mamba_step, x,
+                                    (params["tailb"], cache["tailb"]))
+            new_cache["tailb"] = ntail
+        x = cm.rmsnorm(t, "lnf", x, params["lnf"], path="lnf")
+        logits = x @ params["head"]["w"].astype(x.dtype)
+        return logits[:, 0], new_cache

@@ -1,0 +1,5 @@
+from .optimizers import Optimizer, sgd, adamw
+from .schedule import constant, cosine, linear_warmup_cosine
+
+__all__ = ["Optimizer", "sgd", "adamw", "constant", "cosine",
+           "linear_warmup_cosine"]

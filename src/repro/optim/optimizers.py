@@ -1,0 +1,78 @@
+"""Minimal pure-JAX optimizers (no optax in this environment).
+
+An Optimizer is an (init, update) pair:
+    opt_state = init(params)
+    updates, opt_state = update(grads, opt_state, params)
+    params <- params + updates
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable
+
+
+def _sched(lr):
+    return lr if callable(lr) else (lambda _: jnp.asarray(lr, jnp.float32))
+
+
+def sgd(lr, momentum: float = 0.0, nesterov: bool = False) -> Optimizer:
+    lr = _sched(lr)
+
+    def init(params):
+        mom = jax.tree.map(jnp.zeros_like, params) if momentum else None
+        return {"count": jnp.zeros((), jnp.int32), "mom": mom}
+
+    def update(grads, state, params=None):
+        step_lr = lr(state["count"])
+        if momentum:
+            mom = jax.tree.map(lambda m, g: momentum * m + g, state["mom"], grads)
+            use = jax.tree.map(lambda m, g: momentum * m + g, mom, grads) \
+                if nesterov else mom
+            new_state = {"count": state["count"] + 1, "mom": mom}
+        else:
+            use = grads
+            new_state = {"count": state["count"] + 1, "mom": None}
+        updates = jax.tree.map(lambda u: -step_lr * u, use)
+        return updates, new_state
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    lr = _sched(lr)
+
+    def init(params):
+        z = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return {"count": jnp.zeros((), jnp.int32), "mu": z,
+                "nu": jax.tree.map(jnp.zeros_like, z)}
+
+    def update(grads, state, params):
+        c = state["count"] + 1
+        step_lr = lr(state["count"])
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                          state["mu"], grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                          state["nu"], grads)
+        bc1 = 1 - b1 ** c.astype(jnp.float32)
+        bc2 = 1 - b2 ** c.astype(jnp.float32)
+
+        def upd(m, v, p):
+            mhat = m / bc1
+            vhat = v / bc2
+            u = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (-step_lr * u).astype(p.dtype)
+
+        updates = jax.tree.map(upd, mu, nu, params)
+        return updates, {"count": c, "mu": mu, "nu": nu}
+
+    return Optimizer(init, update)

@@ -1,0 +1,26 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine(lr: float, total_steps: int, final_frac: float = 0.0):
+    def f(step):
+        t = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        c = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.asarray(lr * (final_frac + (1 - final_frac) * c), jnp.float32)
+    return f
+
+
+def linear_warmup_cosine(lr: float, warmup: int, total_steps: int,
+                         final_frac: float = 0.0):
+    cos = cosine(lr, max(total_steps - warmup, 1), final_frac)
+
+    def f(step):
+        w = jnp.minimum(step / max(warmup, 1), 1.0)
+        return jnp.where(step < warmup, lr * w, cos(step - warmup)).astype(jnp.float32)
+    return f

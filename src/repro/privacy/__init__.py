@@ -1,0 +1,6 @@
+from .rdp import (rdp_subsampled_gaussian, compose, rdp_to_eps, epsilon,
+                  calibrate_sigma, DEFAULT_ALPHAS)
+from .accountant import PrivacyAccountant
+
+__all__ = ["rdp_subsampled_gaussian", "compose", "rdp_to_eps", "epsilon",
+           "calibrate_sigma", "DEFAULT_ALPHAS", "PrivacyAccountant"]

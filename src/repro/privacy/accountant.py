@@ -1,0 +1,37 @@
+"""Stateful privacy accountant driven by the training loop.
+
+Tracks every optimizer step's (q, sigma) and reports the running (eps, delta)
+under RDP composition.  The sampler guarantees each logical batch really was
+Poisson-subsampled with rate q, so this accounting is valid — the paper's
+"no shortcuts" requirement.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from . import rdp
+
+
+@dataclasses.dataclass
+class PrivacyAccountant:
+    delta: float
+    alphas: Sequence[float] = rdp.DEFAULT_ALPHAS
+    _rdp: np.ndarray = dataclasses.field(default=None)  # type: ignore
+    history: List[Tuple[float, float, int]] = dataclasses.field(default_factory=list)
+
+    def __post_init__(self):
+        if self._rdp is None:
+            self._rdp = np.zeros(len(self.alphas))
+
+    def step(self, q: float, sigma: float, steps: int = 1) -> None:
+        self._rdp = self._rdp + rdp.compose(q, sigma, steps, self.alphas)
+        self.history.append((q, sigma, steps))
+
+    def epsilon(self) -> float:
+        return rdp.rdp_to_eps(self._rdp, self.delta, self.alphas)
+
+    def spent(self) -> Tuple[float, float]:
+        return self.epsilon(), self.delta

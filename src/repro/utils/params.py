@@ -1,0 +1,53 @@
+"""Path-string addressing of nested-dict parameter trees.
+
+Params are nested dicts of arrays.  Paths are '.'-joined key chains, e.g.
+``blocks.attn.wq.w`` — the same strings the DP layer primitives use as
+``param_path`` so Book-Keeping gradients can be scattered back into a tree.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+
+def flatten_params(params, prefix: str = "") -> Dict[str, jnp.ndarray]:
+    out = {}
+    if isinstance(params, dict):
+        for k, v in params.items():
+            out.update(flatten_params(v, f"{prefix}{k}."))
+        return out
+    out[prefix[:-1]] = params
+    return out
+
+
+def unflatten_params(flat: Dict[str, jnp.ndarray]):
+    tree: dict = {}
+    for path, v in flat.items():
+        keys = path.split(".")
+        node = tree
+        for k in keys[:-1]:
+            node = node.setdefault(k, {})
+        node[keys[-1]] = v
+    return tree
+
+
+def grads_into_tree(flat_grads: Dict[str, jnp.ndarray], params):
+    """Place flat path->grad entries into a tree shaped like ``params``;
+    missing entries become zeros (and are reported by tests, not silently
+    trained)."""
+    flat_p = flatten_params(params)
+    out = {}
+    for path, p in flat_p.items():
+        g = flat_grads.get(path)
+        if g is None:
+            out[path] = jnp.zeros_like(p, dtype=jnp.float32)
+        else:
+            out[path] = g.reshape(p.shape).astype(jnp.float32)
+    return unflatten_params(out)
+
+
+def missing_paths(flat_grads: Dict[str, jnp.ndarray], params):
+    """Paths in ``params`` that no BK gradient covers (should be empty)."""
+    return sorted(set(flatten_params(params)) - set(flat_grads))

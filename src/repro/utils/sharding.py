@@ -1,0 +1,162 @@
+"""GSPMD sharding rules for the production mesh.
+
+Mesh axes: ("data", "model") single pod, ("pod", "data", "model") multi-pod.
+
+  * batch          -> ("pod","data")  (pure data parallel for examples)
+  * dense weights  -> tensor parallel over "model" on the contracted/expanded
+                      dim + FSDP over "data" on the other dim
+  * expert weights -> expert parallel: E over "model"
+  * embeddings     -> vocab-parallel over "model" (falls back to d_model if
+                      vocab doesn't divide)
+  * vectors/norms  -> replicated
+  * KV caches      -> batch over ("pod","data") when divisible, else sequence
+                      over "data"; kv-heads/SSM-heads over "model" when
+                      divisible
+
+Every rule guards on divisibility — a dim that doesn't divide the axis is
+left replicated, so every (arch x shape) combination lowers.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# dense leaves whose *first* (input) matmul dim is the TP-sharded one
+DOWN_PROJ = ("wo", "w2", "out_proj")
+VECTOR_MAX_NDIM = 1
+
+
+def _div(n: int, mesh: Mesh, axis: str) -> bool:
+    return axis in mesh.shape and n % mesh.shape[axis] == 0 and n >= mesh.shape[axis]
+
+
+def _data_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+def batch_pspec(mesh: Mesh, bsz: int) -> P:
+    ax = [a for a in _data_axes(mesh)]
+    total = 1
+    for a in ax:
+        total *= mesh.shape[a]
+    if bsz % total == 0:
+        return P(tuple(ax))
+    if bsz % mesh.shape["data"] == 0:
+        return P("data")
+    return P()
+
+
+def param_pspec(path: Tuple[str, ...], shape: Tuple[int, ...],
+                mesh: Mesh) -> P:
+    """path: tuple of dict keys, e.g. ('blocks','attn','wq','w')."""
+    names = [str(p) for p in path]
+    leaf = names[-1]
+    parent = names[-2] if len(names) >= 2 else ""
+    nd = len(shape)
+
+    # vectors / norms / small leaves: replicate
+    if nd <= VECTOR_MAX_NDIM or min(shape[-2:]) < 8:
+        return P()
+
+    spec: list = [None] * nd
+
+    # embeddings: (V, D)
+    if parent == "emb" or leaf == "emb":
+        if _div(shape[0], mesh, "model"):
+            spec[0] = "model"
+        elif _div(shape[1], mesh, "model"):
+            spec[1] = "model"
+        if spec[1] is None and _div(shape[1], mesh, "data"):
+            spec[1] = "data"
+        return P(*spec)
+
+    # stacked expert weights (..., E, din, dout) under moe: expert parallel
+    if parent in ("moe",) or (nd >= 3 and parent in ("w1", "w2", "w3")
+                              and "moe" in names):
+        e_ax = nd - 3
+        if _div(shape[e_ax], mesh, "model"):
+            spec[e_ax] = "model"
+        if _div(shape[-2], mesh, "data"):
+            spec[-2] = "data"
+        return P(*spec)
+
+    # generic dense (..., din, dout): TP on one dim, FSDP(data) on the other
+    tp_dim = nd - 2 if parent in DOWN_PROJ else nd - 1
+    fs_dim = nd - 1 if tp_dim == nd - 2 else nd - 2
+    if _div(shape[tp_dim], mesh, "model"):
+        spec[tp_dim] = "model"
+    if _div(shape[fs_dim], mesh, "data"):
+        spec[fs_dim] = "data"
+    return P(*spec)
+
+
+def params_shardings(params_shape, mesh: Mesh):
+    """Map an eval_shape'd params pytree to NamedShardings."""
+    def one(path, leaf):
+        keys = tuple(getattr(p, "key", getattr(p, "idx", p)) for p in path)
+        return NamedSharding(mesh, param_pspec(keys, leaf.shape, mesh))
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def state_shardings(state_shape, mesh: Mesh):
+    """TrainState: params/grad_acc/opt moments like params; scalars replicated."""
+    pshard = params_shardings(state_shape.params, mesh)
+
+    def like_params(tree):
+        # tree has the same structure as params at its leaves
+        return params_shardings(tree, mesh)
+
+    rep = NamedSharding(mesh, P())
+    opt = {
+        k: (like_params(v) if k in ("mu", "nu", "mom") and v is not None
+            else jax.tree_util.tree_map(lambda _: rep, v))
+        for k, v in state_shape.opt_state.items()}
+    return type(state_shape)(
+        params=pshard,
+        opt_state=opt,
+        grad_acc=like_params(state_shape.grad_acc),
+        rng=rep, step=rep, seen=rep)
+
+
+def cache_pspec(path: Tuple[str, ...], shape: Tuple[int, ...], mesh: Mesh,
+                bsz: int) -> P:
+    """Decode caches: (L?, B, S, H, D)-ish arrays."""
+    nd = len(shape)
+    spec: list = [None] * nd
+    dax = _data_axes(mesh)
+    total = 1
+    for a in dax:
+        total *= mesh.shape[a]
+    # find the batch axis: first axis equal to bsz after leading stack dims
+    b_ax = None
+    for i, s in enumerate(shape):
+        if s == bsz:
+            b_ax = i
+            break
+    if b_ax is not None and bsz % total == 0:
+        spec[b_ax] = tuple(dax) if len(dax) > 1 else dax[0]
+    elif b_ax is not None and bsz % mesh.shape["data"] == 0:
+        spec[b_ax] = "data"
+    else:
+        # batch too small (long_500k): shard the longest remaining dim on data
+        cand = max(range(nd), key=lambda i: shape[i])
+        if _div(shape[cand], mesh, "data"):
+            spec[cand] = "data"
+    # shard the LARGEST unsharded divisible dim over model (usually S for KV
+    # caches when kv-heads don't divide; heads for SSM states)
+    cands = [i for i in range(nd)
+             if spec[i] is None and i != b_ax
+             and _div(shape[i], mesh, "model")
+             and shape[i] >= mesh.shape["model"]]
+    if cands:
+        spec[max(cands, key=lambda i: shape[i])] = "model"
+    return P(*spec)
+
+
+def cache_shardings(cache_shape, mesh: Mesh, bsz: int):
+    def one(path, leaf):
+        keys = tuple(getattr(p, "key", getattr(p, "idx", p)) for p in path)
+        return NamedSharding(mesh, cache_pspec(keys, leaf.shape, mesh, bsz))
+    return jax.tree_util.tree_map_with_path(one, cache_shape)

@@ -1,0 +1,65 @@
+"""Pytree helpers used across the framework (no optax/flax in env)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_zeros_like(tree):
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(tree, s):
+    return jax.tree.map(lambda x: x * s, tree)
+
+
+def tree_axpy(a, x, y):
+    """a*x + y elementwise over two pytrees."""
+    return jax.tree.map(lambda xi, yi: a * xi + yi, x, y)
+
+
+def tree_dot(a, b):
+    leaves = jax.tree.map(lambda x, y: jnp.vdot(x, y), a, b)
+    return jax.tree.reduce(jnp.add, leaves, jnp.zeros((), jnp.float32))
+
+
+def tree_sq_norm(tree):
+    leaves = jax.tree.leaves(jax.tree.map(lambda x: jnp.sum(jnp.square(x.astype(jnp.float32))), tree))
+    return sum(leaves) if leaves else jnp.zeros(())
+
+
+def tree_global_norm(tree):
+    return jnp.sqrt(tree_sq_norm(tree))
+
+
+def tree_count_params(tree):
+    return sum(int(x.size) for x in jax.tree.leaves(tree))
+
+
+def tree_bytes(tree):
+    return sum(int(x.size) * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def tree_cast(tree, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, tree)
+
+
+def tree_noise_like(tree, key, scale):
+    """Gaussian noise with per-leaf folded keys; scale is a scalar std."""
+    leaves, treedef = jax.tree.flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    noisy = [jax.random.normal(k, l.shape, jnp.float32).astype(l.dtype) * scale
+             for k, l in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, noisy)
+
+
+def tree_flat_size(tree):
+    return tree_count_params(tree)

@@ -1,0 +1,111 @@
+"""Prefill-by-decode equals the full-sequence forward, per architecture.
+
+These catch real bugs: the MLA absorbed-matmul decode (w_uk/w_uv split), the
+MoE top-k dispatch at T=1, the zamba2 shared-attn ring cache, and the
+whisper/VLM precomputed cross-KV caches.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Tape
+from repro.models import build_by_name
+
+B, T = 2, 8
+
+
+def _toks(cfg, key=1):
+    return jax.random.randint(jax.random.PRNGKey(key), (B, T), 0, cfg.vocab)
+
+
+def _roll(model, params, cache, toks, full, rtol, atol):
+    for t in range(T):
+        lg, cache = model.decode_step(params, cache, toks[:, t:t + 1],
+                                      jnp.int32(t))
+        np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, t]),
+                                   rtol=rtol, atol=atol)
+
+
+def test_mla_absorbed_decode_matches_training_attention():
+    import dataclasses
+    from repro.models import build
+    _, cfg = build_by_name("deepseek-v2-lite-16b", smoke=True)
+    # drop-free capacity: decode(T=1) never drops tokens, training(T=8) can —
+    # a real Switch-capacity effect, not a bug (see test_moe_topk_dispatch)
+    cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = _toks(cfg)
+    full, _ = model.logits_aux(params, toks, Tape())
+    cache = model.init_cache(params, B, T, dtype=jnp.float32)
+    _roll(model, params, cache, toks, full, rtol=3e-3, atol=5e-3)
+
+
+def test_moe_topk_dispatch_at_t1():
+    import dataclasses
+    from repro.models import build
+    _, cfg = build_by_name("olmoe-1b-7b", smoke=True)
+    # drop-free capacity so train == decode exactly; at the default capacity
+    # factor the training pass drops late tokens decode keeps (verified: the
+    # divergence appears exactly at position ceil(cap) and only there)
+    cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = _toks(cfg)
+    full, _ = model.logits_aux(params, toks, Tape())
+    cache = model.init_cache(params, B, T, dtype=jnp.float32)
+    _roll(model, params, cache, toks, full, rtol=3e-3, atol=5e-3)
+
+
+def test_zamba2_shared_ring_cache():
+    model, cfg = build_by_name("zamba2-1.2b", smoke=True)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = _toks(cfg)
+    full = model.logits(params, toks, Tape())
+    cache = model.init_cache(params, B, T, dtype=jnp.float32)
+    _roll(model, params, cache, toks, full, rtol=3e-3, atol=5e-3)
+
+
+def test_whisper_cross_kv_cache():
+    model, cfg = build_by_name("whisper-base", smoke=True)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = _toks(cfg)
+    fe = jax.random.normal(jax.random.PRNGKey(3),
+                           (B, cfg.n_audio_frames, cfg.d_model)) * 0.1
+    full = model.logits(params, toks, fe, Tape())
+    cache = model.init_cache(params, B, T, dtype=jnp.float32, frontend=fe)
+    _roll(model, params, cache, toks, full, rtol=3e-3, atol=5e-3)
+
+
+def test_vlm_cross_kv_cache():
+    model, cfg = build_by_name("llama-3.2-vision-90b", smoke=True)
+    params = model.init(jax.random.PRNGKey(0))
+    # gates init to 0 -> exercise nonzero cross-attn too
+    params["supers"]["crossb"]["gate"]["w"] = jnp.full(
+        params["supers"]["crossb"]["gate"]["w"].shape, 0.5)
+    toks = _toks(cfg)
+    fe = jax.random.normal(jax.random.PRNGKey(3),
+                           (B, cfg.n_image_tokens, cfg.frontend_dim)) * 0.1
+    full = model.logits(params, toks, fe, Tape())
+    cache = model.init_cache(params, B, T, dtype=jnp.float32, frontend=fe)
+    _roll(model, params, cache, toks, full, rtol=3e-3, atol=5e-3)
+
+
+def test_sliding_window_ring_wraparound():
+    """Decode past the window size: ring slots get overwritten correctly."""
+    import dataclasses
+    from repro.models import build
+    _, cfg = build_by_name("qwen3-1.7b", smoke=True)
+    cfg = dataclasses.replace(cfg, sliding_window=4)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    Tl = 12
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, Tl), 0, cfg.vocab)
+    full = model.logits(params, toks, Tape())
+    cache = model.init_cache(params, B, Tl, dtype=jnp.float32)
+    for t in range(Tl):
+        lg, cache = model.decode_step(params, cache, toks[:, t:t + 1],
+                                      jnp.int32(t))
+        np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, t]),
+                                   rtol=3e-3, atol=5e-3)

@@ -1,0 +1,123 @@
+"""Per-architecture smoke tests (reduced configs, CPU): one forward/train
+step, shape + NaN checks, ghost-vs-oracle norms, and a decode step."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SHAPES
+from repro.core import DPConfig, Tape, clipping as C, init_state, make_fused_step
+from repro.models import ARCH_IDS, build_by_name
+from repro.optim import sgd
+
+
+def make_batch(cfg, B=2, T=8, key=0):
+    ks = jax.random.split(jax.random.PRNGKey(key), 4)
+    if cfg.family == "vit":
+        return {"image": jax.random.normal(ks[0], (B, cfg.image_size,
+                                                   cfg.image_size, 3)),
+                "label": jax.random.randint(ks[1], (B,), 0, cfg.n_classes)}
+    b = {"tokens": jax.random.randint(ks[0], (B, T), 0, cfg.vocab),
+         "labels": jax.random.randint(ks[1], (B, T), 0, cfg.vocab)}
+    if cfg.family == "vlm":
+        b["frontend"] = jax.random.normal(
+            ks[2], (B, cfg.n_image_tokens, cfg.frontend_dim)) * 0.1
+    if cfg.family == "audio":
+        b["frontend"] = jax.random.normal(
+            ks[2], (B, cfg.n_audio_frames, cfg.d_model)) * 0.1
+    return b
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    model, cfg = build_by_name(arch, smoke=True)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg)
+    loss = model.loss(params, batch, Tape())
+    assert loss.shape == (2,)
+    assert not np.any(np.isnan(np.asarray(loss)))
+
+    dpc = DPConfig(clip_norm=0.5, noise_multiplier=0.8,
+                   expected_batch_size=2.0, engine="masked_pe")
+    step = make_fused_step(lambda p, b, t: model.loss(p, b, t),
+                           sgd(1e-3), dpc)
+    state = init_state(params, sgd(1e-3), jax.random.PRNGKey(1))
+    state, metrics = step(state, batch, jnp.ones(2))
+    for leaf in jax.tree.leaves(state.params):
+        assert not np.any(np.isnan(np.asarray(leaf)))
+    assert int(state.step) == 1
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_ghost_norms_match_oracle(arch):
+    model, cfg = build_by_name(arch, smoke=True)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg)
+    loss_fn = lambda p, b, t: model.loss(p, b, t)
+    oracle = C.per_example_grad_norms(loss_fn, params, batch)
+    sq, _ = C.ghost_norms(loss_fn, params, batch)
+    np.testing.assert_allclose(np.asarray(jnp.sqrt(sq)), np.asarray(oracle),
+                               rtol=5e-3)
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCH_IDS if a != "vit-base"])
+def test_decode_step(arch):
+    model, cfg = build_by_name(arch, smoke=True)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg)
+    cache = model.init_cache(params, 2, 16, dtype=jnp.float32,
+                             frontend=batch.get("frontend"))
+    lg, cache = model.decode_step(params, cache, batch["tokens"][:, :1],
+                                  jnp.int32(0))
+    assert lg.shape == (2, cfg.vocab)
+    assert not np.any(np.isnan(np.asarray(lg)))
+
+
+def test_dense_decode_matches_full_forward():
+    """Greedy prefill-by-decode reproduces the full-sequence logits."""
+    model, cfg = build_by_name("qwen3-1.7b", smoke=True)
+    params = model.init(jax.random.PRNGKey(0))
+    B, T = 2, 10
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, T), 0, cfg.vocab)
+    full = model.logits(params, toks, Tape())
+    cache = model.init_cache(params, B, T, dtype=jnp.float32)
+    for t in range(T):
+        lg, cache = model.decode_step(params, cache, toks[:, t:t + 1],
+                                      jnp.int32(t))
+        np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, t]),
+                                   rtol=1e-3, atol=2e-3)
+
+
+def test_mamba_decode_matches_full_forward():
+    """SSD chunked scan == recurrent decode, position by position."""
+    model, cfg = build_by_name("mamba2-1.3b", smoke=True)
+    params = model.init(jax.random.PRNGKey(0))
+    B, T = 2, 8
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, T), 0, cfg.vocab)
+    full = model.logits(params, toks, Tape())
+    cache = model.init_cache(params, B, T, dtype=jnp.float32)
+    for t in range(T):
+        lg, cache = model.decode_step(params, cache, toks[:, t:t + 1],
+                                      jnp.int32(t))
+        np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, t]),
+                                   rtol=2e-3, atol=5e-3)
+
+
+def test_zamba_shared_block_reuse_exact_norms():
+    """Reuse-aware ghost norms (shared attention) match the oracle."""
+    model, cfg = build_by_name("zamba2-1.2b", smoke=True)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg)
+    loss_fn = lambda p, b, t: model.loss(p, b, t)
+    oracle = C.per_example_grad_norms(loss_fn, params, batch)
+    sq, _ = C.ghost_norms(loss_fn, params, batch)
+    np.testing.assert_allclose(np.asarray(jnp.sqrt(sq)), np.asarray(oracle),
+                               rtol=5e-3)
+
+
+def test_input_shapes_table():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].seq_len == 32768
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524288

@@ -1,0 +1,61 @@
+"""Privacy accountant: known values, conversions, calibration."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.privacy import (PrivacyAccountant, calibrate_sigma, epsilon,
+                           rdp_subsampled_gaussian)
+
+
+def test_full_batch_matches_gaussian_rdp():
+    # q=1: RDP(alpha) = alpha / (2 sigma^2) exactly
+    for a in (2, 4, 16):
+        for s in (0.7, 2.0):
+            assert rdp_subsampled_gaussian(1.0, s, a) == pytest.approx(
+                a / (2 * s * s))
+
+
+def test_no_sampling_no_privacy_loss():
+    assert rdp_subsampled_gaussian(0.0, 1.0, 8) == 0.0
+
+
+def test_reference_value_tf_privacy():
+    # classic reference setting (Abadi et al. / TF-privacy tutorial):
+    # q=0.01, sigma=4, 10^4 steps, delta=1e-5 -> eps ~ 1.0-1.3 depending on
+    # the RDP->DP conversion; the improved conversion gives ~1.0.
+    e = epsilon(0.01, 4.0, 10000, 1e-5)
+    assert 0.8 < e < 1.3
+
+
+def test_subsampling_amplification():
+    # smaller q -> smaller eps at fixed sigma/steps
+    e_small = epsilon(0.01, 1.0, 100, 1e-5)
+    e_big = epsilon(0.5, 1.0, 100, 1e-5)
+    assert e_small < e_big
+
+
+def test_calibration_hits_target():
+    for target in (1.0, 8.0):
+        s = calibrate_sigma(target, q=0.25, steps=10, delta=1e-5)
+        e = epsilon(0.25, s, 10, 1e-5)
+        assert e <= target + 1e-3
+        # and it is tight: slightly smaller sigma overshoots
+        assert epsilon(0.25, s * 0.98, 10, 1e-5) > target - 0.05
+
+
+def test_accountant_accumulates():
+    acc = PrivacyAccountant(delta=1e-5)
+    acc.step(0.1, 1.0, steps=5)
+    e5 = acc.epsilon()
+    acc.step(0.1, 1.0, steps=5)
+    e10 = acc.epsilon()
+    assert e10 > e5
+    assert e10 == pytest.approx(epsilon(0.1, 1.0, 10, 1e-5), rel=1e-9)
+
+
+def test_paper_setting():
+    # paper Table A2: eps=8, delta=2.04e-5, q=0.5, 4 steps
+    s = calibrate_sigma(8.0, q=0.5, steps=4, delta=2.04e-5)
+    assert 0.5 < s < 2.0
+    assert epsilon(0.5, s, 4, 2.04e-5) <= 8.0 + 1e-3

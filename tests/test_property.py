@@ -1,0 +1,78 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.clipping import clip_coef
+from repro.data import BatchMemoryManager, PoissonSampler
+from repro.privacy import epsilon, rdp_subsampled_gaussian
+
+f32 = st.floats(1e-6, 1e6, allow_nan=False, allow_infinity=False)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(f32, min_size=1, max_size=16), f32)
+def test_clip_coef_bounds(norms, c):
+    """Clipped per-example contributions never exceed the clip norm."""
+    n = jnp.array(norms)
+    coef, _ = clip_coef(n * n, jnp.ones_like(n), c)
+    clipped = np.asarray(coef * n)
+    assert np.all(clipped <= c * (1 + 1e-5))
+    assert np.all(np.asarray(coef) <= 1 + 1e-6)
+    assert np.all(np.asarray(coef) >= 0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.floats(0.05, 0.9), st.integers(4, 200))
+def test_poisson_sampler_is_bernoulli(seed, q, n):
+    """Every index appears at most once per draw; draws are within [0, n)."""
+    s = PoissonSampler(n=n, q=q, seed=seed, steps=3)
+    for idx in s:
+        assert len(set(idx.tolist())) == len(idx)
+        assert all(0 <= i < n for i in idx)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 1000), st.integers(1, 64), st.integers(1, 40))
+def test_bmm_mask_sums_to_logical(seed, p, tl):
+    rng = np.random.default_rng(seed)
+    indices = rng.integers(0, 1000, tl)
+    bmm = BatchMemoryManager(lambda ix: {"x": ix.astype(np.float32)}, p)
+    total = 0.0
+    batches = list(bmm.batches(indices))
+    for pb in batches:
+        assert pb.data["x"].shape[0] == p        # static physical shape
+        total += pb.mask.sum()
+    assert total == tl
+    assert batches[-1].is_last
+    assert all(not b.is_last for b in batches[:-1])
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(0.01, 0.9), st.floats(0.5, 8.0), st.integers(2, 32))
+def test_rdp_monotone_in_alpha_composition(q, sigma, alpha):
+    """RDP is nonnegative and composition is additive."""
+    r1 = rdp_subsampled_gaussian(q, sigma, alpha)
+    assert r1 >= 0
+    e1 = epsilon(q, sigma, 1, 1e-5)
+    e10 = epsilon(q, sigma, 10, 1e-5)
+    assert e10 >= e1 - 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(0.05, 0.5), st.floats(0.8, 4.0))
+def test_eps_decreases_with_sigma(q, sigma):
+    assert epsilon(q, sigma * 2, 10, 1e-5) <= epsilon(q, sigma, 10, 1e-5) + 1e-9
+
+
+def test_sampler_seeded_reproducible():
+    a = [i.tolist() for i in PoissonSampler(100, 0.3, seed=7, steps=5)]
+    b = [i.tolist() for i in PoissonSampler(100, 0.3, seed=7, steps=5)]
+    assert a == b
+
+
+def test_sampler_mean_batch_size():
+    s = PoissonSampler(2000, 0.25, seed=0, steps=50)
+    sizes = [len(i) for i in s]
+    assert abs(np.mean(sizes) - 500) < 30  # ~4 sigma
