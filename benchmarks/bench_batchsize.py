@@ -6,25 +6,16 @@ enough" physical batch is fine."""
 import jax
 import jax.numpy as jnp
 
-from .common import csv_row, make_lm_batch, timeit
-
-from repro.core import DPConfig, init_state, make_fused_step
-from repro.models import build_by_name
-from repro.optim import sgd
+from .common import csv_row, make_lm_batch, make_session, timeit
 
 
 def main():
-    model, cfg = build_by_name("vit-base", smoke=True)
-    params = model.init(jax.random.PRNGKey(0))
-    opt = sgd(1e-3)
     rows = {}
     for B in (1, 2, 4, 8, 16, 32):
-        batch = make_lm_batch(cfg, B, 16)
-        dpc = DPConfig(1.0, 1.0, float(B), "masked_pe")
-        step = jax.jit(make_fused_step(
-            lambda p, b, t: model.loss(p, b, t), opt, dpc))
-        state = init_state(params, opt, jax.random.PRNGKey(1))
-        dt = timeit(lambda: step(state, batch, jnp.ones(B))[0])
+        session = make_session("vit-base", "masked_pe", B)
+        batch = make_lm_batch(session.model_cfg, B, 16)
+        step = jax.jit(session.step_fn)
+        dt = timeit(lambda: step(session.state, batch, jnp.ones(B))[0])
         rows[B] = B / dt
     peak = max(rows.values())
     for B, thr in rows.items():

@@ -8,38 +8,30 @@ non-private 268)."""
 import jax
 import jax.numpy as jnp
 
-from .common import csv_row, make_lm_batch
-
-from repro.core import DPConfig, init_state, make_fused_step
-from repro.models import build_by_name
-from repro.optim import sgd
+from .common import csv_row, make_lm_batch, make_session
 
 BUDGET = 16 * 2 ** 30
 ENGINES = ["nonprivate", "masked_pe", "masked_ghost", "masked_bk"]
 
 
-def temp_bytes(model, cfg, engine, B, T=16):
-    dpc = DPConfig(1.0, 1.0, float(B), engine)
-    opt = sgd(1e-3)
-    step = make_fused_step(lambda p, b, t: model.loss(p, b, t), opt, dpc)
-    state_shape = jax.eval_shape(
-        lambda: init_state(model.init(jax.random.PRNGKey(0)), opt,
-                           jax.random.PRNGKey(1)))
+def temp_bytes(engine, B, T=16):
+    session = make_session("vit-base", engine, B)
+    state_shape = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), session.state)
     batch = jax.tree.map(
         lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
-        make_lm_batch(cfg, B, T))
+        make_lm_batch(session.model_cfg, B, T))
     mask = jax.ShapeDtypeStruct((B,), jnp.float32)
-    c = jax.jit(step).lower(state_shape, batch, mask).compile()
+    c = jax.jit(session.step_fn).lower(state_shape, batch, mask).compile()
     ma = c.memory_analysis()
     return ma.temp_size_in_bytes + ma.argument_size_in_bytes
 
 
 def main():
-    model, cfg = build_by_name("vit-base", smoke=True)
     for eng in ENGINES:
         per_b = {}
         for B in (4, 16):
-            per_b[B] = temp_bytes(model, cfg, eng, B)
+            per_b[B] = temp_bytes(eng, B)
         # linear model: bytes ~= fixed + slope*B -> max B under budget
         slope = (per_b[16] - per_b[4]) / 12
         fixed = per_b[4] - 4 * slope

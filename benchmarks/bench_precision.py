@@ -6,32 +6,24 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from .common import csv_row, make_lm_batch, timeit
+from .common import csv_row, make_lm_batch, make_session, timeit
 
-from repro.core import DPConfig, init_state, make_fused_step
-from repro.models import build, build_by_name
-from repro.optim import sgd
+from repro.models import build_by_name
 
 
 def run(arch, dtype, matmul_prec, engine="masked_pe", B=8, T=16):
     _, cfg = build_by_name(arch, smoke=True)
     cfg = dataclasses.replace(cfg, dtype=dtype)
-    model = build(cfg)
-    params = model.init(jax.random.PRNGKey(0))
+    session = make_session(arch, engine, B, model_cfg=cfg)
     batch = make_lm_batch(cfg, B, T)
     mask = jnp.ones(B)
-    dpc = DPConfig(1.0, 1.0, float(B), engine)
-    opt = sgd(1e-3)
 
     def stepfn(state, batch, mask):
         with jax.default_matmul_precision(matmul_prec):
-            step = make_fused_step(lambda p, b, t: model.loss(p, b, t),
-                                   opt, dpc)
-            return step(state, batch, mask)[0]
+            return session.step_fn(state, batch, mask)[0]
 
-    state = init_state(params, opt, jax.random.PRNGKey(1))
     jitted = jax.jit(stepfn)
-    dt = timeit(lambda: jitted(state, batch, mask))
+    dt = timeit(lambda: jitted(session.state, batch, mask))
     return B / dt
 
 

@@ -1,38 +1,29 @@
 """Paper Fig. A.2 / Section 6: the recompilation pathology of naive Poisson
 DP-SGD vs the paper's masked (fixed-shape) implementation.
 
-The naive engine jits on the exact sampled batch size — every new size from
+The naive variant jits on the exact sampled batch size — every new size from
 the Poisson draw retraces and recompiles.  Masked DP-SGD pads to fixed
 physical batches and compiles exactly once.  We measure cumulative wall time
-over a seeded sequence of logical batches."""
+over a seeded sequence of logical batches, both driven through the same
+PrivacySession accumulate/update lifecycle."""
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .common import csv_row
+from .common import csv_row, make_session
 
-from repro.core import DPConfig, init_state, make_accumulate_fn, make_update_fn
 from repro.data import BatchMemoryManager, PoissonSampler, TokenDataset
-from repro.models import build_by_name
-from repro.optim import sgd
 
 STEPS = 6
 N, Q, PHYS = 64, 0.3, 32
 
 
-def run(engine):
-    model, cfg = build_by_name("qwen2-0.5b", smoke=True)
-    ds = TokenDataset(N, seq_len=8, vocab=cfg.vocab)
+def run(variant):
+    session = make_session("qwen2-0.5b", "masked_pe", PHYS)
+    ds = TokenDataset(N, seq_len=8, vocab=session.model_cfg.vocab)
     sampler = PoissonSampler(N, Q, seed=0, steps=STEPS)
-    dpc = DPConfig(1.0, 1.0, N * Q, "masked_pe")
-    opt = sgd(1e-3)
-    acc = jax.jit(make_accumulate_fn(
-        lambda p, b, t: model.loss(p, b, t), dpc))
-    upd = jax.jit(make_update_fn(opt, dpc))
-    state = init_state(model.init(jax.random.PRNGKey(0)), opt,
-                       jax.random.PRNGKey(1))
     bmm = BatchMemoryManager(ds.fetch, PHYS)
 
     t0 = time.perf_counter()
@@ -40,20 +31,19 @@ def run(engine):
     per_step = []
     for indices in sampler:
         ts = time.perf_counter()
-        if engine == "naive":
+        if variant == "naive":
             # exact-size batch: every new tl is a fresh compile
             data = ds.fetch(indices)
             batch = {k: jnp.asarray(v) for k, v in data.items()}
-            mask = jnp.ones(len(indices), jnp.float32)
-            state, _ = acc(state, batch, mask)
+            session.accumulate(batch, jnp.ones(len(indices), jnp.float32))
             shapes_seen.add(len(indices))
         else:
             for pb in bmm.batches(indices):
                 batch = {k: jnp.asarray(v) for k, v in pb.data.items()}
-                state, _ = acc(state, batch, jnp.asarray(pb.mask))
+                session.accumulate(batch, jnp.asarray(pb.mask))
                 shapes_seen.add(pb.mask.shape[0])
-        state = upd(state)
-        jax.block_until_ready(state.params)
+        session.update()
+        jax.block_until_ready(session.state.params)
         per_step.append(time.perf_counter() - ts)
     total = time.perf_counter() - t0
     return total, per_step, len(shapes_seen)

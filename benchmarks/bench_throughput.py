@@ -4,29 +4,19 @@ reduced LM, measured wall-clock on CPU."""
 import jax
 import jax.numpy as jnp
 
-from .common import csv_row, make_lm_batch, timeit
-
-from repro.core import DPConfig, init_state, make_fused_step
-from repro.models import build_by_name
-from repro.optim import sgd
+from .common import csv_row, make_lm_batch, make_session, timeit
 
 ENGINES = ["nonprivate", "masked_pe", "masked_ghost", "masked_bk"]
 
 
 def run(arch="vit-base", B=8, T=16):
-    model, cfg = build_by_name(arch, smoke=True)
-    params = model.init(jax.random.PRNGKey(0))
-    batch = make_lm_batch(cfg, B, T)
-    mask = jnp.ones(B)
     rows = {}
     for eng in ENGINES:
-        dpc = DPConfig(clip_norm=1.0, noise_multiplier=1.0,
-                       expected_batch_size=float(B), engine=eng)
-        opt = sgd(1e-3)
-        step = jax.jit(make_fused_step(
-            lambda p, b, t: model.loss(p, b, t), opt, dpc))
-        state = init_state(params, opt, jax.random.PRNGKey(1))
-        dt = timeit(lambda: step(state, batch, mask)[0])
+        session = make_session(arch, eng, B)
+        batch = make_lm_batch(session.model_cfg, B, T)
+        mask = jnp.ones(B)
+        step = jax.jit(session.step_fn)
+        dt = timeit(lambda: step(session.state, batch, mask)[0])
         rows[eng] = B / dt
         rel = rows["nonprivate"] / rows[eng]
         csv_row(f"throughput/{arch}/{eng}", dt * 1e6,

@@ -1,4 +1,8 @@
-"""Shared benchmark helpers (CPU wall-clock on reduced configs)."""
+"""Shared benchmark helpers (CPU wall-clock on reduced configs).
+
+All benchmarks construct training through PrivacySession — the same audited
+DP path the launch drivers use — via :func:`make_session`.
+"""
 import sys
 import os
 import time
@@ -6,8 +10,29 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
-import jax.numpy as jnp
 import numpy as np
+
+from repro.core import DPConfig
+from repro.core.session import PrivacySession, TrainConfig
+from repro.models import build_by_name
+
+
+def make_session(arch, engine="masked_pe", B=8, *, clip_norm=1.0,
+                 noise_multiplier=1.0, microbatches=1, lr=1e-3,
+                 seed=0, model_cfg=None) -> PrivacySession:
+    """A benchmark session: expected logical batch pinned to the physical
+    batch B (benchmarks time fixed-size steps, not Poisson draws)."""
+    if model_cfg is not None:
+        from repro.models import build
+        model, cfg = build(model_cfg), model_cfg
+    else:
+        model, cfg = build_by_name(arch, smoke=True)
+    dp = DPConfig(clip_norm=clip_norm, noise_multiplier=noise_multiplier,
+                  expected_batch_size=float(B), engine=engine,
+                  microbatches=microbatches)
+    tc = TrainConfig(physical_batch=B, lr=lr, optimizer="sgd", momentum=0.0,
+                     seed=seed)
+    return PrivacySession(model, cfg, dp, tc)
 
 
 def timeit(fn, *args, warmup=1, iters=3):

@@ -1,8 +1,9 @@
-"""Engine-equivalence demonstration: the five clipping engines are different
-EXECUTIONS of the same private update.  Trains two steps of each engine from
-the same seed and prints the max parameter divergence — pe / ghost / BK agree
-to float tolerance, so throughput (benchmarks/bench_throughput.py) is the
-only axis on which to choose.
+"""Engine-equivalence demonstration: the clipping engines are different
+EXECUTIONS of the same private update.  Runs two DP steps of each registered
+masked engine from the same seed — via one PrivacySession per engine — and
+prints the max parameter divergence: pe / ghost / BK agree to float
+tolerance, so throughput (benchmarks/bench_throughput.py) is the only axis
+on which to choose.
 
 Also demonstrates WHY the Poisson requirement matters: the ShuffleSampler
 (the shortcut the paper warns about) produces fixed-size batches whose
@@ -15,36 +16,37 @@ sys.path.insert(0, "src")
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import DPConfig, init_state, make_fused_step
+from repro.core import DPConfig
+from repro.core.session import PrivacySession, TrainConfig
 from repro.data import PoissonSampler, ShuffleSampler
-from repro.models import build_by_name
-from repro.optim import sgd
 
-model, cfg = build_by_name("qwen3-1.7b", smoke=True)
-params = model.init(jax.random.PRNGKey(0))
 B, T = 8, 16
+ENGINES = ("masked_pe", "masked_ghost", "masked_bk")
+
+sessions = {
+    eng: PrivacySession.from_config(
+        "qwen3-1.7b",
+        DPConfig(clip_norm=0.5, noise_multiplier=1.0, engine=eng),
+        TrainConfig(steps=2, n_data=24, q=0.25, seed=0, lr=0.05,
+                    optimizer="sgd", momentum=0.0))
+    for eng in ENGINES
+}
+cfg = sessions["masked_pe"].model_cfg
 batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (B, T), 0, cfg.vocab),
          "labels": jax.random.randint(jax.random.PRNGKey(2), (B, T), 0, cfg.vocab)}
 mask = jnp.array([1., 1., 0., 1., 1., 1., 0., 1.])
 
-results = {}
-for eng in ("masked_pe", "masked_ghost", "masked_bk"):
-    dpc = DPConfig(clip_norm=0.5, noise_multiplier=1.0,
-                   expected_batch_size=6.0, engine=eng)
-    step = jax.jit(make_fused_step(lambda p, b, t: model.loss(p, b, t),
-                                   sgd(0.05), dpc))
-    state = init_state(params, sgd(0.05), jax.random.PRNGKey(7))
+for eng, s in sessions.items():
     for _ in range(2):
-        state, _ = step(state, batch, mask)
-    results[eng] = state.params
+        s.step(batch, mask)
+    print(f"{eng:14s} eps spent after 2 steps: {s.privacy_spent()[0]:.3f}")
 
-ref = results["masked_pe"]
+ref = sessions["masked_pe"].params
 for eng in ("masked_ghost", "masked_bk"):
     diff = max(float(jnp.abs(a - b).max())
                for a, b in zip(jax.tree.leaves(ref),
-                               jax.tree.leaves(results[eng])))
+                               jax.tree.leaves(sessions[eng].params)))
     print(f"masked_pe vs {eng:14s} max param diff after 2 DP steps: {diff:.2e}")
     assert diff < 1e-4
 

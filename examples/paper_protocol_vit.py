@@ -2,7 +2,7 @@
 synthetic CIFAR-100-like data for 4 optimizer steps at sampling rate q=0.5
 (expected logical batch = N/2), eps=8, delta=2.04e-5-style — Table A2 /
 Section 3 of Rodriguez Beltran et al., comparing all clipping engines on
-identical seeded logical batches.
+identical seeded logical batches, each driven by its own PrivacySession.
 
 Run:  PYTHONPATH=src python examples/paper_protocol_vit.py
 """
@@ -11,15 +11,19 @@ sys.path.insert(0, "src")
 
 import json
 
-from repro.launch.train import train
+from repro.core import DPConfig
+from repro.core.session import PrivacySession, TrainConfig
 
 ENGINES = ["nonprivate", "masked_pe", "masked_ghost", "masked_bk"]
 results = {}
 for eng in ENGINES:
-    out = train("vit-base", smoke=True, steps=4, n_data=128, q=0.5,
-                physical=16, engine=eng, target_eps=8.0, delta=2.04e-5,
-                clip_norm=4.63,      # the paper's ViT max-grad-norm
-                lr=3e-4, optimizer="sgd", seed=0)
+    session = PrivacySession.from_config(
+        "vit-base",
+        DPConfig(engine=eng, clip_norm=4.63),   # the paper's ViT max-grad-norm
+        TrainConfig(steps=4, n_data=128, q=0.5, physical_batch=16,
+                    target_eps=8.0 if eng != "nonprivate" else None,
+                    delta=2.04e-5, lr=3e-4, optimizer="sgd", seed=0))
+    out = session.fit()
     results[eng] = {
         "final_loss": out["history"][-1]["loss"],
         "eps": round(out["final_eps"], 3),

@@ -1,42 +1,41 @@
-"""Quickstart: DP-SGD fine-tuning with proper Poisson subsampling, end to end.
+"""Quickstart: DP-SGD fine-tuning with proper Poisson subsampling, end to end,
+through the PrivacySession API.
 
 Trains a reduced qwen2-family LM with the masked DP-SGD engine (Algorithm 2),
 tracks (eps, delta) with the RDP accountant, checkpoints, and then restores +
-greedy-decodes a few tokens.
+greedy-decodes a few tokens — all via one session object.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import sys
 sys.path.insert(0, "src")
 
-import jax
-import jax.numpy as jnp
+import json
 
-from repro.launch.train import train
-from repro.checkpoint import restore_into
-from repro.models import build_by_name
+from repro.core import DPConfig
+from repro.core.session import PrivacySession, TrainConfig
 
 CKPT = "/tmp/repro_quickstart_ckpt"
 
-out = train("qwen2-0.5b", smoke=True, steps=6, n_data=256, seq_len=16,
-            physical=16, q=0.25, engine="masked_pe", target_eps=8.0,
-            optimizer="adamw", lr=3e-4, ckpt=CKPT)
-print(f"\ntrained: sigma={out['sigma']:.3f} "
-      f"eps={out['final_eps']:.3f} throughput={out['examples_per_s']:.1f} ex/s")
-assert out["final_eps"] <= 8.0 + 1e-6
+session = PrivacySession.from_config(
+    "qwen2-0.5b",
+    DPConfig(engine="masked_pe", clip_norm=1.0),
+    TrainConfig(steps=6, n_data=256, seq_len=16, physical_batch=16, q=0.25,
+                target_eps=8.0, optimizer="adamw", lr=3e-4))
+print(json.dumps(session.describe(), indent=1))
 
-# restore and serve
-model, cfg = build_by_name("qwen2-0.5b", smoke=True)
-params0 = model.init(jax.random.PRNGKey(0))
-params, step, meta = restore_into(CKPT, params0)
-print(f"restored checkpoint at step {step} (eps spent: {meta['eps']:.3f})")
+out = session.fit(ckpt=CKPT)
+eps, delta = session.privacy_spent()
+print(f"\ntrained: sigma={out['sigma']:.3f} eps={eps:.3f} "
+      f"(delta={delta:.2e}) throughput={out['examples_per_s']:.1f} ex/s")
+assert eps <= 8.0 + 1e-6
 
-cache = model.init_cache(params, 2, 16, dtype=jnp.float32)
-tok = jnp.array([[1], [2]], jnp.int32)
-toks = []
-for t in range(8):
-    logits, cache = model.decode_step(params, cache, tok, jnp.int32(t))
-    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-    toks.append(tok[:, 0].tolist())
-print("greedy continuation:", list(zip(*toks)))
+# restore into a fresh serving session and greedy-decode
+served = PrivacySession.restore(CKPT, "qwen2-0.5b", DPConfig(engine="nonprivate"),
+                                TrainConfig())
+meta = served.restored_meta
+print(f"restored checkpoint at step {int(served.state.step)} "
+      f"(eps spent: {meta['eps']:.3f})")
+gen = served.generate(batch=2, prompt_len=1, new_tokens=8, max_len=16)
+print("greedy continuation:", gen["generated"])
 print("QUICKSTART OK")

@@ -1,11 +1,22 @@
 from .tape import Tape, LayerSpec, scan_blocks, collect_eps
-from .engine import (DPConfig, TrainState, init_state, make_accumulate_fn,
-                     make_update_fn, make_fused_step, make_eval_fn)
+from .engine import (DPConfig, TrainState, init_state,
+                     build_accumulate_fn, build_update_fn, build_fused_step,
+                     build_eval_fn,
+                     make_accumulate_fn, make_update_fn, make_fused_step,
+                     make_eval_fn)
+from .clipping import (ShardingConstraints, register_engine, resolve_engine,
+                       available_engines)
+from .session import PrivacySession, TrainConfig
 from . import layers, clipping
 
 __all__ = [
     "Tape", "LayerSpec", "scan_blocks", "collect_eps",
-    "DPConfig", "TrainState", "init_state", "make_accumulate_fn",
-    "make_update_fn", "make_fused_step", "make_eval_fn",
+    "DPConfig", "TrainState", "init_state",
+    "build_accumulate_fn", "build_update_fn", "build_fused_step",
+    "build_eval_fn",
+    "make_accumulate_fn", "make_update_fn", "make_fused_step", "make_eval_fn",
+    "ShardingConstraints", "register_engine", "resolve_engine",
+    "available_engines",
+    "PrivacySession", "TrainConfig",
     "layers", "clipping",
 ]

@@ -1,23 +1,36 @@
-"""Clipped per-example gradient computation — the five engines of the paper.
+"""Clipped per-example gradient computation — the clipping engines of the
+paper, behind a pluggable registry.
 
-Every function here maps
-    (loss_fn, params, batch, mask, clip_norm)  ->  (sum of clipped masked
-    per-example grads, aux metrics)
+Every engine maps
+    (loss_fn, params, batch, mask, clip_norm, *, constraints)  ->
+    (sum of clipped masked per-example grads, aux metrics)
 where ``loss_fn(params, batch, tape) -> (B,) per-example losses`` and ``mask``
 is the Poisson 0/1 mask of Algorithm 2 (``masked_*`` engines) or all-ones
 (``pe`` on an exactly-sampled variable-size batch).
 
-Engines:
-  * per_example   — vmap(grad): materialises per-example grads (Opacus-style).
-  * ghost         — two passes: eps-backward for per-example norms (ghost
-                    trick), then a reweighted standard backward.  No
-                    per-example parameter gradients ever exist.
-  * bookkeeping   — one pass: the eps-backward's (X, dY) tape is reused to
-                    form the clipped summed grads analytically (Bu et al.).
+Engines are registered with the :func:`register_engine` decorator and
+resolved by name via :func:`resolve_engine` (or the ``ENGINES`` mapping,
+kept for backwards compatibility — both give a helpful error listing the
+registered names on an unknown engine).
+
+Built-in engines:
+  * pe / masked_pe — vmap(grad): materialises per-example grads
+                     (Opacus-style); the oracle for everything else.
+  * masked_ghost   — two passes: eps-backward for per-example norms (ghost
+                     trick), then a reweighted standard backward.  No
+                     per-example parameter gradients ever exist.
+  * masked_bk      — one pass: the eps-backward's (X, dY) tape is reused to
+                     form the clipped summed grads analytically (Bu et al.).
+
+Sharding is passed explicitly via :class:`ShardingConstraints` (the
+``PrivacySession`` path); the module-level ``set_pe_grad_*`` hooks survive
+only as a deprecated fallback for legacy callers.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, Tuple
+import dataclasses
+import warnings
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -28,22 +41,107 @@ from .tape import Tape
 
 Aux = Dict[str, jnp.ndarray]
 
-# Optional hook (set by the launcher): constrains the sharding of vmapped
-# per-example gradients — without it GSPMD falls into "involuntary full
-# rematerialization" (replicating B x params buffers across the pod) on the
-# per-example transposes. Signature: fn(grads_pytree) -> grads_pytree.
+
+# ---------------------------------------------------------------------------
+# explicit sharding constraints (replaces the mutable module globals)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardingConstraints:
+    """Sharding hooks threaded explicitly through the DP step builders.
+
+    grad     — applied to the summed (already clipped) gradient pytree;
+               pins it to the parameter (FSDP) layout so GSPMD
+               reduce-scatters instead of all-reduce + all-gather.
+    pe_grad  — applied to the vmapped per-example gradient pytree; without
+               it GSPMD falls into "involuntary full rematerialization"
+               (replicating B x params buffers) on the per-example
+               transposes.  Only the pe engines consume it.
+    pe_dtype — storage dtype for per-example grads (e.g. jnp.bfloat16
+               halves their HBM footprint).
+    """
+    grad: Optional[Callable] = None
+    pe_grad: Optional[Callable] = None
+    pe_dtype: Any = None
+
+
+# Deprecated module-global fallbacks (pre-PrivacySession API).
 _PE_GRAD_CONSTRAINT = None
-_PE_GRAD_DTYPE = None       # e.g. jnp.bfloat16: halve per-example grad HBM
+_PE_GRAD_DTYPE = None
 
 
 def set_pe_grad_constraint(fn) -> None:
+    """Deprecated: pass ShardingConstraints(pe_grad=...) instead."""
+    warnings.warn(
+        "set_pe_grad_constraint is deprecated; pass "
+        "ShardingConstraints(pe_grad=...) to the step builders or "
+        "PrivacySession instead.", DeprecationWarning, stacklevel=2)
     global _PE_GRAD_CONSTRAINT
     _PE_GRAD_CONSTRAINT = fn
 
 
 def set_pe_grad_dtype(dt) -> None:
+    """Deprecated: pass ShardingConstraints(pe_dtype=...) instead."""
+    warnings.warn(
+        "set_pe_grad_dtype is deprecated; pass "
+        "ShardingConstraints(pe_dtype=...) to the step builders or "
+        "PrivacySession instead.", DeprecationWarning, stacklevel=2)
     global _PE_GRAD_DTYPE
     _PE_GRAD_DTYPE = dt
+
+
+def _pe_hooks(constraints: Optional[ShardingConstraints]):
+    """(pe_grad, pe_dtype) — explicit constraints win; None falls back to
+    the legacy globals so pre-session callers keep working."""
+    if constraints is not None:
+        return constraints.pe_grad, constraints.pe_dtype
+    return _PE_GRAD_CONSTRAINT, _PE_GRAD_DTYPE
+
+
+# ---------------------------------------------------------------------------
+# engine registry
+# ---------------------------------------------------------------------------
+
+class EngineRegistry(dict):
+    """Name -> engine mapping that fails with the available names listed."""
+
+    def __getitem__(self, name):
+        try:
+            return super().__getitem__(name)
+        except KeyError:
+            raise KeyError(
+                f"Unknown clipping engine {name!r}. Registered engines: "
+                f"{available_engines()} (plus 'nonprivate' for the "
+                f"unclipped baseline). Register custom engines with "
+                f"@repro.core.clipping.register_engine(name).") from None
+
+
+ENGINES: "EngineRegistry" = EngineRegistry()
+
+
+def register_engine(name: str, *aliases: str):
+    """Decorator: register a clipping engine under ``name`` (+ aliases).
+
+    An engine is a callable
+        fn(loss_fn, params, batch, mask, clip_norm, *, constraints=None)
+        -> (summed clipped grads pytree, {"per_example_norms", "clip_coef"})
+    """
+    def deco(fn):
+        for key in (name,) + aliases:
+            if key in ENGINES and dict.__getitem__(ENGINES, key) is not fn:
+                raise ValueError(f"clipping engine {key!r} already registered")
+            ENGINES[key] = fn
+        return fn
+    return deco
+
+
+def resolve_engine(name: str) -> Callable:
+    """Look an engine up by name; raises KeyError listing the registry."""
+    return ENGINES[name]
+
+
+def available_engines() -> Tuple[str, ...]:
+    return tuple(sorted(ENGINES))
 
 
 def clip_coef(sq_norms, mask, clip_norm):
@@ -56,17 +154,22 @@ def clip_coef(sq_norms, mask, clip_norm):
 # per-example (naive / Opacus-style) — oracle for everything else
 # ---------------------------------------------------------------------------
 
+@register_engine("pe", "masked_pe")
 def per_example_clipped_grads(loss_fn: Callable, params, batch, mask,
-                              clip_norm: float) -> Tuple[dict, Aux]:
+                              clip_norm: float, *,
+                              constraints: ShardingConstraints = None
+                              ) -> Tuple[dict, Aux]:
+    pe_constraint, pe_dtype = _pe_hooks(constraints)
+
     def one_loss(p, ex):
         ex1 = jax.tree.map(lambda x: x[None], ex)
         return loss_fn(p, ex1, Tape())[0]
 
     grads = jax.vmap(jax.grad(one_loss), in_axes=(None, 0))(params, batch)
-    if _PE_GRAD_DTYPE is not None:
-        grads = jax.tree.map(lambda g: g.astype(_PE_GRAD_DTYPE), grads)
-    if _PE_GRAD_CONSTRAINT is not None:
-        grads = _PE_GRAD_CONSTRAINT(grads)
+    if pe_dtype is not None:
+        grads = jax.tree.map(lambda g: g.astype(pe_dtype), grads)
+    if pe_constraint is not None:
+        grads = pe_constraint(grads)
     sq = sum(jnp.sum(g.reshape(g.shape[0], -1).astype(jnp.float32) ** 2, -1)
              for g in jax.tree.leaves(grads))
     coef, norms = clip_coef(sq, mask, clip_norm)
@@ -134,8 +237,11 @@ def ghost_norms(loss_fn, params, batch):
     return sq, losses
 
 
+@register_engine("masked_ghost")
 def ghost_clipped_grads(loss_fn: Callable, params, batch, mask,
-                        clip_norm: float) -> Tuple[dict, Aux]:
+                        clip_norm: float, *,
+                        constraints: ShardingConstraints = None
+                        ) -> Tuple[dict, Aux]:
     """Ghost clipping: norm pass + reweighted second backward."""
     sq, _ = ghost_norms(loss_fn, params, batch)
     coef, norms = clip_coef(sq, mask, clip_norm)
@@ -150,8 +256,10 @@ def ghost_clipped_grads(loss_fn: Callable, params, batch, mask,
     return summed, {"per_example_norms": norms, "clip_coef": coef}
 
 
+@register_engine("masked_bk")
 def bk_clipped_grads(loss_fn: Callable, params, batch, mask,
-                     clip_norm: float, check_coverage: bool = False
+                     clip_norm: float, check_coverage: bool = False, *,
+                     constraints: ShardingConstraints = None
                      ) -> Tuple[dict, Aux]:
     """Book-Keeping: one backward pass; clipped grads rebuilt from the tape."""
     dEps, records, specs, losses = _eps_backward(loss_fn, params, batch)
@@ -173,11 +281,3 @@ def bk_clipped_grads(loss_fn: Callable, params, batch, mask,
             raise ValueError(f"BK grads missing for params: {miss}")
     summed = grads_into_tree(flat, params)
     return summed, {"per_example_norms": norms, "clip_coef": coef}
-
-
-ENGINES = {
-    "pe": per_example_clipped_grads,
-    "masked_pe": per_example_clipped_grads,
-    "masked_ghost": ghost_clipped_grads,
-    "masked_bk": bk_clipped_grads,
-}

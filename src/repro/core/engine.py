@@ -1,4 +1,4 @@
-"""The PrivacyEngine: DP-SGD steps with virtual batching (Algorithms 1 & 2).
+"""The DP step builders: DP-SGD steps with virtual batching (Algorithms 1 & 2).
 
 Step anatomy (paper Alg. 2 / Opacus BatchMemoryManager semantics):
 
@@ -9,13 +9,19 @@ Step anatomy (paper Alg. 2 / Opacus BatchMemoryManager semantics):
   * ``fused_step``: accumulate(+optional microbatch scan) + update in one jit —
     the unit that is lowered in the multi-pod dry-run and rooflined.
 
-All functions are pure; the host-side BatchMemoryManager (repro.data.loader)
-drives them with seeded Poisson-sampled logical batches.
+All step functions are pure; the host-side lifecycle (sampler, memory
+manager, accountant, checkpointing) is owned by
+:class:`repro.core.session.PrivacySession`, which is the supported entry
+point.  The ``build_*`` factories here take sharding constraints explicitly
+(:class:`~repro.core.clipping.ShardingConstraints`); the module-level
+``make_*`` factories and the ``set_grad_constraint`` global survive only as
+deprecated shims.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, NamedTuple, Optional
+import warnings
+from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -23,6 +29,7 @@ import jax.numpy as jnp
 from ..optim import Optimizer
 from ..utils.tree import tree_noise_like, tree_zeros_like
 from . import clipping
+from .clipping import ShardingConstraints
 from .tape import Tape
 
 
@@ -38,16 +45,34 @@ class DPConfig:
     def private(self) -> bool:
         return self.engine != "nonprivate"
 
+    def validate(self) -> "DPConfig":
+        """Raise (with the registered-engine list) on an unknown engine."""
+        if self.private:
+            clipping.resolve_engine(self.engine)
+        return self
 
-# Optional hook (set by the launcher): constrains summed-gradient sharding to
-# the parameter (FSDP) layout so GSPMD reduce-scatters instead of
-# all-reduce + all-gather per microbatch.
+
+# Deprecated module-global fallback (pre-PrivacySession API): constrains
+# summed-gradient sharding to the parameter (FSDP) layout so GSPMD
+# reduce-scatters instead of all-reduce + all-gather per microbatch.
 _GRAD_CONSTRAINT = None
 
 
 def set_grad_constraint(fn) -> None:
+    """Deprecated: pass ShardingConstraints(grad=...) to the step builders
+    or PrivacySession instead."""
+    warnings.warn(
+        "set_grad_constraint is deprecated; pass ShardingConstraints(grad=...) "
+        "to build_fused_step/build_accumulate_fn or PrivacySession instead.",
+        DeprecationWarning, stacklevel=2)
     global _GRAD_CONSTRAINT
     _GRAD_CONSTRAINT = fn
+
+
+def _grad_hook(constraints: Optional[ShardingConstraints]):
+    if constraints is not None:
+        return constraints.grad
+    return _GRAD_CONSTRAINT
 
 
 class TrainState(NamedTuple):
@@ -70,18 +95,22 @@ def init_state(params, optimizer: Optimizer, rng) -> TrainState:
     )
 
 
-def _clipped_sum(loss_fn, params, batch, mask, cfg: DPConfig):
-    fn = clipping.ENGINES[cfg.engine]
-    return fn(loss_fn, params, batch, mask, cfg.clip_norm)
+def _clipped_sum(loss_fn, params, batch, mask, cfg: DPConfig,
+                 constraints: Optional[ShardingConstraints]):
+    fn = clipping.resolve_engine(cfg.engine)
+    return fn(loss_fn, params, batch, mask, cfg.clip_norm,
+              constraints=constraints)
 
 
-def _microbatched_clipped_sum(loss_fn, params, batch, mask, cfg: DPConfig):
+def _microbatched_clipped_sum(loss_fn, params, batch, mask, cfg: DPConfig,
+                              constraints: Optional[ShardingConstraints]):
     """Split the physical batch into cfg.microbatches chunks and accumulate
     sequentially inside the step (keeps activation/record liveness bounded for
     the 67B/90B dry-runs — the in-jit analogue of virtual batching)."""
     if cfg.microbatches <= 1:
-        return _clipped_sum(loss_fn, params, batch, mask, cfg)
+        return _clipped_sum(loss_fn, params, batch, mask, cfg, constraints)
     m = cfg.microbatches
+    grad_constraint = _grad_hook(constraints)
 
     def resh(x):
         return x.reshape((m, x.shape[0] // m) + x.shape[1:])
@@ -91,44 +120,49 @@ def _microbatched_clipped_sum(loss_fn, params, batch, mask, cfg: DPConfig):
 
     def body(acc, xs):
         b, mk = xs
-        g, aux = _clipped_sum(loss_fn, params, b, mk, cfg)
-        if _GRAD_CONSTRAINT is not None:
-            g = _GRAD_CONSTRAINT(g)
+        g, aux = _clipped_sum(loss_fn, params, b, mk, cfg, constraints)
+        if grad_constraint is not None:
+            g = grad_constraint(g)
         acc = jax.tree.map(jnp.add, acc, g)
-        return acc, aux["per_example_norms"]
+        return acc, (aux["per_example_norms"], aux["clip_coef"])
 
     acc0 = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
-    acc, norms = jax.lax.scan(body, acc0, (mb, mmask))
+    acc, (norms, coefs) = jax.lax.scan(body, acc0, (mb, mmask))
     return acc, {"per_example_norms": norms.reshape(-1),
-                 "clip_coef": jnp.zeros_like(norms.reshape(-1))}
+                 "clip_coef": coefs.reshape(-1)}
 
 
-def make_accumulate_fn(loss_fn: Callable, cfg: DPConfig):
+def build_accumulate_fn(loss_fn: Callable, cfg: DPConfig, *,
+                        constraints: ShardingConstraints = None):
     """accumulate(state, batch, mask) -> (state, metrics). Jit-stable shapes."""
 
     def accumulate(state: TrainState, batch, mask):
+        grad_constraint = _grad_hook(constraints)
         if cfg.private:
             g, aux = _microbatched_clipped_sum(loss_fn, state.params, batch,
-                                               mask, cfg)
+                                               mask, cfg, constraints)
             metrics = {"mean_grad_norm":
                        (aux["per_example_norms"] * mask).sum() / jnp.maximum(mask.sum(), 1)}
         else:
-            def mean_loss(p):
+            # accumulate the masked SUM of per-example losses directly: the
+            # update divides once by the total seen count, so every example
+            # carries equal weight regardless of how mask counts split
+            # across physical batches.
+            def sum_loss(p):
                 losses = loss_fn(p, batch, Tape())
-                return (losses * mask).sum() / jnp.maximum(mask.sum(), 1)
-            g = jax.grad(mean_loss)(state.params)
-            g = jax.tree.map(lambda x: x.astype(jnp.float32) * jnp.maximum(mask.sum(), 1),
-                             g)
+                return (losses * mask).sum()
+            g = jax.grad(sum_loss)(state.params)
+            g = jax.tree.map(lambda x: x.astype(jnp.float32), g)
             metrics = {}
-        if _GRAD_CONSTRAINT is not None:
-            g = _GRAD_CONSTRAINT(g)
+        if grad_constraint is not None:
+            g = grad_constraint(g)
         acc = jax.tree.map(jnp.add, state.grad_acc, g)
         return state._replace(grad_acc=acc, seen=state.seen + mask.sum()), metrics
 
     return accumulate
 
 
-def make_update_fn(optimizer: Optimizer, cfg: DPConfig):
+def build_update_fn(optimizer: Optimizer, cfg: DPConfig):
     """update(state) -> state. Noise + optimizer step + reset accumulator."""
 
     def update(state: TrainState):
@@ -151,11 +185,12 @@ def make_update_fn(optimizer: Optimizer, cfg: DPConfig):
     return update
 
 
-def make_fused_step(loss_fn: Callable, optimizer: Optimizer, cfg: DPConfig):
+def build_fused_step(loss_fn: Callable, optimizer: Optimizer, cfg: DPConfig, *,
+                     constraints: ShardingConstraints = None):
     """One logical batch == one call: clip+accumulate then noise+update.
     This is the function lowered in the dry-run."""
-    accumulate = make_accumulate_fn(loss_fn, cfg)
-    update = make_update_fn(optimizer, cfg)
+    accumulate = build_accumulate_fn(loss_fn, cfg, constraints=constraints)
+    update = build_update_fn(optimizer, cfg)
 
     def step(state: TrainState, batch, mask):
         state, metrics = accumulate(state, batch, mask)
@@ -165,8 +200,39 @@ def make_fused_step(loss_fn: Callable, optimizer: Optimizer, cfg: DPConfig):
     return step
 
 
-def make_eval_fn(loss_fn: Callable):
+def build_eval_fn(loss_fn: Callable):
     def evaluate(params, batch, mask):
         losses = loss_fn(params, batch, Tape())
         return (losses * mask).sum() / jnp.maximum(mask.sum(), 1)
     return evaluate
+
+
+# ---------------------------------------------------------------------------
+# deprecated shims (pre-PrivacySession API)
+# ---------------------------------------------------------------------------
+
+def _deprecated(name: str) -> None:
+    warnings.warn(
+        f"{name} is deprecated; construct training through "
+        f"repro.core.session.PrivacySession (or the build_* factories for "
+        f"low-level lowering).", DeprecationWarning, stacklevel=3)
+
+
+def make_accumulate_fn(loss_fn: Callable, cfg: DPConfig):
+    _deprecated("make_accumulate_fn")
+    return build_accumulate_fn(loss_fn, cfg)
+
+
+def make_update_fn(optimizer: Optimizer, cfg: DPConfig):
+    _deprecated("make_update_fn")
+    return build_update_fn(optimizer, cfg)
+
+
+def make_fused_step(loss_fn: Callable, optimizer: Optimizer, cfg: DPConfig):
+    _deprecated("make_fused_step")
+    return build_fused_step(loss_fn, optimizer, cfg)
+
+
+def make_eval_fn(loss_fn: Callable):
+    _deprecated("make_eval_fn")
+    return build_eval_fn(loss_fn)

@@ -1,0 +1,390 @@
+"""PrivacySession: one object that owns the full DP-SGD lifecycle.
+
+The paper's claim is that correct Poisson-subsampled DP-SGD is efficient when
+the sampler, clipping engine, accountant and optimizer are engineered as one
+coherent system; this module is that system's single entry point (the role
+``PrivacyEngine`` plays in Opacus).  A session composes:
+
+  * the :class:`~repro.data.PoissonSampler` (proper Bernoulli(q) draws — the
+    "no shortcuts" requirement) and the :class:`~repro.data.BatchMemoryManager`
+    (fixed physical shapes, so jit compiles exactly once),
+  * a clipping engine resolved from the decorator registry in
+    :mod:`repro.core.clipping` (unknown names fail listing what IS registered),
+  * the RDP :class:`~repro.privacy.PrivacyAccountant`, with σ auto-calibrated
+    from ``target_eps`` when requested,
+  * the optimizer + LR schedule, and
+  * sharding constraints passed explicitly
+    (:class:`~repro.core.clipping.ShardingConstraints`) instead of mutable
+    module globals.
+
+Quickstart::
+
+    from repro.core.session import PrivacySession, TrainConfig
+    from repro.core import DPConfig
+
+    session = PrivacySession.from_config(
+        "qwen2-0.5b",
+        DPConfig(engine="masked_pe", clip_norm=1.0),
+        TrainConfig(steps=4, n_data=256, q=0.25, target_eps=8.0))
+    out = session.fit()
+    print(session.privacy_spent(), session.describe())
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..data import BatchMemoryManager, PoissonSampler
+from ..privacy import PrivacyAccountant, calibrate_sigma
+from ..privacy import rdp as rdp_mod
+from ..optim import (Optimizer, adamw, constant, cosine,
+                     linear_warmup_cosine, sgd)
+from .clipping import ShardingConstraints, resolve_engine
+from .engine import (DPConfig, TrainState, build_accumulate_fn,
+                     build_eval_fn, build_fused_step, build_update_fn,
+                     init_state)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    """Host-side lifecycle knobs: data, sampling, optimizer, seeding."""
+    steps: int = 4
+    n_data: int = 512
+    seq_len: int = 16
+    physical_batch: int = 8
+    q: float = 0.25                      # Poisson sampling rate (L = q * N)
+    target_eps: Optional[float] = None   # auto-calibrate sigma when set
+    delta: Optional[float] = None        # default: 1 / (10 * n_data)
+    lr: float = 1e-3
+    optimizer: str = "sgd"               # sgd | adamw
+    momentum: float = 0.9                # sgd only
+    weight_decay: float = 0.0            # adamw only
+    schedule: str = "constant"           # constant | cosine | warmup_cosine
+    warmup: int = 0
+    smoke: bool = True                   # reduced model configs (CPU-friendly)
+    seed: int = 0
+    log_every: int = 1
+
+    @property
+    def resolved_delta(self) -> float:
+        return self.delta if self.delta is not None else 1.0 / (10 * self.n_data)
+
+
+def _build_schedule(tc: TrainConfig) -> Callable:
+    if tc.schedule == "constant":
+        return constant(tc.lr)
+    if tc.schedule == "cosine":
+        return cosine(tc.lr, tc.steps)
+    if tc.schedule == "warmup_cosine":
+        return linear_warmup_cosine(tc.lr, tc.warmup, tc.steps)
+    raise ValueError(f"Unknown schedule {tc.schedule!r}; "
+                     f"expected constant | cosine | warmup_cosine")
+
+
+def _build_optimizer(tc: TrainConfig) -> Optimizer:
+    sched = _build_schedule(tc)
+    if tc.optimizer == "sgd":
+        return sgd(sched, momentum=tc.momentum)
+    if tc.optimizer == "adamw":
+        return adamw(sched, weight_decay=tc.weight_decay)
+    raise ValueError(f"Unknown optimizer {tc.optimizer!r}; "
+                     f"expected sgd | adamw")
+
+
+class PrivacySession:
+    """The audited DP-SGD path every entry point goes through.
+
+    Build one with :meth:`from_config` (arch name or ArchConfig), or directly
+    from a model object.  All jit caching happens internally; the privacy
+    accountant advances on every optimizer step the session takes.
+    """
+
+    def __init__(self, model, model_cfg, dp: DPConfig, train: TrainConfig, *,
+                 optimizer: Optimizer = None,
+                 constraints: ShardingConstraints = None,
+                 accountant: PrivacyAccountant = None,
+                 loss_fn: Callable = None):
+        dp.validate()                       # fail fast, listing the registry
+        self.model = model
+        self.model_cfg = model_cfg
+        self.dp = dp
+        self.train_cfg = train
+        self.constraints = constraints if constraints is not None \
+            else ShardingConstraints()
+        self.optimizer = optimizer if optimizer is not None \
+            else _build_optimizer(train)
+        self.accountant = accountant if accountant is not None \
+            else PrivacyAccountant(delta=train.resolved_delta)
+        self.loss_fn = loss_fn if loss_fn is not None \
+            else (lambda p, b, t: model.loss(p, b, t))
+        params = model.init(jax.random.PRNGKey(train.seed))
+        self.state: TrainState = init_state(
+            params, self.optimizer, jax.random.PRNGKey(train.seed + 1))
+        self.restored_meta: Optional[dict] = None   # set by restore()
+        self._jit_cache: dict = {}
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def from_config(cls, model_cfg, dp_cfg: DPConfig = None,
+                    train_cfg: TrainConfig = None, *,
+                    constraints: ShardingConstraints = None,
+                    optimizer: Optimizer = None) -> "PrivacySession":
+        """Build a session from (arch name | ArchConfig, DPConfig, TrainConfig).
+
+        When ``train_cfg.target_eps`` is set and the engine is private, σ is
+        calibrated so that ``train_cfg.steps`` steps at rate q spend at most
+        target_eps at δ; ``dp_cfg.expected_batch_size`` is likewise derived
+        from the sampler (L = q·N) so the config cannot disagree with the
+        sampling that actually happens.
+        """
+        from ..models import build, build_by_name
+        dp_cfg = dp_cfg if dp_cfg is not None else DPConfig()
+        train_cfg = train_cfg if train_cfg is not None else TrainConfig()
+        if isinstance(model_cfg, str):
+            model, cfg = build_by_name(model_cfg, smoke=train_cfg.smoke)
+        else:
+            cfg = model_cfg.reduced() if (train_cfg.smoke and
+                                          hasattr(model_cfg, "reduced")) \
+                else model_cfg
+            model = build(cfg)
+        L = train_cfg.q * train_cfg.n_data
+        if not dp_cfg.private:
+            sigma = 0.0
+        elif train_cfg.target_eps is not None:
+            sigma = calibrate_sigma(train_cfg.target_eps, train_cfg.q,
+                                    train_cfg.steps, train_cfg.resolved_delta)
+        else:
+            sigma = dp_cfg.noise_multiplier
+        dp_cfg = dataclasses.replace(dp_cfg, noise_multiplier=sigma,
+                                     expected_batch_size=L)
+        return cls(model, cfg, dp_cfg, train_cfg,
+                   optimizer=optimizer, constraints=constraints)
+
+    @classmethod
+    def restore(cls, path: str, model_cfg, dp_cfg: DPConfig = None,
+                train_cfg: TrainConfig = None, **kw) -> "PrivacySession":
+        """from_config + load params (and step/eps metadata) from ``path``."""
+        from ..checkpoint import restore_into
+        session = cls.from_config(model_cfg, dp_cfg, train_cfg, **kw)
+        params, step, meta = restore_into(path, session.state.params)
+        session.state = session.state._replace(
+            params=params, step=jnp.asarray(step, jnp.int32))
+        if step and session.dp.private:
+            # re-seat the accountant: the checkpointed steps were taken at
+            # this session's (q, sigma), so replay their composition
+            session.accountant.step(session.train_cfg.q,
+                                    session.dp.noise_multiplier, steps=step)
+        session.restored_meta = meta
+        return session
+
+    # -- jitted step functions (cached per session) -------------------------
+
+    @property
+    def step_fn(self):
+        """The pure fused step (state, batch, mask) -> (state, metrics) —
+        unjitted, for benchmarks that lower/compile it themselves."""
+        if "raw_step" not in self._jit_cache:
+            self._jit_cache["raw_step"] = build_fused_step(
+                self.loss_fn, self.optimizer, self.dp,
+                constraints=self.constraints)
+        return self._jit_cache["raw_step"]
+
+    def _jitted(self, name: str):
+        if name not in self._jit_cache:
+            if name == "step":
+                self._jit_cache[name] = jax.jit(self.step_fn)
+            elif name == "accumulate":
+                self._jit_cache[name] = jax.jit(build_accumulate_fn(
+                    self.loss_fn, self.dp, constraints=self.constraints))
+            elif name == "update":
+                self._jit_cache[name] = jax.jit(build_update_fn(
+                    self.optimizer, self.dp))
+            elif name == "evaluate":
+                self._jit_cache[name] = jax.jit(build_eval_fn(self.loss_fn))
+            else:
+                raise KeyError(name)
+        return self._jit_cache[name]
+
+    # -- the DP-SGD lifecycle ----------------------------------------------
+
+    @property
+    def params(self):
+        return self.state.params
+
+    def step(self, batch, mask) -> dict:
+        """One logical batch -> one optimizer step (clip + noise + update),
+        advancing the privacy accountant."""
+        self.state, metrics = self._jitted("step")(self.state, batch, mask)
+        self._account()
+        return metrics
+
+    def accumulate(self, batch, mask) -> dict:
+        """Clip-and-accumulate one physical batch (no optimizer step)."""
+        self.state, metrics = self._jitted("accumulate")(self.state, batch,
+                                                         mask)
+        return metrics
+
+    def update(self) -> None:
+        """Noise + optimizer step over the accumulated logical batch."""
+        self.state = self._jitted("update")(self.state)
+        self._account()
+
+    def _account(self) -> None:
+        if self.dp.private:
+            self.accountant.step(self.train_cfg.q, self.dp.noise_multiplier)
+
+    def evaluate(self, batch, mask=None) -> float:
+        if mask is None:
+            b0 = jax.tree.leaves(batch)[0]
+            mask = jnp.ones(b0.shape[0], jnp.float32)
+        return float(self._jitted("evaluate")(self.state.params, batch, mask))
+
+    def fit(self, dataset=None, steps: int = None, *, ckpt: str = None) -> dict:
+        """Run the full loop: PoissonSampler -> BatchMemoryManager ->
+        accumulate/update -> accountant (-> checkpoint).  Returns the same
+        record the legacy ``launch.train.train`` driver produced."""
+        tc = self.train_cfg
+        steps = steps if steps is not None else tc.steps
+        if tc.target_eps is not None and steps > tc.steps:
+            raise ValueError(
+                f"fit(steps={steps}) exceeds the {tc.steps} steps sigma was "
+                f"calibrated for (target_eps={tc.target_eps}); rebuild the "
+                f"session with TrainConfig(steps={steps}) so calibration "
+                f"matches the steps actually taken.")
+        if dataset is None:
+            from ..data.synthetic import dataset_for_config
+            dataset = dataset_for_config(self.model_cfg, tc.n_data,
+                                         tc.seq_len, seed=tc.seed)
+        else:
+            n = getattr(dataset, "n", None)
+            if n is not None and n != tc.n_data:
+                raise ValueError(
+                    f"dataset has n={n} examples but TrainConfig.n_data="
+                    f"{tc.n_data}; q, delta and sigma calibration all depend "
+                    f"on the population size — rebuild the session with "
+                    f"TrainConfig(n_data={n}).")
+        sampler = PoissonSampler(n=tc.n_data, q=tc.q, seed=tc.seed,
+                                 steps=steps)
+        bmm = BatchMemoryManager(dataset.fetch, tc.physical_batch)
+
+        history = []
+        t0 = time.time()
+        examples = 0
+        for step_i, indices in enumerate(sampler):
+            for pb in bmm.batches(indices):
+                batch = {k: jnp.asarray(v) for k, v in pb.data.items()}
+                self.accumulate(batch, jnp.asarray(pb.mask))
+                examples += int(pb.mask.sum())
+            self.update()
+            if (step_i + 1) % tc.log_every == 0:
+                idx_eval = np.arange(min(tc.physical_batch, tc.n_data))
+                eb = {k: jnp.asarray(v)
+                      for k, v in dataset.fetch(idx_eval).items()}
+                l = self.evaluate(eb, jnp.ones(len(idx_eval), jnp.float32))
+                eps = self.privacy_spent()[0]
+                rec = {"step": step_i + 1, "loss": round(l, 4),
+                       "eps": round(eps, 4), "logical_batch": len(indices),
+                       "throughput": round(examples / (time.time() - t0), 1)}
+                history.append(rec)
+        if ckpt:
+            self.checkpoint(ckpt)
+        return {"history": history, "sigma": self.dp.noise_multiplier,
+                "final_eps": self.privacy_spent()[0],
+                "examples_per_s": examples / (time.time() - t0)}
+
+    def privacy_spent(self) -> tuple:
+        """(eps, delta) actually spent so far, from the accountant."""
+        if not self.dp.private or not self.accountant.history:
+            return 0.0, self.accountant.delta
+        return self.accountant.spent()
+
+    def checkpoint(self, path: str) -> None:
+        from ..checkpoint import save
+        eps, delta = self.privacy_spent()
+        save(path, self.state.params, self.state.opt_state,
+             int(self.state.step),
+             {"arch": getattr(self.model_cfg, "name", "?"),
+              "engine": self.dp.engine, "eps": eps, "delta": delta})
+
+    # -- reporting ----------------------------------------------------------
+
+    def describe(self) -> dict:
+        """Engine, σ, q, δ and the expected ε trajectory over the configured
+        number of steps — the benchmark/report header."""
+        tc, dp = self.train_cfg, self.dp
+        traj = []
+        if dp.private and dp.noise_multiplier > 0:
+            per_step = rdp_mod.compose(tc.q, dp.noise_multiplier, 1)
+            acc = np.zeros_like(per_step)
+            for _ in range(tc.steps):
+                acc = acc + per_step
+                traj.append(round(rdp_mod.rdp_to_eps(
+                    acc, tc.resolved_delta), 4))
+        return {
+            "arch": getattr(self.model_cfg, "name", "?"),
+            "engine": dp.engine,
+            "sigma": dp.noise_multiplier,
+            "clip_norm": dp.clip_norm,
+            "q": tc.q,
+            "delta": tc.resolved_delta,
+            "expected_batch_size": dp.expected_batch_size,
+            "physical_batch": tc.physical_batch,
+            "microbatches": dp.microbatches,
+            "steps": tc.steps,
+            "optimizer": tc.optimizer,
+            "expected_eps_trajectory": traj,
+            "eps_spent": self.privacy_spent()[0],
+            "optimizer_steps_taken": int(self.state.step),
+        }
+
+    # -- serving ------------------------------------------------------------
+
+    def generate(self, *, batch: int = 4, prompt_len: int = 8,
+                 new_tokens: int = 8, max_len: int = 64,
+                 greedy: bool = True) -> dict:
+        """Prefill-by-decode + autoregressive generation with the session's
+        current parameters (e.g. after fit() or restore())."""
+        model, cfg, tc = self.model, self.model_cfg, self.train_cfg
+        if not hasattr(model, "decode_step"):
+            raise ValueError(f"{getattr(cfg, 'name', model)} has no decode "
+                             f"path (encoder-only)")
+        rng = jax.random.PRNGKey(tc.seed + 1)
+        prompt = jax.random.randint(rng, (batch, prompt_len), 0, cfg.vocab)
+
+        extras = {}
+        if cfg.family == "vlm":
+            extras["frontend"] = jax.random.normal(
+                rng, (batch, cfg.n_image_tokens, cfg.frontend_dim)) * 0.1
+        if cfg.family == "audio":
+            extras["frontend"] = jax.random.normal(
+                rng, (batch, cfg.n_audio_frames, cfg.d_model)) * 0.1
+
+        params = self.state.params
+        cache = model.init_cache(params, batch, max_len, dtype=jnp.float32,
+                                 **extras)
+        if "decode" not in self._jit_cache:
+            self._jit_cache["decode"] = jax.jit(model.decode_step)
+        step = self._jit_cache["decode"]
+
+        t0 = time.time()
+        out_tokens = []
+        tok = prompt[:, :1]
+        for t in range(prompt_len + new_tokens - 1):
+            logits, cache = step(params, cache, tok, jnp.int32(t))
+            if t + 1 < prompt_len:
+                tok = prompt[:, t + 1:t + 2]          # teacher-forced prefill
+            else:
+                nxt = jnp.argmax(logits, -1) if greedy else \
+                    jax.random.categorical(jax.random.fold_in(rng, t), logits)
+                tok = nxt[:, None].astype(jnp.int32)
+                out_tokens.append(np.asarray(nxt))
+        dt = time.time() - t0
+        gen = np.stack(out_tokens, 1)
+        return {"generated": gen.tolist(),
+                "tokens_per_s": round(batch * (prompt_len + new_tokens) / dt, 1)}

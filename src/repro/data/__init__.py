@@ -1,6 +1,8 @@
 from .sampler import PoissonSampler, ShuffleSampler
 from .loader import BatchMemoryManager, PhysicalBatch
-from .synthetic import TokenDataset, EmbeddingDataset, ImageDataset
+from .synthetic import (TokenDataset, EmbeddingDataset, ImageDataset,
+                        dataset_for_config)
 
 __all__ = ["PoissonSampler", "ShuffleSampler", "BatchMemoryManager",
-           "PhysicalBatch", "TokenDataset", "EmbeddingDataset", "ImageDataset"]
+           "PhysicalBatch", "TokenDataset", "EmbeddingDataset", "ImageDataset",
+           "dataset_for_config"]

@@ -10,6 +10,22 @@ import dataclasses
 import numpy as np
 
 
+def dataset_for_config(cfg, n: int, seq_len: int, seed: int = 0):
+    """The right synthetic dataset for an ArchConfig's modality family."""
+    if cfg.family == "vit":
+        return ImageDataset(n, size=cfg.image_size, classes=cfg.n_classes,
+                            seed=seed)
+    if cfg.family == "vlm":
+        return EmbeddingDataset(n, frames=cfg.n_image_tokens,
+                                dim=cfg.frontend_dim, seq_len=seq_len,
+                                vocab=cfg.vocab, seed=seed)
+    if cfg.family == "audio":
+        return EmbeddingDataset(n, frames=cfg.n_audio_frames,
+                                dim=cfg.d_model, seq_len=seq_len,
+                                vocab=cfg.vocab, seed=seed)
+    return TokenDataset(n, seq_len=seq_len, vocab=cfg.vocab, seed=seed)
+
+
 @dataclasses.dataclass
 class TokenDataset:
     """Deterministic synthetic LM corpus: (tokens, labels=next token)."""

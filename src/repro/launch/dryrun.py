@@ -26,7 +26,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..configs.base import SHAPES, input_specs
-from ..core import DPConfig, init_state, make_fused_step
+from ..core import DPConfig, ShardingConstraints, build_fused_step, init_state
 from ..core.tape import set_scan_unroll
 from ..models import build, get_config
 from ..optim import sgd
@@ -113,7 +113,6 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
 
     # pin per-example gradient shardings (batch over data, param dims per
     # the usual rules) — otherwise GSPMD replicates B x params buffers
-    from ..core import clipping as clip_mod
     from ..utils.sharding import param_pspec
 
     def pe_constraint(grads):
@@ -128,13 +127,8 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
                 g, NamedSharding(mesh, P("data", *ps)))
         return jax.tree_util.tree_map_with_path(one, grads)
 
-    clip_mod.set_pe_grad_constraint(
-        pe_constraint if engine in ("pe", "masked_pe") else None)
-    clip_mod.set_pe_grad_dtype(jnp.bfloat16 if pe_bf16 else None)
     from ..core.tape import set_remat
     set_remat(cfg.remat)
-
-    from ..core import engine as engine_mod
 
     def grad_constraint(g):
         def one(path, leaf):
@@ -144,7 +138,12 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
                 leaf, NamedSharding(mesh, param_pspec(keys, leaf.shape, mesh)))
         return jax.tree_util.tree_map_with_path(one, g)
 
-    engine_mod.set_grad_constraint(grad_constraint)
+    # sharding constraints flow explicitly into the step builder — no
+    # mutable module globals (see ShardingConstraints)
+    constraints = ShardingConstraints(
+        grad=grad_constraint,
+        pe_grad=pe_constraint if engine in ("pe", "masked_pe") else None,
+        pe_dtype=jnp.bfloat16 if pe_bf16 else None)
 
     rec = {"arch": arch, "shape": shape_name, "kind": shape.kind,
            "mesh": dict(mesh.shape), "engine": engine,
@@ -190,7 +189,6 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
                        expected_batch_size=shape.global_batch,
                        engine=engine, microbatches=mb)
         opt = sgd(1e-3, momentum=0.9)
-        step = make_fused_step(lambda p, b, t: model.loss(p, b, t), opt, dpc)
         state_shape = jax.eval_shape(
             lambda: init_state(model.init(jax.random.PRNGKey(0)), opt,
                                jax.random.PRNGKey(1)))
@@ -205,11 +203,14 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             bspec = NamedSharding(
                 mesh, P(axes) if layout == "dp" else
                 P(tuple(a for a in axes if a != "model")))
-            clip_mod.set_pe_grad_constraint(None)
-            engine_mod.set_grad_constraint(None)
+            # replicated params: GSPMD needs no layout pins
+            constraints = ShardingConstraints(
+                pe_dtype=jnp.bfloat16 if pe_bf16 else None)
         else:
             sshard = state_shardings(state_shape, mesh)
             bspec = NamedSharding(mesh, batch_pspec(mesh, shape.global_batch))
+        step = build_fused_step(lambda p, b, t: model.loss(p, b, t), opt, dpc,
+                                constraints=constraints)
         bshard = jax.tree.map(lambda _: bspec, specs["batch"])
         mshard = bspec
         with mesh:
@@ -263,7 +264,10 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
                              + ma.output_size_in_bytes
                              - ma.alias_size_in_bytes),
     }
-    ca = compiled.cost_analysis() or {}
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):        # jax<0.5: one dict per partition
+        ca = ca[0] if ca else {}
+    ca = ca or {}
     rec["hlo_cost"] = {"flops": ca.get("flops", -1.0),
                        "bytes_accessed": ca.get("bytes accessed", -1.0),
                        "transcendentals": ca.get("transcendentals", -1.0)}

@@ -1,61 +1,39 @@
 """Batched serving driver: prefill-by-decode + autoregressive generation on a
-reduced config (CPU).  Demonstrates the KV/SSM-cache serving path of every
-decode-capable architecture.
+reduced config (CPU), through the same :class:`PrivacySession` that owns
+training — so serving a DP-trained checkpoint is one restore() away.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --tokens 12
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --ckpt /tmp/ck
 """
 from __future__ import annotations
 
 import argparse
 import json
-import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from ..core import DPConfig
+from ..core.session import PrivacySession, TrainConfig
 
-from ..models import build_by_name
+
+def serve_session(arch: str, *, seed: int = 0,
+                  ckpt: str = None) -> PrivacySession:
+    """An inference-only session: nonprivate engine, no training budget."""
+    dp = DPConfig(engine="nonprivate")
+    tc = TrainConfig(seed=seed, smoke=True)
+    if ckpt:
+        return PrivacySession.restore(ckpt, arch, dp, tc)
+    return PrivacySession.from_config(arch, dp, tc)
 
 
 def generate(arch: str, *, batch: int = 4, prompt_len: int = 8,
              new_tokens: int = 8, max_len: int = 64, seed: int = 0,
-             greedy: bool = True) -> dict:
-    model, cfg = build_by_name(arch, smoke=True)
-    if not hasattr(model, "decode_step"):
+             greedy: bool = True, ckpt: str = None) -> dict:
+    session = serve_session(arch, seed=seed, ckpt=ckpt)
+    if not hasattr(session.model, "decode_step"):
         raise SystemExit(f"{arch} has no decode path (encoder-only)")
-    params = model.init(jax.random.PRNGKey(seed))
-    rng = jax.random.PRNGKey(seed + 1)
-    prompt = jax.random.randint(rng, (batch, prompt_len), 0, cfg.vocab)
-
-    extras = {}
-    if cfg.family == "vlm":
-        extras["frontend"] = jax.random.normal(
-            rng, (batch, cfg.n_image_tokens, cfg.frontend_dim)) * 0.1
-    if cfg.family == "audio":
-        extras["frontend"] = jax.random.normal(
-            rng, (batch, cfg.n_audio_frames, cfg.d_model)) * 0.1
-
-    cache = model.init_cache(params, batch, max_len, dtype=jnp.float32,
-                             **extras)
-    step = jax.jit(model.decode_step)
-
-    t0 = time.time()
-    out_tokens = []
-    tok = prompt[:, :1]
-    for t in range(prompt_len + new_tokens - 1):
-        logits, cache = step(params, cache, tok, jnp.int32(t))
-        if t + 1 < prompt_len:
-            tok = prompt[:, t + 1:t + 2]          # teacher-forced prefill
-        else:
-            nxt = jnp.argmax(logits, -1) if greedy else \
-                jax.random.categorical(jax.random.fold_in(rng, t), logits)
-            tok = nxt[:, None].astype(jnp.int32)
-            out_tokens.append(np.asarray(nxt))
-    dt = time.time() - t0
-    gen = np.stack(out_tokens, 1)
-    return {"generated": gen.tolist(),
-            "tokens_per_s": round(batch * (prompt_len + new_tokens) / dt, 1)}
+    return session.generate(batch=batch, prompt_len=prompt_len,
+                            new_tokens=new_tokens, max_len=max_len,
+                            greedy=greedy)
 
 
 def main():
@@ -64,9 +42,11 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--tokens", type=int, default=8)
+    ap.add_argument("--ckpt", help="serve params restored from a DP-trained "
+                                   "checkpoint instead of a fresh init")
     args = ap.parse_args()
     out = generate(args.arch, batch=args.batch, prompt_len=args.prompt_len,
-                   new_tokens=args.tokens)
+                   new_tokens=args.tokens, ckpt=args.ckpt)
     print(json.dumps(out))
 
 

@@ -1,8 +1,9 @@
 """End-to-end DP-SGD training driver (runs on CPU with reduced configs).
 
-Drives the full stack the way a real deployment would:
-  PoissonSampler -> BatchMemoryManager -> accumulate/update steps ->
-  PrivacyAccountant -> checkpoint.
+A thin CLI over :class:`repro.core.session.PrivacySession`, which owns the
+full stack the way a real deployment would:
+  PoissonSampler -> BatchMemoryManager -> clipping engine -> accountant ->
+  optimizer -> checkpoint.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --smoke \
@@ -12,44 +13,33 @@ from __future__ import annotations
 
 import argparse
 import json
-import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from ..configs.base import SHAPES
-from ..core import (DPConfig, init_state, make_accumulate_fn, make_eval_fn,
-                    make_update_fn)
-from ..core.engine import TrainState
-from ..data import BatchMemoryManager, PoissonSampler, TokenDataset
-from ..data.synthetic import EmbeddingDataset, ImageDataset
-from ..models import build_by_name
-from ..optim import adamw, sgd
-from ..privacy import PrivacyAccountant, calibrate_sigma
-from ..checkpoint import save
+from ..core import DPConfig
+from ..core.session import PrivacySession, TrainConfig
+from ..data.synthetic import dataset_for_config
 
 
 def make_dataset(cfg, n, seq_len, seed=0):
-    if cfg.family == "vit":
-        return ImageDataset(n, size=cfg.image_size, classes=cfg.n_classes,
-                            seed=seed)
-    if cfg.family == "vlm":
-        return EmbeddingDataset(n, frames=cfg.n_image_tokens,
-                                dim=cfg.frontend_dim, seq_len=seq_len,
-                                vocab=cfg.vocab, seed=seed)
-    if cfg.family == "audio":
-        return EmbeddingDataset(n, frames=cfg.n_audio_frames,
-                                dim=cfg.d_model, seq_len=seq_len,
-                                vocab=cfg.vocab, seed=seed)
-    return TokenDataset(n, seq_len=seq_len, vocab=cfg.vocab, seed=seed)
+    """Back-compat alias for repro.data.synthetic.dataset_for_config."""
+    return dataset_for_config(cfg, n, seq_len, seed=seed)
 
 
-def fetch_with_frontend(ds, cfg):
-    def fetch(idx):
-        d = ds.fetch(idx)
-        return d
-    return fetch
+def make_session(arch: str, *, smoke: bool = True, steps: int = 4,
+                 n_data: int = 512, seq_len: int = 16, physical: int = 8,
+                 q: float = 0.25, engine: str = "masked_pe",
+                 target_eps: float = 8.0, delta: float = None,
+                 clip_norm: float = 1.0, lr: float = 1e-3,
+                 optimizer: str = "sgd", seed: int = 0,
+                 microbatches: int = 1, log_every: int = 1) -> PrivacySession:
+    """The one place the training CLI wires configs into a PrivacySession."""
+    dp = DPConfig(clip_norm=clip_norm, engine=engine,
+                  microbatches=microbatches)
+    tc = TrainConfig(steps=steps, n_data=n_data, seq_len=seq_len,
+                     physical_batch=physical, q=q,
+                     target_eps=target_eps if engine != "nonprivate" else None,
+                     delta=delta, lr=lr, optimizer=optimizer, smoke=smoke,
+                     seed=seed, log_every=log_every)
+    return PrivacySession.from_config(arch, dp, tc)
 
 
 def train(arch: str, *, smoke: bool = True, steps: int = 4, n_data: int = 512,
@@ -57,59 +47,18 @@ def train(arch: str, *, smoke: bool = True, steps: int = 4, n_data: int = 512,
           engine: str = "masked_pe", target_eps: float = 8.0,
           delta: float = None, clip_norm: float = 1.0, lr: float = 1e-3,
           optimizer: str = "sgd", seed: int = 0, ckpt: str = None,
-          log_every: int = 1) -> dict:
-    model, cfg = build_by_name(arch, smoke=smoke)
-    ds = make_dataset(cfg, n_data, seq_len)
-    delta = delta if delta is not None else 1.0 / (10 * n_data)
-
-    sampler = PoissonSampler(n=n_data, q=q, seed=seed, steps=steps)
-    L = sampler.expected_batch_size
-    sigma = calibrate_sigma(target_eps, q, steps, delta) \
-        if engine != "nonprivate" else 0.0
-    dpc = DPConfig(clip_norm=clip_norm, noise_multiplier=sigma,
-                   expected_batch_size=L, engine=engine)
-    opt = sgd(lr, momentum=0.9) if optimizer == "sgd" else adamw(lr)
-
-    loss_fn = lambda p, b, t: model.loss(p, b, t)
-    accumulate = jax.jit(make_accumulate_fn(loss_fn, dpc))
-    update = jax.jit(make_update_fn(opt, dpc))
-    evaluate = jax.jit(make_eval_fn(loss_fn))
-
-    params = model.init(jax.random.PRNGKey(seed))
-    state = init_state(params, opt, jax.random.PRNGKey(seed + 1))
-    bmm = BatchMemoryManager(ds.fetch, physical)
-    accountant = PrivacyAccountant(delta=delta)
-
-    history = []
-    t0 = time.time()
-    examples = 0
-    for step_i, indices in enumerate(sampler):
-        for pb in bmm.batches(indices):
-            batch = {k: jnp.asarray(v) for k, v in pb.data.items()}
-            state, metrics = accumulate(state, batch, jnp.asarray(pb.mask))
-            examples += int(pb.mask.sum())
-        state = update(state)
-        if engine != "nonprivate":
-            accountant.step(q, sigma)
-        if (step_i + 1) % log_every == 0:
-            idx_eval = np.arange(min(physical, n_data))
-            eb = {k: jnp.asarray(v) for k, v in ds.fetch(idx_eval).items()}
-            l = float(evaluate(state.params, eb,
-                               jnp.ones(len(idx_eval), jnp.float32)))
-            eps = accountant.epsilon() if engine != "nonprivate" else 0.0
-            rec = {"step": step_i + 1, "loss": round(l, 4),
-                   "eps": round(eps, 4), "logical_batch": len(indices),
-                   "throughput": round(examples / (time.time() - t0), 1)}
-            history.append(rec)
-            print(json.dumps(rec))
-    if ckpt:
-        save(ckpt, state.params, state.opt_state, int(state.step),
-             {"arch": arch, "engine": engine,
-              "eps": accountant.epsilon() if engine != "nonprivate" else 0.0,
-              "delta": delta})
-    return {"history": history, "sigma": sigma,
-            "final_eps": accountant.epsilon() if engine != "nonprivate" else 0.0,
-            "examples_per_s": examples / (time.time() - t0)}
+          log_every: int = 1, describe: bool = False) -> dict:
+    session = make_session(arch, smoke=smoke, steps=steps, n_data=n_data,
+                           seq_len=seq_len, physical=physical, q=q,
+                           engine=engine, target_eps=target_eps, delta=delta,
+                           clip_norm=clip_norm, lr=lr, optimizer=optimizer,
+                           seed=seed, log_every=log_every)
+    if describe:
+        print(json.dumps(session.describe()))
+    out = session.fit(ckpt=ckpt)
+    for rec in out["history"]:
+        print(json.dumps(rec))
+    return out
 
 
 def main():
@@ -130,6 +79,8 @@ def main():
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--optimizer", default="sgd", choices=["sgd", "adamw"])
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--describe", action="store_true",
+                    help="print the session report before training")
     ap.add_argument("--ckpt")
     args = ap.parse_args()
     out = train(args.arch, smoke=args.smoke, steps=args.steps,
@@ -137,7 +88,7 @@ def main():
                 physical=args.physical, q=args.q, engine=args.engine,
                 target_eps=args.target_eps, clip_norm=args.clip_norm,
                 lr=args.lr, optimizer=args.optimizer, seed=args.seed,
-                ckpt=args.ckpt)
+                ckpt=args.ckpt, describe=args.describe)
     print(json.dumps({"final": out["history"][-1] if out["history"] else {},
                       "sigma": round(out["sigma"], 4),
                       "final_eps": round(out["final_eps"], 4)}))

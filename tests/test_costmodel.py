@@ -36,7 +36,10 @@ def _hlo_flops(model, cfg, shape, engine):
                     (shape.global_batch, shape.seq_len), jnp.int32)}
         mask = jax.ShapeDtypeStruct((shape.global_batch,), jnp.float32)
         c = jax.jit(step).lower(state_shape, batch, mask).compile()
-        return c.cost_analysis().get("flops", 0.0)
+        ca = c.cost_analysis()
+        if isinstance(ca, list):        # jax<0.5: one dict per partition
+            ca = ca[0] if ca else {}
+        return (ca or {}).get("flops", 0.0)
     finally:
         set_scan_unroll(1)
 

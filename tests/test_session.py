@@ -1,0 +1,235 @@
+"""PrivacySession: the unified DP-SGD entry point.
+
+Covers the acceptance criteria of the session refactor:
+  (a) session.step == legacy make_fused_step bit-for-bit on a fixed seed,
+  (b) the engine registry rejects unknown names listing what IS registered,
+  (c) privacy_spent() matches a standalone PrivacyAccountant,
+plus the deprecation shims, describe(), fit(), and checkpoint round-trip.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (DPConfig, PrivacySession, TrainConfig,
+                        available_engines, clipping, init_state,
+                        make_accumulate_fn, make_fused_step, make_update_fn)
+from repro.core.engine import set_grad_constraint
+from repro.models import build_by_name
+from repro.optim import sgd
+from repro.privacy import PrivacyAccountant
+
+
+SEED = 0
+B, T = 4, 8
+
+
+@pytest.fixture(scope="module")
+def setup():
+    model, cfg = build_by_name("qwen2-0.5b", smoke=True)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (B, T), 0,
+                                          cfg.vocab),
+             "labels": jax.random.randint(jax.random.PRNGKey(2), (B, T), 0,
+                                          cfg.vocab)}
+    return model, cfg, batch
+
+
+def _session(engine="masked_pe", **dp_kw):
+    dp = DPConfig(clip_norm=0.1, noise_multiplier=0.7, engine=engine, **dp_kw)
+    tc = TrainConfig(steps=2, n_data=16, q=0.25, seq_len=T, physical_batch=B,
+                     seed=SEED, lr=0.1, optimizer="sgd", momentum=0.0)
+    return PrivacySession.from_config("qwen2-0.5b", dp, tc)
+
+
+def test_session_matches_legacy_fused_step(setup):
+    """(a) the session path and the legacy make_fused_step path are the SAME
+    jitted computation: identical params bit-for-bit after 2 DP steps."""
+    model, cfg, batch = setup
+    mask = jnp.array([1., 1., 0., 1.])
+
+    session = _session("masked_pe")
+    # legacy path, seeded exactly like the session (params: seed, rng: seed+1)
+    dpc = DPConfig(clip_norm=0.1, noise_multiplier=0.7,
+                   expected_batch_size=session.dp.expected_batch_size,
+                   engine="masked_pe")
+    opt = sgd(0.1)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        step = jax.jit(make_fused_step(lambda p, b, t: model.loss(p, b, t),
+                                       opt, dpc))
+    state = init_state(model.init(jax.random.PRNGKey(SEED)), opt,
+                       jax.random.PRNGKey(SEED + 1))
+    for _ in range(2):
+        state, _ = step(state, batch, mask)
+        session.step(batch, mask)
+
+    for a, b in zip(jax.tree.leaves(state.params),
+                    jax.tree.leaves(session.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_registry_rejects_unknown_engine():
+    """(b) unknown engine names fail fast, listing the registered engines."""
+    with pytest.raises(KeyError, match="masked_ghost"):
+        clipping.resolve_engine("totally_bogus")
+    with pytest.raises(KeyError, match="Registered engines"):
+        clipping.ENGINES["totally_bogus"]
+    with pytest.raises(KeyError, match="totally_bogus"):
+        _session("totally_bogus")
+    assert set(available_engines()) >= {"pe", "masked_pe", "masked_ghost",
+                                        "masked_bk"}
+
+
+def test_register_engine_decorator():
+    @clipping.register_engine("_test_engine")
+    def dummy(loss_fn, params, batch, mask, clip_norm, *, constraints=None):
+        return params, {"per_example_norms": mask, "clip_coef": mask}
+    try:
+        assert clipping.resolve_engine("_test_engine") is dummy
+        with pytest.raises(ValueError, match="already registered"):
+            clipping.register_engine("_test_engine")(lambda *a, **k: None)
+    finally:
+        del clipping.ENGINES["_test_engine"]
+
+
+def test_privacy_spent_matches_standalone_accountant(setup):
+    """(c) the session's accounting == PrivacyAccountant driven by hand."""
+    model, cfg, batch = setup
+    mask = jnp.ones(B)
+    session = _session("masked_pe")
+    for _ in range(3):
+        session.step(batch, mask)
+    ref = PrivacyAccountant(delta=session.train_cfg.resolved_delta)
+    ref.step(session.train_cfg.q, session.dp.noise_multiplier, steps=3)
+    eps, delta = session.privacy_spent()
+    assert eps == pytest.approx(ref.epsilon(), rel=1e-12)
+    assert delta == ref.delta
+    assert eps > 0
+
+
+def test_sigma_autocalibration_meets_target():
+    dp = DPConfig(engine="masked_pe")
+    tc = TrainConfig(steps=3, n_data=64, q=0.25, seq_len=T, physical_batch=B,
+                     target_eps=4.0)
+    session = PrivacySession.from_config("qwen2-0.5b", dp, tc)
+    assert session.dp.noise_multiplier > 0
+    traj = session.describe()["expected_eps_trajectory"]
+    assert len(traj) == 3
+    assert traj[-1] <= 4.0 + 1e-3
+    assert traj == sorted(traj)
+
+
+def test_fit_accounts_and_reports(setup):
+    session = _session("masked_pe")
+    out = session.fit()
+    assert len(out["history"]) == 2
+    eps, _ = session.privacy_spent()
+    assert out["final_eps"] == pytest.approx(eps)
+    ref = PrivacyAccountant(delta=session.train_cfg.resolved_delta)
+    ref.step(session.train_cfg.q, session.dp.noise_multiplier, steps=2)
+    assert eps == pytest.approx(ref.epsilon(), rel=1e-12)
+
+
+def test_fit_guards_calibration_and_dataset_size():
+    from repro.data import TokenDataset
+    tc = TrainConfig(steps=2, n_data=16, q=0.25, seq_len=T, physical_batch=B,
+                     target_eps=8.0)
+    session = PrivacySession.from_config("qwen2-0.5b",
+                                         DPConfig(engine="masked_pe"), tc)
+    # more steps than sigma was calibrated for would blow the eps budget
+    with pytest.raises(ValueError, match="calibrated"):
+        session.fit(steps=3)
+    # a dataset whose size disagrees with n_data invalidates q/delta/sigma
+    ds = TokenDataset(8, seq_len=T, vocab=session.model_cfg.vocab)
+    with pytest.raises(ValueError, match="n_data"):
+        session.fit(dataset=ds)
+
+
+def test_nonprivate_session_spends_nothing(setup):
+    model, cfg, batch = setup
+    session = _session("nonprivate")
+    session.step(batch, jnp.ones(B))
+    assert session.privacy_spent()[0] == 0.0
+    assert session.describe()["expected_eps_trajectory"] == []
+
+
+def test_checkpoint_restore_roundtrip(tmp_path, setup):
+    model, cfg, batch = setup
+    session = _session("masked_pe")
+    session.step(batch, jnp.ones(B))
+    session.checkpoint(str(tmp_path / "ck"))
+    restored = PrivacySession.restore(
+        str(tmp_path / "ck"), "qwen2-0.5b", session.dp, session.train_cfg)
+    assert int(restored.state.step) == 1
+    for a, b in zip(jax.tree.leaves(session.params),
+                    jax.tree.leaves(restored.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # accountant re-seated at the checkpointed spend
+    assert restored.privacy_spent()[0] == pytest.approx(
+        session.privacy_spent()[0], rel=1e-12)
+
+
+def test_deprecated_make_fns_warn(setup):
+    model, cfg, batch = setup
+    dpc = DPConfig(clip_norm=0.1, noise_multiplier=0.7,
+                   expected_batch_size=4.0, engine="masked_pe")
+    loss = lambda p, b, t: model.loss(p, b, t)
+    with pytest.warns(DeprecationWarning, match="PrivacySession"):
+        make_fused_step(loss, sgd(0.1), dpc)
+    with pytest.warns(DeprecationWarning, match="PrivacySession"):
+        make_accumulate_fn(loss, dpc)
+    with pytest.warns(DeprecationWarning, match="PrivacySession"):
+        make_update_fn(sgd(0.1), dpc)
+    with pytest.warns(DeprecationWarning, match="ShardingConstraints"):
+        set_grad_constraint(None)
+    with pytest.warns(DeprecationWarning, match="ShardingConstraints"):
+        clipping.set_pe_grad_constraint(None)
+    with pytest.warns(DeprecationWarning, match="ShardingConstraints"):
+        clipping.set_pe_grad_dtype(None)
+
+
+def test_microbatched_clip_coef_nonzero(setup):
+    """Regression: the microbatched path used to report all-zero clip_coef."""
+    from repro.core.engine import _microbatched_clipped_sum
+    model, cfg, batch = setup
+    mask = jnp.ones(B)
+    for mb in (1, 2):
+        dpc = DPConfig(clip_norm=1e-3, noise_multiplier=0.0,
+                       expected_batch_size=4.0, engine="masked_pe",
+                       microbatches=mb)
+        _, aux = _microbatched_clipped_sum(
+            lambda p, b, t: model.loss(p, b, t),
+            model.init(jax.random.PRNGKey(0)), batch, mask, dpc, None)
+        assert aux["clip_coef"].shape == (B,)
+        assert float(jnp.abs(aux["clip_coef"]).sum()) > 0
+
+
+def test_nonprivate_accumulate_is_masked_sum(setup):
+    """Regression: nonprivate accumulate must weight every example equally
+    regardless of how mask counts split across physical batches."""
+    from repro.core import build_accumulate_fn, build_update_fn
+    model, cfg, batch = setup
+    loss = lambda p, b, t: model.loss(p, b, t)
+    dpc = DPConfig(engine="nonprivate", expected_batch_size=4.0)
+    opt = sgd(0.1)
+    acc = jax.jit(build_accumulate_fn(loss, dpc))
+    upd = jax.jit(build_update_fn(opt, dpc))
+
+    # one physical batch of 4 vs two physical batches of 2 (unequal masks)
+    s1 = init_state(model.init(jax.random.PRNGKey(0)), opt,
+                    jax.random.PRNGKey(1))
+    s1, _ = acc(s1, batch, jnp.array([1., 1., 1., 0.]))
+    s1 = upd(s1)
+
+    half = lambda i: jax.tree.map(lambda x: x[2 * i:2 * i + 2], batch)
+    s2 = init_state(model.init(jax.random.PRNGKey(0)), opt,
+                    jax.random.PRNGKey(1))
+    s2, _ = acc(s2, half(0), jnp.array([1., 1.]))
+    s2, _ = acc(s2, half(1), jnp.array([1., 0.]))
+    s2 = upd(s2)
+
+    for a, b in zip(jax.tree.leaves(s1.params), jax.tree.leaves(s2.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-7)
