@@ -13,8 +13,15 @@ from .common import csv_row
 
 from repro.configs.base import SHAPES
 from repro.launch import costmodel
+from repro.launch.executor import LaunchConfig
 from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
 from repro.models import build_by_name
+
+
+def ddp_mesh_shape(chips: int) -> dict:
+    """The DDP scaling mesh, described through the same LaunchConfig the
+    executor layer builds real meshes from (axis dict only — no devices)."""
+    return LaunchConfig(mesh=(chips,), axes=("data",), layout="dp").mesh_shape()
 
 
 def step_time(costs, chips):
@@ -39,11 +46,11 @@ def run(arch="qwen3-1.7b"):
     shape = SHAPES["train_4k"]
     rows = {}
     for eng in ("nonprivate", "masked_ghost"):
-        c1 = costmodel.train_costs(model, cfg, shape, eng, {"data": 1})
+        c1 = costmodel.train_costs(model, cfg, shape, eng, ddp_mesh_shape(1))
         base = shape.global_batch / step_time(c1, 1)
         for chips in (4, 16, 64, 256, 512):
             cn = costmodel.train_costs(model, cfg, shape, eng,
-                                       {"data": chips})
+                                       ddp_mesh_shape(chips))
             thr = shape.global_batch / step_time(cn, chips)
             frac = thr / (base * chips)
             rows[(eng, chips)] = (thr, frac)

@@ -1,4 +1,10 @@
-"""Flat-npz pytree checkpointing with step metadata (no orbax in env)."""
+"""Flat-npz pytree checkpointing with step metadata (no orbax in env).
+
+``meta`` is free-form JSON.  ``PrivacySession.checkpoint`` stores the
+privacy accountant's full state under ``meta["accountant"]`` (delta, alphas
+and the (q, sigma, steps) history) so ``restore`` re-seats the exact RDP
+composition — no constant-(q, sigma) recompose assumption.
+"""
 from __future__ import annotations
 
 import json

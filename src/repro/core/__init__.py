@@ -1,12 +1,12 @@
 from .tape import Tape, LayerSpec, scan_blocks, collect_eps
 from .engine import (DPConfig, TrainState, init_state,
                      build_accumulate_fn, build_update_fn, build_fused_step,
-                     build_eval_fn,
-                     make_accumulate_fn, make_update_fn, make_fused_step,
-                     make_eval_fn)
+                     build_eval_fn)
 from .clipping import (ShardingConstraints, register_engine, resolve_engine,
                        available_engines)
+from . import fused  # noqa: F401  (registers the masked_fused engine)
 from .session import PrivacySession, TrainConfig
+from ..launch.executor import LaunchConfig
 from . import layers, clipping
 
 __all__ = [
@@ -14,9 +14,8 @@ __all__ = [
     "DPConfig", "TrainState", "init_state",
     "build_accumulate_fn", "build_update_fn", "build_fused_step",
     "build_eval_fn",
-    "make_accumulate_fn", "make_update_fn", "make_fused_step", "make_eval_fn",
     "ShardingConstraints", "register_engine", "resolve_engine",
     "available_engines",
-    "PrivacySession", "TrainConfig",
-    "layers", "clipping",
+    "PrivacySession", "TrainConfig", "LaunchConfig",
+    "layers", "clipping", "fused",
 ]

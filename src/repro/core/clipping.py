@@ -22,14 +22,13 @@ Built-in engines:
   * masked_bk      — one pass: the eps-backward's (X, dY) tape is reused to
                      form the clipped summed grads analytically (Bu et al.).
 
-Sharding is passed explicitly via :class:`ShardingConstraints` (the
-``PrivacySession`` path); the module-level ``set_pe_grad_*`` hooks survive
-only as a deprecated fallback for legacy callers.
+Sharding is passed explicitly via :class:`ShardingConstraints` — resolved by
+the executor layer (:mod:`repro.launch.executor`) from the session's
+LaunchConfig, or handed in directly by low-level callers.
 """
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -65,37 +64,11 @@ class ShardingConstraints:
     pe_dtype: Any = None
 
 
-# Deprecated module-global fallbacks (pre-PrivacySession API).
-_PE_GRAD_CONSTRAINT = None
-_PE_GRAD_DTYPE = None
-
-
-def set_pe_grad_constraint(fn) -> None:
-    """Deprecated: pass ShardingConstraints(pe_grad=...) instead."""
-    warnings.warn(
-        "set_pe_grad_constraint is deprecated; pass "
-        "ShardingConstraints(pe_grad=...) to the step builders or "
-        "PrivacySession instead.", DeprecationWarning, stacklevel=2)
-    global _PE_GRAD_CONSTRAINT
-    _PE_GRAD_CONSTRAINT = fn
-
-
-def set_pe_grad_dtype(dt) -> None:
-    """Deprecated: pass ShardingConstraints(pe_dtype=...) instead."""
-    warnings.warn(
-        "set_pe_grad_dtype is deprecated; pass "
-        "ShardingConstraints(pe_dtype=...) to the step builders or "
-        "PrivacySession instead.", DeprecationWarning, stacklevel=2)
-    global _PE_GRAD_DTYPE
-    _PE_GRAD_DTYPE = dt
-
-
 def _pe_hooks(constraints: Optional[ShardingConstraints]):
-    """(pe_grad, pe_dtype) — explicit constraints win; None falls back to
-    the legacy globals so pre-session callers keep working."""
+    """(pe_grad, pe_dtype) from the constraints, if any."""
     if constraints is not None:
         return constraints.pe_grad, constraints.pe_dtype
-    return _PE_GRAD_CONSTRAINT, _PE_GRAD_DTYPE
+    return None, None
 
 
 # ---------------------------------------------------------------------------
@@ -119,14 +92,25 @@ class EngineRegistry(dict):
 ENGINES: "EngineRegistry" = EngineRegistry()
 
 
-def register_engine(name: str, *aliases: str):
+def register_engine(name: str, *aliases: str, materializes_pe: bool = False,
+                    record_based: bool = False):
     """Decorator: register a clipping engine under ``name`` (+ aliases).
 
     An engine is a callable
         fn(loss_fn, params, batch, mask, clip_norm, *, constraints=None)
         -> (summed clipped grads pytree, {"per_example_norms", "clip_coef"})
+
+    Traits (consumed by the executor layer when resolving shardings):
+      materializes_pe — the engine vmaps real (B x params) per-example
+                        gradient buffers, so it needs the pe_grad layout pin
+                        under sharded 2d layouts.
+      record_based    — the engine's backward keeps per-layer (X, dY)
+                        records (ghost/BK style), which sequence-parallel
+                        activation sharding keeps T-sharded.
     """
     def deco(fn):
+        fn.materializes_pe = materializes_pe
+        fn.record_based = record_based
         for key in (name,) + aliases:
             if key in ENGINES and dict.__getitem__(ENGINES, key) is not fn:
                 raise ValueError(f"clipping engine {key!r} already registered")
@@ -154,11 +138,11 @@ def clip_coef(sq_norms, mask, clip_norm):
 # per-example (naive / Opacus-style) — oracle for everything else
 # ---------------------------------------------------------------------------
 
-@register_engine("pe", "masked_pe")
-def per_example_clipped_grads(loss_fn: Callable, params, batch, mask,
-                              clip_norm: float, *,
-                              constraints: ShardingConstraints = None
-                              ) -> Tuple[dict, Aux]:
+def per_example_grads_and_sq(loss_fn: Callable, params, batch,
+                             constraints: ShardingConstraints = None):
+    """vmapped per-example grads (pe_dtype cast + pe_grad pin applied) and
+    their per-example squared norms — shared by every pe-style engine so
+    dtype/constraint semantics cannot diverge between them."""
     pe_constraint, pe_dtype = _pe_hooks(constraints)
 
     def one_loss(p, ex):
@@ -172,6 +156,15 @@ def per_example_clipped_grads(loss_fn: Callable, params, batch, mask,
         grads = pe_constraint(grads)
     sq = sum(jnp.sum(g.reshape(g.shape[0], -1).astype(jnp.float32) ** 2, -1)
              for g in jax.tree.leaves(grads))
+    return grads, sq
+
+
+@register_engine("pe", "masked_pe", materializes_pe=True)
+def per_example_clipped_grads(loss_fn: Callable, params, batch, mask,
+                              clip_norm: float, *,
+                              constraints: ShardingConstraints = None
+                              ) -> Tuple[dict, Aux]:
+    grads, sq = per_example_grads_and_sq(loss_fn, params, batch, constraints)
     coef, norms = clip_coef(sq, mask, clip_norm)
 
     def wsum(g):
@@ -237,7 +230,7 @@ def ghost_norms(loss_fn, params, batch):
     return sq, losses
 
 
-@register_engine("masked_ghost")
+@register_engine("masked_ghost", record_based=True)
 def ghost_clipped_grads(loss_fn: Callable, params, batch, mask,
                         clip_norm: float, *,
                         constraints: ShardingConstraints = None
@@ -256,7 +249,7 @@ def ghost_clipped_grads(loss_fn: Callable, params, batch, mask,
     return summed, {"per_example_norms": norms, "clip_coef": coef}
 
 
-@register_engine("masked_bk")
+@register_engine("masked_bk", record_based=True)
 def bk_clipped_grads(loss_fn: Callable, params, batch, mask,
                      clip_norm: float, check_coverage: bool = False, *,
                      constraints: ShardingConstraints = None

@@ -13,14 +13,11 @@ All step functions are pure; the host-side lifecycle (sampler, memory
 manager, accountant, checkpointing) is owned by
 :class:`repro.core.session.PrivacySession`, which is the supported entry
 point.  The ``build_*`` factories here take sharding constraints explicitly
-(:class:`~repro.core.clipping.ShardingConstraints`); the module-level
-``make_*`` factories and the ``set_grad_constraint`` global survive only as
-deprecated shims.
+(:class:`~repro.core.clipping.ShardingConstraints`).
 """
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax
@@ -38,7 +35,7 @@ class DPConfig:
     clip_norm: float = 1.0
     noise_multiplier: float = 1.0        # sigma
     expected_batch_size: float = 64.0    # L = q * N
-    engine: str = "masked_pe"            # pe|masked_pe|masked_ghost|masked_bk|nonprivate
+    engine: str = "masked_pe"            # pe|masked_pe|masked_fused|masked_ghost|masked_bk|nonprivate
     microbatches: int = 1                # in-step grad accumulation (lax.scan)
 
     @property
@@ -52,27 +49,8 @@ class DPConfig:
         return self
 
 
-# Deprecated module-global fallback (pre-PrivacySession API): constrains
-# summed-gradient sharding to the parameter (FSDP) layout so GSPMD
-# reduce-scatters instead of all-reduce + all-gather per microbatch.
-_GRAD_CONSTRAINT = None
-
-
-def set_grad_constraint(fn) -> None:
-    """Deprecated: pass ShardingConstraints(grad=...) to the step builders
-    or PrivacySession instead."""
-    warnings.warn(
-        "set_grad_constraint is deprecated; pass ShardingConstraints(grad=...) "
-        "to build_fused_step/build_accumulate_fn or PrivacySession instead.",
-        DeprecationWarning, stacklevel=2)
-    global _GRAD_CONSTRAINT
-    _GRAD_CONSTRAINT = fn
-
-
 def _grad_hook(constraints: Optional[ShardingConstraints]):
-    if constraints is not None:
-        return constraints.grad
-    return _GRAD_CONSTRAINT
+    return constraints.grad if constraints is not None else None
 
 
 class TrainState(NamedTuple):
@@ -205,34 +183,3 @@ def build_eval_fn(loss_fn: Callable):
         losses = loss_fn(params, batch, Tape())
         return (losses * mask).sum() / jnp.maximum(mask.sum(), 1)
     return evaluate
-
-
-# ---------------------------------------------------------------------------
-# deprecated shims (pre-PrivacySession API)
-# ---------------------------------------------------------------------------
-
-def _deprecated(name: str) -> None:
-    warnings.warn(
-        f"{name} is deprecated; construct training through "
-        f"repro.core.session.PrivacySession (or the build_* factories for "
-        f"low-level lowering).", DeprecationWarning, stacklevel=3)
-
-
-def make_accumulate_fn(loss_fn: Callable, cfg: DPConfig):
-    _deprecated("make_accumulate_fn")
-    return build_accumulate_fn(loss_fn, cfg)
-
-
-def make_update_fn(optimizer: Optimizer, cfg: DPConfig):
-    _deprecated("make_update_fn")
-    return build_update_fn(optimizer, cfg)
-
-
-def make_fused_step(loss_fn: Callable, optimizer: Optimizer, cfg: DPConfig):
-    _deprecated("make_fused_step")
-    return build_fused_step(loss_fn, optimizer, cfg)
-
-
-def make_eval_fn(loss_fn: Callable):
-    _deprecated("make_eval_fn")
-    return build_eval_fn(loss_fn)

@@ -12,10 +12,16 @@ coherent system; this module is that system's single entry point (the role
     :mod:`repro.core.clipping` (unknown names fail listing what IS registered),
   * the RDP :class:`~repro.privacy.PrivacyAccountant`, with σ auto-calibrated
     from ``target_eps`` when requested,
-  * the optimizer + LR schedule, and
+  * the optimizer + LR schedule,
   * sharding constraints passed explicitly
     (:class:`~repro.core.clipping.ShardingConstraints`) instead of mutable
-    module globals.
+    module globals, and
+  * an :class:`~repro.launch.executor.Executor` resolved from a
+    :class:`~repro.launch.executor.LaunchConfig` — the single place mesh
+    construction, jit shardings and host->device placement happen, shared
+    with the dry-run and serving paths.  ``fit()`` runs sharded when the
+    session is built with ``launch=LaunchConfig(mesh=...)``; "sharded DP-SGD"
+    is a config value, not a separate script.
 
 Quickstart::
 
@@ -40,11 +46,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..data import BatchMemoryManager, PoissonSampler
+from ..launch.executor import LaunchConfig, build_executor
 from ..privacy import PrivacyAccountant, calibrate_sigma
 from ..privacy import rdp as rdp_mod
 from ..optim import (Optimizer, adamw, constant, cosine,
                      linear_warmup_cosine, sgd)
-from .clipping import ShardingConstraints, resolve_engine
+from .clipping import ShardingConstraints
 from .engine import (DPConfig, TrainState, build_accumulate_fn,
                      build_eval_fn, build_fused_step, build_update_fn,
                      init_state)
@@ -108,23 +115,30 @@ class PrivacySession:
                  optimizer: Optimizer = None,
                  constraints: ShardingConstraints = None,
                  accountant: PrivacyAccountant = None,
-                 loss_fn: Callable = None):
+                 loss_fn: Callable = None,
+                 launch: LaunchConfig = None):
         dp.validate()                       # fail fast, listing the registry
         self.model = model
         self.model_cfg = model_cfg
         self.dp = dp
         self.train_cfg = train
+        self.launch = launch if launch is not None else LaunchConfig()
+        self.executor = build_executor(self.launch)
         self.constraints = constraints if constraints is not None \
-            else ShardingConstraints()
+            else self.executor.constraints(dp.engine)
         self.optimizer = optimizer if optimizer is not None \
             else _build_optimizer(train)
         self.accountant = accountant if accountant is not None \
             else PrivacyAccountant(delta=train.resolved_delta)
         self.loss_fn = loss_fn if loss_fn is not None \
             else (lambda p, b, t: model.loss(p, b, t))
+        # model-level activation/expert sharding hints for the training
+        # program — the same hooks the dry-run installs before lowering
+        self.executor.configure_model(model_cfg, "train", train.seq_len,
+                                      train.physical_batch, dp.engine)
         params = model.init(jax.random.PRNGKey(train.seed))
-        self.state: TrainState = init_state(
-            params, self.optimizer, jax.random.PRNGKey(train.seed + 1))
+        self.state: TrainState = self.executor.place_state(init_state(
+            params, self.optimizer, jax.random.PRNGKey(train.seed + 1)))
         self.restored_meta: Optional[dict] = None   # set by restore()
         self._jit_cache: dict = {}
 
@@ -134,14 +148,17 @@ class PrivacySession:
     def from_config(cls, model_cfg, dp_cfg: DPConfig = None,
                     train_cfg: TrainConfig = None, *,
                     constraints: ShardingConstraints = None,
-                    optimizer: Optimizer = None) -> "PrivacySession":
+                    optimizer: Optimizer = None,
+                    launch: LaunchConfig = None) -> "PrivacySession":
         """Build a session from (arch name | ArchConfig, DPConfig, TrainConfig).
 
         When ``train_cfg.target_eps`` is set and the engine is private, σ is
         calibrated so that ``train_cfg.steps`` steps at rate q spend at most
         target_eps at δ; ``dp_cfg.expected_batch_size`` is likewise derived
         from the sampler (L = q·N) so the config cannot disagree with the
-        sampling that actually happens.
+        sampling that actually happens.  ``launch`` selects the executor:
+        ``LaunchConfig(mesh="test")`` runs the same ``fit()`` sharded on a
+        2x2 host-device mesh, ``mesh="production"`` on the 256-chip pod.
         """
         from ..models import build, build_by_name
         dp_cfg = dp_cfg if dp_cfg is not None else DPConfig()
@@ -164,20 +181,26 @@ class PrivacySession:
         dp_cfg = dataclasses.replace(dp_cfg, noise_multiplier=sigma,
                                      expected_batch_size=L)
         return cls(model, cfg, dp_cfg, train_cfg,
-                   optimizer=optimizer, constraints=constraints)
+                   optimizer=optimizer, constraints=constraints,
+                   launch=launch)
 
     @classmethod
     def restore(cls, path: str, model_cfg, dp_cfg: DPConfig = None,
                 train_cfg: TrainConfig = None, **kw) -> "PrivacySession":
-        """from_config + load params (and step/eps metadata) from ``path``."""
+        """from_config + load params (and step/eps/accountant metadata)."""
         from ..checkpoint import restore_into
         session = cls.from_config(model_cfg, dp_cfg, train_cfg, **kw)
         params, step, meta = restore_into(path, session.state.params)
-        session.state = session.state._replace(
-            params=params, step=jnp.asarray(step, jnp.int32))
-        if step and session.dp.private:
-            # re-seat the accountant: the checkpointed steps were taken at
-            # this session's (q, sigma), so replay their composition
+        session.state = session.executor.place_state(session.state._replace(
+            params=params, step=jnp.asarray(step, jnp.int32)))
+        acc_state = (meta or {}).get("accountant")
+        if acc_state is not None:
+            # exact re-seat: the checkpoint carries the full (q, sigma, steps)
+            # history, so restored eps is right even across schedule changes
+            session.accountant = PrivacyAccountant.from_state(acc_state)
+        elif step and session.dp.private:
+            # legacy checkpoint without accountant state: assume the
+            # checkpointed steps were taken at this session's (q, sigma)
             session.accountant.step(session.train_cfg.q,
                                     session.dp.noise_multiplier, steps=step)
         session.restored_meta = meta
@@ -196,17 +219,22 @@ class PrivacySession:
         return self._jit_cache["raw_step"]
 
     def _jitted(self, name: str):
+        """Step functions compiled BY THE EXECUTOR — the same jit/sharding
+        decisions whether the session runs local or on a mesh."""
         if name not in self._jit_cache:
+            ex = self.executor
+            state_shape = jax.eval_shape(lambda: self.state)
             if name == "step":
-                self._jit_cache[name] = jax.jit(self.step_fn)
+                self._jit_cache[name] = ex.jit_step(self.step_fn, state_shape)
             elif name == "accumulate":
-                self._jit_cache[name] = jax.jit(build_accumulate_fn(
-                    self.loss_fn, self.dp, constraints=self.constraints))
+                self._jit_cache[name] = ex.jit_step(build_accumulate_fn(
+                    self.loss_fn, self.dp, constraints=self.constraints),
+                    state_shape)
             elif name == "update":
-                self._jit_cache[name] = jax.jit(build_update_fn(
-                    self.optimizer, self.dp))
+                self._jit_cache[name] = ex.jit_update(build_update_fn(
+                    self.optimizer, self.dp), state_shape)
             elif name == "evaluate":
-                self._jit_cache[name] = jax.jit(build_eval_fn(self.loss_fn))
+                self._jit_cache[name] = ex.jit_eval(build_eval_fn(self.loss_fn))
             else:
                 raise KeyError(name)
         return self._jit_cache[name]
@@ -217,15 +245,29 @@ class PrivacySession:
     def params(self):
         return self.state.params
 
+    def _configure_train(self) -> None:
+        """(Re)install the training-program model-sharding hints.  The hooks
+        are process-wide and jits trace lazily (including shape-triggered
+        retraces), so they are re-installed before every entry point that
+        can trace the training program — generate() installs the decode
+        program's hints the same way."""
+        tc = self.train_cfg
+        self.executor.configure_model(self.model_cfg, "train", tc.seq_len,
+                                      tc.physical_batch, self.dp.engine)
+
     def step(self, batch, mask) -> dict:
         """One logical batch -> one optimizer step (clip + noise + update),
         advancing the privacy accountant."""
+        self._configure_train()
+        batch, mask = self.executor.place(batch, mask)
         self.state, metrics = self._jitted("step")(self.state, batch, mask)
         self._account()
         return metrics
 
     def accumulate(self, batch, mask) -> dict:
         """Clip-and-accumulate one physical batch (no optimizer step)."""
+        self._configure_train()
+        batch, mask = self.executor.place(batch, mask)
         self.state, metrics = self._jitted("accumulate")(self.state, batch,
                                                          mask)
         return metrics
@@ -243,6 +285,8 @@ class PrivacySession:
         if mask is None:
             b0 = jax.tree.leaves(batch)[0]
             mask = jnp.ones(b0.shape[0], jnp.float32)
+        self._configure_train()
+        batch, mask = self.executor.place(batch, mask)
         return float(self._jitted("evaluate")(self.state.params, batch, mask))
 
     def fit(self, dataset=None, steps: int = None, *, ckpt: str = None) -> dict:
@@ -269,24 +313,30 @@ class PrivacySession:
                     f"{tc.n_data}; q, delta and sigma calibration all depend "
                     f"on the population size — rebuild the session with "
                     f"TrainConfig(n_data={n}).")
+        self._configure_train()
         sampler = PoissonSampler(n=tc.n_data, q=tc.q, seed=tc.seed,
                                  steps=steps)
-        bmm = BatchMemoryManager(dataset.fetch, tc.physical_batch)
+        # the memory manager places each physical batch through the executor
+        # as it is produced (host->device/mesh transfer off the step path)
+        bmm = BatchMemoryManager(dataset.fetch, tc.physical_batch,
+                                 place=self.executor.place)
 
         history = []
         t0 = time.time()
         examples = 0
         for step_i, indices in enumerate(sampler):
             for pb in bmm.batches(indices):
-                batch = {k: jnp.asarray(v) for k, v in pb.data.items()}
-                self.accumulate(batch, jnp.asarray(pb.mask))
-                examples += int(pb.mask.sum())
+                # pb is already placed by the memory manager's executor hook;
+                # call the jitted fn directly rather than accumulate(), which
+                # would place a second time
+                self.state, _ = self._jitted("accumulate")(self.state,
+                                                           pb.data, pb.mask)
+            examples += len(indices)    # == sum of masks, without a device->host sync
             self.update()
             if (step_i + 1) % tc.log_every == 0:
                 idx_eval = np.arange(min(tc.physical_batch, tc.n_data))
-                eb = {k: jnp.asarray(v)
-                      for k, v in dataset.fetch(idx_eval).items()}
-                l = self.evaluate(eb, jnp.ones(len(idx_eval), jnp.float32))
+                eb = dataset.fetch(idx_eval)
+                l = self.evaluate(eb, np.ones(len(idx_eval), np.float32))
                 eps = self.privacy_spent()[0]
                 rec = {"step": step_i + 1, "loss": round(l, 4),
                        "eps": round(eps, 4), "logical_batch": len(indices),
@@ -310,7 +360,10 @@ class PrivacySession:
         save(path, self.state.params, self.state.opt_state,
              int(self.state.step),
              {"arch": getattr(self.model_cfg, "name", "?"),
-              "engine": self.dp.engine, "eps": eps, "delta": delta})
+              "engine": self.dp.engine, "eps": eps, "delta": delta,
+              # full (q, sigma, steps) history: restore() replays the exact
+              # composition instead of assuming constant (q, sigma)
+              "accountant": self.accountant.state_dict()})
 
     # -- reporting ----------------------------------------------------------
 
@@ -341,6 +394,7 @@ class PrivacySession:
             "expected_eps_trajectory": traj,
             "eps_spent": self.privacy_spent()[0],
             "optimizer_steps_taken": int(self.state.step),
+            "launch": self.executor.describe(),
         }
 
     # -- serving ------------------------------------------------------------
@@ -368,8 +422,14 @@ class PrivacySession:
         params = self.state.params
         cache = model.init_cache(params, batch, max_len, dtype=jnp.float32,
                                  **extras)
+        cache = self.executor.place_cache(cache, batch)
+        # decode shapes never sequence-shard activations (T=1); installed on
+        # every call since a cached decode jit can retrace on new shapes
+        self.executor.configure_model(cfg, "decode", max_len, batch,
+                                      self.dp.engine)
         if "decode" not in self._jit_cache:
-            self._jit_cache["decode"] = jax.jit(model.decode_step)
+            self._jit_cache["decode"] = self.executor.jit_decode(
+                model.decode_step)
         step = self._jit_cache["decode"]
 
         t0 = time.time()

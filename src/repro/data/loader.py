@@ -16,8 +16,9 @@ import numpy as np
 
 @dataclasses.dataclass
 class PhysicalBatch:
-    data: dict            # pytree of np arrays, leading dim = physical size p
-    mask: np.ndarray      # (p,) float32 0/1
+    data: dict            # pytree of arrays, leading dim = physical size p
+    mask: "np.ndarray"    # (p,) float32 0/1; a placed jax Array when the
+                          # manager was built with an executor place hook
     is_last: bool         # True on the final physical batch of a logical batch
     logical_size: int     # tl of the surrounding logical batch
 
@@ -27,11 +28,18 @@ class BatchMemoryManager:
 
     fetch(indices) -> pytree with leading axis len(indices); padding examples
     re-fetch index 0 but are masked out, so their gradients never contribute.
+
+    ``place`` is the executor's placement hook ``(data, mask) -> (data,
+    mask)``: when given, every physical batch is moved to its device (or
+    mesh sharding) as it is produced, so host->device transfer overlaps the
+    step instead of sitting on its critical path.
     """
 
-    def __init__(self, fetch: Callable[[np.ndarray], dict], physical: int):
+    def __init__(self, fetch: Callable[[np.ndarray], dict], physical: int,
+                 place: Callable = None):
         self.fetch = fetch
         self.p = physical
+        self.place = place
 
     def batches(self, logical_indices: np.ndarray) -> Iterator[PhysicalBatch]:
         tl = len(logical_indices)
@@ -43,9 +51,12 @@ class BatchMemoryManager:
         mask[:tl] = 1.0
         for s in range(k):
             sl = slice(s * self.p, (s + 1) * self.p)
+            data, mk = self.fetch(padded[sl]), mask[sl]
+            if self.place is not None:
+                data, mk = self.place(data, mk)
             yield PhysicalBatch(
-                data=self.fetch(padded[sl]),
-                mask=mask[sl],
+                data=data,
+                mask=mk,
                 is_last=(s == k - 1),
                 logical_size=tl,
             )

@@ -22,7 +22,9 @@ TILE_D = 1024
 
 
 def _kernel(g_ref, norm_ref, mask_ref, c_ref, out_ref):
-    g = g_ref[...]                       # (B, TILE_D)
+    # per-example grads arrive in their storage dtype (f32 or bf16 under
+    # pe_bf16) and are upcast per VMEM tile — no f32 HBM copy upstream
+    g = g_ref[...].astype(jnp.float32)   # (B, TILE_D)
     norms = norm_ref[...]                # (B, 1)
     mask = mask_ref[...]                 # (B, 1)
     c = c_ref[0, 0]
@@ -33,7 +35,7 @@ def _kernel(g_ref, norm_ref, mask_ref, c_ref, out_ref):
 @functools.partial(jax.jit, static_argnames=("interpret", "tile_d"))
 def clip_accum(grads, norms, mask, clip_norm, *, interpret=True,
                tile_d=TILE_D):
-    """grads (B, D) f32; norms (B,); mask (B,); clip_norm scalar -> (D,)."""
+    """grads (B, D) f32/bf16; norms (B,); mask (B,); clip_norm -> (D,) f32."""
     B, D = grads.shape
     pad = (-D) % tile_d
     if pad:
@@ -51,7 +53,7 @@ def clip_accum(grads, norms, mask, clip_norm, *, interpret=True,
         out_specs=pl.BlockSpec((1, tile_d), lambda i: (0, i)),
         out_shape=jax.ShapeDtypeStruct((1, Dp), jnp.float32),
         interpret=interpret,
-    )(grads.astype(jnp.float32),
+    )(grads,
       norms.astype(jnp.float32).reshape(B, 1),
       mask.astype(jnp.float32).reshape(B, 1),
       jnp.asarray(clip_norm, jnp.float32).reshape(1, 1))

@@ -43,8 +43,9 @@ def tree_clip_accum(per_example_grads, norms, mask, clip_norm, *,
     """per_example_grads: pytree with leading B axis -> clipped masked sum."""
     leaves, treedef = jax.tree.flatten(per_example_grads)
     B = leaves[0].shape[0]
-    flat = jnp.concatenate(
-        [l.reshape(B, -1).astype(jnp.float32) for l in leaves], axis=1)
+    # keep the storage dtype (bf16 under pe_bf16): the kernel upcasts per
+    # VMEM tile, so no full f32 HBM copy is materialised here
+    flat = jnp.concatenate([l.reshape(B, -1) for l in leaves], axis=1)
     summed = clip_accum(flat, norms, mask, clip_norm, interpret=interpret)
     out, off = [], 0
     for l in leaves:

@@ -1,5 +1,10 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# force the 512 host devices the production mesh needs, PRESERVING any other
+# user-set XLA flags; tests override by setting their own device count first
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=512"
+                               ).strip()
 
 """Multi-pod dry-run: lower + compile every (arch x input-shape) combination
 on the production mesh, with ShapeDtypeStruct inputs (no allocation).
@@ -8,6 +13,11 @@ For train/prefill shapes this lowers the fused DP-SGD step (clip + noise +
 update); for decode shapes it lowers serve_step (one token against a KV/SSM
 cache of seq_len).  Prints memory_analysis / cost_analysis / collective
 inventory and emits a JSON record consumed by the roofline report.
+
+All mesh construction, sharding resolution and jit plumbing goes through
+:class:`repro.launch.executor.MeshExecutor` — the same code path
+``PrivacySession.fit()`` executes when built with a mesh LaunchConfig, so
+what is lowered here is what runs there.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-0.5b \
@@ -23,16 +33,15 @@ import traceback
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..configs.base import SHAPES, input_specs
-from ..core import DPConfig, ShardingConstraints, build_fused_step, init_state
-from ..core.tape import set_scan_unroll
+from ..core import DPConfig, build_fused_step, init_state
+from ..core.tape import set_remat, set_scan_unroll
 from ..models import build, get_config
 from ..optim import sgd
-from ..utils.sharding import (batch_pspec, cache_shardings, state_shardings)
 from . import costmodel, hlo
-from .mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16, make_production_mesh
+from .executor import LaunchConfig, MeshExecutor
+from .mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
 
 # Skips mandated by the assignment (full-attention archs on long_500k);
 # qwen3 runs it via its sliding-window variant.
@@ -69,12 +78,15 @@ def applicable(arch: str, shape_name: str) -> bool:
     return True
 
 
-def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+def lower_one(arch: str, shape_name: str, *, mesh: str = "production",
               engine: str = None, microbatches: int = None,
               unroll: bool = False, compile_: bool = True,
               layout: str = "2d", ce_chunk: int = 512,
-              pe_bf16: bool = False, remat: bool = False) -> dict:
+              pe_bf16: bool = False, remat: bool = False,
+              smoke: bool = False) -> dict:
     cfg = _arch_config(arch, shape_name)
+    if smoke:
+        cfg = cfg.reduced()
     if ce_chunk and shape_name.startswith("train"):
         cfg = dataclasses.replace(cfg, ce_chunk=ce_chunk)
     if remat or shape_name.startswith("train"):
@@ -82,71 +94,28 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         # record passes keep their records; pass-2/pe backwards recompute)
         cfg = dataclasses.replace(cfg, remat=True)
     shape = SHAPES[shape_name]
-    mesh = make_production_mesh(multi_pod=multi_pod)
-    chips = math.prod(mesh.shape.values())
+    executor = MeshExecutor(LaunchConfig(mesh=mesh, layout=layout,
+                                         pe_bf16=pe_bf16))
+    chips = math.prod(executor.mesh.shape.values())
     model = build(cfg)
     engine = engine or DEFAULT_ENGINE.get(arch, FALLBACK_ENGINE)
     mb = microbatches if microbatches is not None else \
         DEFAULT_MICROBATCH.get(arch, DEFAULT_MB_OTHER)
     set_scan_unroll(cfg.n_layers if unroll else 1)
-    # flash attention from 4k up; sequence-parallel activations for giants so
-    # ghost records stay sharded over 'model' (see DESIGN.md §2.3)
+    # flash attention from 4k up; the executor decides sequence-parallel
+    # activations / expert-parallel dispatch for this layout (see DESIGN.md)
     from ..models import common as cm_mod
     cm_mod.set_flash_min_t(4096)
-    seq_par_ok = (layout in ("2d", "dp_sp") and
-                  (shape.kind == "prefill" or
-                   (shape.kind == "train" and
-                    engine in ("masked_ghost", "masked_bk"))))
-    bp = batch_pspec(mesh, shape.global_batch)
-    bax = bp[0] if len(bp) else None
-    if seq_par_ok and shape.seq_len % mesh.shape["model"] == 0:
-        # sequence parallelism over 'model': block activations — and hence
-        # ghost records / eps / dY buffers — are T-sharded 16-way
-        cm_mod.set_act_sharding(P(bax, "model", None))
-    else:
-        cm_mod.set_act_sharding(None)
-    if cfg.n_experts and layout == "2d":
-        # expert-parallel dispatch buffers (E, B, cap, D)
-        cm_mod.set_expert_sharding(P("model", bax, None, None))
-    else:
-        cm_mod.set_expert_sharding(None)
-
-    # pin per-example gradient shardings (batch over data, param dims per
-    # the usual rules) — otherwise GSPMD replicates B x params buffers
-    from ..utils.sharding import param_pspec
-
-    def pe_constraint(grads):
-        def one(path, g):
-            keys = tuple(getattr(p, "key", getattr(p, "idx", p))
-                         for p in path)
-            ps = param_pspec(keys, g.shape[1:], mesh)
-            # batch axis takes 'data'; param dims keep only 'model' entries
-            ps = [None if e in ("data", "pod") or
-                  (isinstance(e, tuple) and "data" in e) else e for e in ps]
-            return jax.lax.with_sharding_constraint(
-                g, NamedSharding(mesh, P("data", *ps)))
-        return jax.tree_util.tree_map_with_path(one, grads)
-
-    from ..core.tape import set_remat
+    executor.configure_model(cfg, shape.kind, shape.seq_len,
+                             shape.global_batch, engine)
     set_remat(cfg.remat)
 
-    def grad_constraint(g):
-        def one(path, leaf):
-            keys = tuple(getattr(p, "key", getattr(p, "idx", p))
-                         for p in path)
-            return jax.lax.with_sharding_constraint(
-                leaf, NamedSharding(mesh, param_pspec(keys, leaf.shape, mesh)))
-        return jax.tree_util.tree_map_with_path(one, g)
-
-    # sharding constraints flow explicitly into the step builder — no
-    # mutable module globals (see ShardingConstraints)
-    constraints = ShardingConstraints(
-        grad=grad_constraint,
-        pe_grad=pe_constraint if engine in ("pe", "masked_pe") else None,
-        pe_dtype=jnp.bfloat16 if pe_bf16 else None)
+    # sharding constraints resolved by the executor for this layout/engine —
+    # the exact ShardingConstraints a mesh session would train with
+    constraints = executor.constraints(engine)
 
     rec = {"arch": arch, "shape": shape_name, "kind": shape.kind,
-           "mesh": dict(mesh.shape), "engine": engine,
+           "mesh": dict(executor.mesh.shape), "engine": engine,
            "microbatches": mb, "unrolled": bool(unroll)}
     t0 = time.time()
 
@@ -154,10 +123,6 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         # inference prefill: full-sequence forward producing logits
         params_shape = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
         specs = input_specs(cfg, shape)
-        from ..utils.sharding import params_shardings
-        pshard = params_shardings(params_shape, mesh)
-        bspec = NamedSharding(mesh, batch_pspec(mesh, shape.global_batch))
-        bshard = jax.tree.map(lambda _: bspec, specs["batch"])
 
         def prefill_step(params, batch):
             # last-position logits only (XLA pushes the slice into the head
@@ -172,12 +137,10 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
                                         last_only=True)[0]
             return model.logits(params, batch["tokens"], t, last_only=True)
 
-        with mesh:
-            lowered = jax.jit(prefill_step, in_shardings=(pshard, bshard),
-                              out_shardings=bspec).lower(
-                params_shape, specs["batch"])
+        lowered = executor.lower_prefill(prefill_step, params_shape,
+                                         specs["batch"])
         costs = costmodel.train_costs(model, cfg, shape, "nonprivate",
-                                      dict(mesh.shape))
+                                      dict(executor.mesh.shape))
         # forward-only: one pass instead of three
         costs = dataclasses.replace(
             costs, flops=costs.flops / 3.0,
@@ -193,57 +156,28 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             lambda: init_state(model.init(jax.random.PRNGKey(0)), opt,
                                jax.random.PRNGKey(1)))
         specs = input_specs(cfg, shape)
-        if layout in ("dp", "dp_sp"):
-            # pure data parallel: params replicated; batch over every axis
-            # (dp) or over data with sequence-parallel activations (dp_sp) —
-            # the right layouts for models that fit one chip (see §Perf)
-            rep = NamedSharding(mesh, P())
-            axes = tuple(mesh.shape.keys())
-            sshard = jax.tree.map(lambda _: rep, state_shape)
-            bspec = NamedSharding(
-                mesh, P(axes) if layout == "dp" else
-                P(tuple(a for a in axes if a != "model")))
-            # replicated params: GSPMD needs no layout pins
-            constraints = ShardingConstraints(
-                pe_dtype=jnp.bfloat16 if pe_bf16 else None)
-        else:
-            sshard = state_shardings(state_shape, mesh)
-            bspec = NamedSharding(mesh, batch_pspec(mesh, shape.global_batch))
         step = build_fused_step(lambda p, b, t: model.loss(p, b, t), opt, dpc,
                                 constraints=constraints)
-        bshard = jax.tree.map(lambda _: bspec, specs["batch"])
-        mshard = bspec
-        with mesh:
-            lowered = jax.jit(
-                step, in_shardings=(sshard, bshard, mshard),
-                out_shardings=(sshard, None),
-                donate_argnums=(0,)).lower(state_shape, specs["batch"],
-                                           specs["mask"])
-        costs = costmodel.train_costs(model, cfg, shape, engine, dict(mesh.shape))
+        lowered = executor.lower_train(step, state_shape, specs["batch"],
+                                       specs["mask"])
+        costs = costmodel.train_costs(model, cfg, shape, engine,
+                                      dict(executor.mesh.shape))
     else:
         params_shape = jax.eval_shape(
             lambda: model.init(jax.random.PRNGKey(0)))
         cache_shape = jax.eval_shape(
             lambda p: model.init_cache(p, shape.global_batch, shape.seq_len),
             params_shape)
-        from ..utils.sharding import params_shardings
-        pshard = params_shardings(params_shape, mesh)
-        cshard = cache_shardings(cache_shape, mesh, shape.global_batch)
         tok = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
         pos = jax.ShapeDtypeStruct((), jnp.int32)
-        rep = NamedSharding(mesh, P())
-        bspec = NamedSharding(mesh, batch_pspec(mesh, shape.global_batch))
 
         def serve_step(params, cache, tokens, p):
             return model.decode_step(params, cache, tokens, p)
 
-        with mesh:
-            lowered = jax.jit(
-                serve_step,
-                in_shardings=(pshard, cshard, bspec, rep),
-                out_shardings=(bspec, cshard),
-                donate_argnums=(1,)).lower(params_shape, cache_shape, tok, pos)
-        costs = costmodel.decode_costs(model, cfg, shape, dict(mesh.shape))
+        lowered = executor.lower_decode(serve_step, params_shape, cache_shape,
+                                        tok, pos)
+        costs = costmodel.decode_costs(model, cfg, shape,
+                                       dict(executor.mesh.shape))
 
     rec["lower_s"] = round(time.time() - t0, 2)
     if not compile_:
@@ -308,6 +242,10 @@ def main():
     ap.add_argument("--arch")
     ap.add_argument("--shape", choices=list(SHAPES))
     ap.add_argument("--all", action="store_true")
+    ap.add_argument("--mesh", default=None,
+                    choices=["test", "production", "production-multipod"],
+                    help="mesh preset (default: production; --multi-pod "
+                         "selects production-multipod)")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--engine")
     ap.add_argument("--microbatches", type=int)
@@ -316,9 +254,16 @@ def main():
     ap.add_argument("--ce-chunk", type=int, default=512)
     ap.add_argument("--pe-bf16", action="store_true")
     ap.add_argument("--remat", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced model configs (CPU-testable lowering)")
     ap.add_argument("--no-compile", action="store_true")
     ap.add_argument("--out", default=None, help="directory for JSON records")
     args = ap.parse_args()
+    if args.mesh and args.multi_pod and args.mesh != "production-multipod":
+        ap.error(f"--multi-pod conflicts with --mesh {args.mesh}; "
+                 f"pass one or the other")
+    mesh = args.mesh or ("production-multipod" if args.multi_pod
+                         else "production")
 
     from ..models.registry import ARCH_IDS
     combos = []
@@ -333,11 +278,12 @@ def main():
     ok = fail = 0
     for arch, shape in combos:
         try:
-            rec = lower_one(arch, shape, multi_pod=args.multi_pod,
+            rec = lower_one(arch, shape, mesh=mesh,
                             engine=args.engine, microbatches=args.microbatches,
                             unroll=args.unroll, compile_=not args.no_compile,
                             layout=args.layout, ce_chunk=args.ce_chunk,
-                            pe_bf16=args.pe_bf16, remat=args.remat)
+                            pe_bf16=args.pe_bf16, remat=args.remat,
+                            smoke=args.smoke)
             rec["status"] = "ok"
             ok += 1
         except Exception as e:
@@ -349,7 +295,10 @@ def main():
                           if k not in ("analytic",)}, default=str))
         if args.out:
             os.makedirs(args.out, exist_ok=True)
-            tag = "mp" if args.multi_pod else "sp"
+            # sp/mp are the roofline report's buckets; other meshes get
+            # their own tag so they never pollute production records
+            tag = {"production": "sp", "production-multipod": "mp"}.get(
+                mesh, mesh)
             with open(os.path.join(
                     args.out, f"{arch}__{shape}__{tag}.json"), "w") as f:
                 json.dump(rec, f, indent=1, default=str)

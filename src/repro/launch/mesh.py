@@ -18,10 +18,19 @@ def _mesh(shape, axes):
     return jax.make_mesh(shape, axes)
 
 
+def make_mesh(shape, axes):
+    """Public mesh factory (jax<0.5 AxisType compat applied)."""
+    return _mesh(shape, axes)
+
+
+# Production geometry — the single source the executor's mesh presets and
+# make_production_mesh both read.  16x16 = 256 chips/pod; 2 pods multi-pod.
+POD_SHAPE = ((16, 16), ("data", "model"))
+MULTIPOD_SHAPE = ((2, 16, 16), ("pod", "data", "model"))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
-    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    shape, axes = MULTIPOD_SHAPE if multi_pod else POD_SHAPE
     return _mesh(shape, axes)
 
 

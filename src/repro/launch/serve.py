@@ -13,22 +13,26 @@ import json
 
 from ..core import DPConfig
 from ..core.session import PrivacySession, TrainConfig
+from .executor import LaunchConfig
 
 
-def serve_session(arch: str, *, seed: int = 0,
-                  ckpt: str = None) -> PrivacySession:
-    """An inference-only session: nonprivate engine, no training budget."""
+def serve_session(arch: str, *, seed: int = 0, ckpt: str = None,
+                  mesh: str = None) -> PrivacySession:
+    """An inference-only session: nonprivate engine, no training budget.
+    ``mesh`` serves through the MeshExecutor (sharded cache + decode step)."""
     dp = DPConfig(engine="nonprivate")
     tc = TrainConfig(seed=seed, smoke=True)
+    launch = LaunchConfig(mesh=mesh)
     if ckpt:
-        return PrivacySession.restore(ckpt, arch, dp, tc)
-    return PrivacySession.from_config(arch, dp, tc)
+        return PrivacySession.restore(ckpt, arch, dp, tc, launch=launch)
+    return PrivacySession.from_config(arch, dp, tc, launch=launch)
 
 
 def generate(arch: str, *, batch: int = 4, prompt_len: int = 8,
              new_tokens: int = 8, max_len: int = 64, seed: int = 0,
-             greedy: bool = True, ckpt: str = None) -> dict:
-    session = serve_session(arch, seed=seed, ckpt=ckpt)
+             greedy: bool = True, ckpt: str = None,
+             mesh: str = None) -> dict:
+    session = serve_session(arch, seed=seed, ckpt=ckpt, mesh=mesh)
     if not hasattr(session.model, "decode_step"):
         raise SystemExit(f"{arch} has no decode path (encoder-only)")
     return session.generate(batch=batch, prompt_len=prompt_len,
@@ -44,9 +48,12 @@ def main():
     ap.add_argument("--tokens", type=int, default=8)
     ap.add_argument("--ckpt", help="serve params restored from a DP-trained "
                                    "checkpoint instead of a fresh init")
+    ap.add_argument("--mesh", default=None,
+                    help="LaunchConfig mesh preset (e.g. test, production); "
+                         "default: local")
     args = ap.parse_args()
     out = generate(args.arch, batch=args.batch, prompt_len=args.prompt_len,
-                   new_tokens=args.tokens, ckpt=args.ckpt)
+                   new_tokens=args.tokens, ckpt=args.ckpt, mesh=args.mesh)
     print(json.dumps(out))
 
 

@@ -17,6 +17,7 @@ import json
 from ..core import DPConfig
 from ..core.session import PrivacySession, TrainConfig
 from ..data.synthetic import dataset_for_config
+from .executor import LaunchConfig
 
 
 def make_dataset(cfg, n, seq_len, seed=0):
@@ -30,8 +31,13 @@ def make_session(arch: str, *, smoke: bool = True, steps: int = 4,
                  target_eps: float = 8.0, delta: float = None,
                  clip_norm: float = 1.0, lr: float = 1e-3,
                  optimizer: str = "sgd", seed: int = 0,
-                 microbatches: int = 1, log_every: int = 1) -> PrivacySession:
-    """The one place the training CLI wires configs into a PrivacySession."""
+                 microbatches: int = 1, log_every: int = 1,
+                 mesh: str = None, layout: str = "dp") -> PrivacySession:
+    """The one place the training CLI wires configs into a PrivacySession.
+
+    ``mesh`` (a LaunchConfig preset: "test", "production", ...) runs the same
+    fit() sharded through the MeshExecutor — sharded DP-SGD is a config
+    value, not a separate script."""
     dp = DPConfig(clip_norm=clip_norm, engine=engine,
                   microbatches=microbatches)
     tc = TrainConfig(steps=steps, n_data=n_data, seq_len=seq_len,
@@ -39,7 +45,8 @@ def make_session(arch: str, *, smoke: bool = True, steps: int = 4,
                      target_eps=target_eps if engine != "nonprivate" else None,
                      delta=delta, lr=lr, optimizer=optimizer, smoke=smoke,
                      seed=seed, log_every=log_every)
-    return PrivacySession.from_config(arch, dp, tc)
+    launch = LaunchConfig(mesh=mesh, layout=layout)
+    return PrivacySession.from_config(arch, dp, tc, launch=launch)
 
 
 def train(arch: str, *, smoke: bool = True, steps: int = 4, n_data: int = 512,
@@ -47,12 +54,14 @@ def train(arch: str, *, smoke: bool = True, steps: int = 4, n_data: int = 512,
           engine: str = "masked_pe", target_eps: float = 8.0,
           delta: float = None, clip_norm: float = 1.0, lr: float = 1e-3,
           optimizer: str = "sgd", seed: int = 0, ckpt: str = None,
-          log_every: int = 1, describe: bool = False) -> dict:
+          log_every: int = 1, describe: bool = False,
+          mesh: str = None, layout: str = "dp") -> dict:
     session = make_session(arch, smoke=smoke, steps=steps, n_data=n_data,
                            seq_len=seq_len, physical=physical, q=q,
                            engine=engine, target_eps=target_eps, delta=delta,
                            clip_norm=clip_norm, lr=lr, optimizer=optimizer,
-                           seed=seed, log_every=log_every)
+                           seed=seed, log_every=log_every, mesh=mesh,
+                           layout=layout)
     if describe:
         print(json.dumps(session.describe()))
     out = session.fit(ckpt=ckpt)
@@ -73,7 +82,11 @@ def main():
     ap.add_argument("--q", type=float, default=0.25)
     ap.add_argument("--engine", default="masked_pe",
                     choices=["nonprivate", "pe", "masked_pe", "masked_ghost",
-                             "masked_bk"])
+                             "masked_bk", "masked_fused"])
+    ap.add_argument("--mesh", default=None,
+                    help="LaunchConfig mesh preset (e.g. test, production); "
+                         "default: local, unsharded")
+    ap.add_argument("--layout", default="dp", choices=["dp", "dp_sp", "2d"])
     ap.add_argument("--target-eps", type=float, default=8.0)
     ap.add_argument("--clip-norm", type=float, default=1.0)
     ap.add_argument("--lr", type=float, default=1e-3)
@@ -88,7 +101,8 @@ def main():
                 physical=args.physical, q=args.q, engine=args.engine,
                 target_eps=args.target_eps, clip_norm=args.clip_norm,
                 lr=args.lr, optimizer=args.optimizer, seed=args.seed,
-                ckpt=args.ckpt, describe=args.describe)
+                ckpt=args.ckpt, describe=args.describe, mesh=args.mesh,
+                layout=args.layout)
     print(json.dumps({"final": out["history"][-1] if out["history"] else {},
                       "sigma": round(out["sigma"], 4),
                       "final_eps": round(out["final_eps"], 4)}))

@@ -1,7 +1,7 @@
 """Stateful privacy accountant driven by the training loop.
 
-Tracks every optimizer step's (q, sigma) and reports the running (eps, delta)
-under RDP composition.  The sampler guarantees each logical batch really was
+Tracks the (q, sigma, steps) run-length-encoded history of every optimizer
+step and reports the running (eps, delta) under RDP composition.  The sampler guarantees each logical batch really was
 Poisson-subsampled with rate q, so this accounting is valid — the paper's
 "no shortcuts" requirement.
 """
@@ -28,10 +28,36 @@ class PrivacyAccountant:
 
     def step(self, q: float, sigma: float, steps: int = 1) -> None:
         self._rdp = self._rdp + rdp.compose(q, sigma, steps, self.alphas)
-        self.history.append((q, sigma, steps))
+        # run-length encode: per-step calls at constant (q, sigma) coalesce,
+        # so history (and hence the checkpoint payload, and restore's replay
+        # cost) is O(schedule changes), not O(optimizer steps)
+        if self.history and self.history[-1][:2] == (q, sigma):
+            self.history[-1] = (q, sigma, self.history[-1][2] + steps)
+        else:
+            self.history.append((q, sigma, steps))
 
     def epsilon(self) -> float:
         return rdp.rdp_to_eps(self._rdp, self.delta, self.alphas)
 
     def spent(self) -> Tuple[float, float]:
         return self.epsilon(), self.delta
+
+    # -- checkpointing ------------------------------------------------------
+
+    def state_dict(self) -> dict:
+        """JSON-serialisable state: delta, alphas and the full (q, sigma,
+        steps) history.  The RDP vector is NOT stored — from_state replays
+        the composition, so the restored accountant is exactly the one that
+        would exist had the steps been taken in-process."""
+        return {"delta": self.delta,
+                "alphas": [float(a) for a in self.alphas],
+                "history": [[float(q), float(s), int(n)]
+                            for q, s, n in self.history]}
+
+    @classmethod
+    def from_state(cls, state: dict) -> "PrivacyAccountant":
+        acc = cls(delta=float(state["delta"]),
+                  alphas=tuple(state.get("alphas", rdp.DEFAULT_ALPHAS)))
+        for q, sigma, steps in state.get("history", []):
+            acc.step(q, sigma, steps=int(steps))
+        return acc

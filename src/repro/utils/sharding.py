@@ -37,13 +37,15 @@ def _data_axes(mesh: Mesh):
 
 
 def batch_pspec(mesh: Mesh, bsz: int) -> P:
-    ax = [a for a in _data_axes(mesh)]
+    ax = [a for a in _data_axes(mesh) if a in mesh.shape]
+    if not ax:
+        return P()                # no data axes: replicate the batch
     total = 1
     for a in ax:
         total *= mesh.shape[a]
     if bsz % total == 0:
         return P(tuple(ax))
-    if bsz % mesh.shape["data"] == 0:
+    if "data" in mesh.shape and bsz % mesh.shape["data"] == 0:
         return P("data")
     return P()
 
@@ -118,6 +120,38 @@ def state_shardings(state_shape, mesh: Mesh):
         opt_state=opt,
         grad_acc=like_params(state_shape.grad_acc),
         rng=rep, step=rep, seen=rep)
+
+
+def grads_constraint(mesh: Mesh):
+    """Pytree hook pinning the summed (already clipped) gradients to the
+    parameter (FSDP) layout, so GSPMD reduce-scatters instead of
+    all-reduce + all-gather per microbatch.  Feed it to
+    ``ShardingConstraints(grad=...)``."""
+    def apply(grads):
+        def one(path, leaf):
+            keys = tuple(getattr(p, "key", getattr(p, "idx", p)) for p in path)
+            return jax.lax.with_sharding_constraint(
+                leaf, NamedSharding(mesh, param_pspec(keys, leaf.shape, mesh)))
+        return jax.tree_util.tree_map_with_path(one, grads)
+    return apply
+
+
+def pe_grads_constraint(mesh: Mesh):
+    """Pytree hook for vmapped per-example gradients: batch axis over 'data',
+    param dims keep only their 'model' entries — without it GSPMD replicates
+    B x params buffers on the per-example transposes ("involuntary full
+    rematerialization").  Feed it to ``ShardingConstraints(pe_grad=...)``."""
+    def apply(grads):
+        def one(path, g):
+            keys = tuple(getattr(p, "key", getattr(p, "idx", p)) for p in path)
+            ps = param_pspec(keys, g.shape[1:], mesh)
+            # batch axis takes 'data'; param dims keep only 'model' entries
+            ps = [None if e in ("data", "pod") or
+                  (isinstance(e, tuple) and "data" in e) else e for e in ps]
+            return jax.lax.with_sharding_constraint(
+                g, NamedSharding(mesh, P("data", *ps)))
+        return jax.tree_util.tree_map_with_path(one, grads)
+    return apply
 
 
 def cache_pspec(path: Tuple[str, ...], shape: Tuple[int, ...], mesh: Mesh,

@@ -1,8 +1,25 @@
+import subprocess
 import sys
 import os
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+sys.path.insert(0, SRC)
 
 import jax
 
 jax.config.update("jax_enable_x64", False)
+
+
+def run_multidevice_sub(code: str, timeout: int = 900) -> str:
+    """Run a python snippet in a subprocess with 8 CPU host devices.
+
+    jax locks the device count on first init, so multi-device tests cannot
+    run in-process; this is the one place the subprocess discipline lives
+    (XLA flag, PYTHONPATH, returncode assert)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=timeout)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout

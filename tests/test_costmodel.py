@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.configs.base import ArchConfig, InputShape
-from repro.core import DPConfig, Tape, init_state, make_fused_step
+from repro.core import DPConfig, Tape, build_fused_step, init_state
 from repro.core.tape import set_scan_unroll
 from repro.launch import costmodel
 from repro.models import build
@@ -26,7 +26,7 @@ def _hlo_flops(model, cfg, shape, engine):
     try:
         dpc = DPConfig(1.0, 1.0, float(shape.global_batch), engine, 1)
         opt = sgd(1e-3)
-        step = make_fused_step(lambda p, b, t: model.loss(p, b, t), opt, dpc)
+        step = build_fused_step(lambda p, b, t: model.loss(p, b, t), opt, dpc)
         state_shape = jax.eval_shape(
             lambda: init_state(model.init(jax.random.PRNGKey(0)), opt,
                                jax.random.PRNGKey(1)))

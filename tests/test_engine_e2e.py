@@ -5,8 +5,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (DPConfig, Tape, init_state, make_accumulate_fn,
-                        make_fused_step, make_update_fn)
+from repro.core import (DPConfig, Tape, build_accumulate_fn,
+                        build_fused_step, build_update_fn, init_state)
 from repro.launch.train import train
 from repro.models import build_by_name
 from repro.optim import sgd
@@ -29,7 +29,7 @@ def _run_engine(model, params, batch, mask, engine, microbatches=1):
                    expected_batch_size=4.0, engine=engine,
                    microbatches=microbatches)
     opt = sgd(0.1)
-    step = make_fused_step(lambda p, b, t: model.loss(p, b, t), opt, dpc)
+    step = build_fused_step(lambda p, b, t: model.loss(p, b, t), opt, dpc)
     state = init_state(params, opt, jax.random.PRNGKey(42))
     state, _ = step(state, batch, mask)
     return state.params
@@ -64,8 +64,8 @@ def test_accumulate_then_update_equals_fused(setup):
     dpc = DPConfig(clip_norm=0.1, noise_multiplier=0.7,
                    expected_batch_size=4.0, engine="masked_pe")
     opt = sgd(0.1)
-    acc = make_accumulate_fn(lambda p, b, t: model.loss(p, b, t), dpc)
-    upd = make_update_fn(opt, dpc)
+    acc = build_accumulate_fn(lambda p, b, t: model.loss(p, b, t), dpc)
+    upd = build_update_fn(opt, dpc)
     st = init_state(params, opt, jax.random.PRNGKey(42))
     st, _ = acc(st, batch, mask)
     st = upd(st)

@@ -5,15 +5,12 @@ subprocess with xla_force_host_platform_device_count set (the same discipline
 as launch/dryrun.py — and why that env var must NOT be global).
 """
 import json
-import os
-import subprocess
-import sys
 
 import pytest
 
 from jax.sharding import PartitionSpec as P
 
-SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+from conftest import run_multidevice_sub as _run_sub
 
 
 class FakeMesh:
@@ -43,47 +40,28 @@ def test_param_pspec_rules():
     assert param_pspec(("emb", "w"), (100, 8), m) == P("model", "data")
 
 
-def _run_sub(code: str) -> str:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    env["PYTHONPATH"] = SRC
-    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                         text=True, env=env, timeout=600)
-    assert out.returncode == 0, out.stderr[-3000:]
-    return out.stdout
-
-
 @pytest.mark.slow
 def test_small_mesh_train_lowering():
     out = _run_sub(r"""
-import os
-import jax, jax.numpy as jnp, json, dataclasses
-from jax.sharding import NamedSharding, PartitionSpec as P
-from repro.configs.base import ArchConfig, InputShape, input_specs
-from repro.core import DPConfig, init_state, make_fused_step
-from repro.models import build_by_name
+import jax, json, dataclasses
+from repro.configs.base import InputShape, input_specs
+from repro.core import DPConfig, build_fused_step, init_state
+from repro.launch.executor import LaunchConfig, MeshExecutor
+from repro.models import build, build_by_name
 from repro.optim import sgd
-from repro.utils.sharding import state_shardings, batch_pspec
-from repro.launch.mesh import make_test_mesh
 
-mesh = make_test_mesh((4, 2), ("data", "model"))
+ex = MeshExecutor(LaunchConfig(mesh=(4, 2), axes=("data", "model"),
+                               layout="2d"))
 model, cfg = build_by_name("qwen3-1.7b", smoke=True)
 cfg = dataclasses.replace(cfg, vocab=96, d_model=128)
-from repro.models import build
 model = build(cfg)
 dpc = DPConfig(1.0, 1.0, 8.0, "masked_ghost", 2)
 opt = sgd(1e-3)
-step = make_fused_step(lambda p,b,t: model.loss(p,b,t), opt, dpc)
+step = build_fused_step(lambda p,b,t: model.loss(p,b,t), opt, dpc,
+                        constraints=ex.constraints("masked_ghost"))
 state_shape = jax.eval_shape(lambda: init_state(model.init(jax.random.PRNGKey(0)), opt, jax.random.PRNGKey(1)))
-shape = InputShape("t", 16, 8, "train")
-specs = input_specs(cfg, shape)
-sshard = state_shardings(state_shape, mesh)
-bspec = NamedSharding(mesh, batch_pspec(mesh, 8))
-bshard = jax.tree.map(lambda _: bspec, specs["batch"])
-with mesh:
-    c = jax.jit(step, in_shardings=(sshard, bshard, bspec),
-                out_shardings=(sshard, None)).lower(
-        state_shape, specs["batch"], specs["mask"]).compile()
+specs = input_specs(cfg, InputShape("t", 16, 8, "train"))
+c = ex.lower_train(step, state_shape, specs["batch"], specs["mask"]).compile()
 ma = c.memory_analysis()
 ca = c.cost_analysis()
 if isinstance(ca, list):        # jax<0.5: one dict per partition
@@ -99,25 +77,18 @@ print(json.dumps({"ok": True, "temp": ma.temp_size_in_bytes,
 def test_small_mesh_decode_lowering():
     out = _run_sub(r"""
 import jax, jax.numpy as jnp, json
-from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.launch.executor import LaunchConfig, MeshExecutor
 from repro.models import build_by_name
-from repro.utils.sharding import params_shardings, cache_shardings, batch_pspec
-from repro.launch.mesh import make_test_mesh
 
-mesh = make_test_mesh((4, 2), ("data", "model"))
+ex = MeshExecutor(LaunchConfig(mesh=(4, 2), axes=("data", "model"),
+                               layout="2d"))
 model, cfg = build_by_name("mamba2-1.3b", smoke=True)
 params_shape = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
 cache_shape = jax.eval_shape(lambda p: model.init_cache(p, 8, 32), params_shape)
-pshard = params_shardings(params_shape, mesh)
-cshard = cache_shardings(cache_shape, mesh, 8)
 tok = jax.ShapeDtypeStruct((8, 1), jnp.int32)
 pos = jax.ShapeDtypeStruct((), jnp.int32)
-bspec = NamedSharding(mesh, batch_pspec(mesh, 8))
-with mesh:
-    c = jax.jit(model.decode_step,
-                in_shardings=(pshard, cshard, bspec, NamedSharding(mesh, P())),
-                out_shardings=(bspec, cshard)).lower(
-        params_shape, cache_shape, tok, pos).compile()
+c = ex.lower_decode(model.decode_step, params_shape, cache_shape,
+                    tok, pos).compile()
 print(json.dumps({"ok": True}))
 """)
     assert json.loads(out.strip().splitlines()[-1])["ok"]

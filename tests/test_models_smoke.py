@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from repro.configs.base import SHAPES
-from repro.core import DPConfig, Tape, clipping as C, init_state, make_fused_step
+from repro.core import DPConfig, Tape, build_fused_step, clipping as C, init_state
 from repro.models import ARCH_IDS, build_by_name
 from repro.optim import sgd
 
@@ -39,8 +39,8 @@ def test_smoke_forward_and_train_step(arch):
 
     dpc = DPConfig(clip_norm=0.5, noise_multiplier=0.8,
                    expected_batch_size=2.0, engine="masked_pe")
-    step = make_fused_step(lambda p, b, t: model.loss(p, b, t),
-                           sgd(1e-3), dpc)
+    step = build_fused_step(lambda p, b, t: model.loss(p, b, t),
+                            sgd(1e-3), dpc)
     state = init_state(params, sgd(1e-3), jax.random.PRNGKey(1))
     state, metrics = step(state, batch, jnp.ones(2))
     for leaf in jax.tree.leaves(state.params):

@@ -1,22 +1,21 @@
 """PrivacySession: the unified DP-SGD entry point.
 
 Covers the acceptance criteria of the session refactor:
-  (a) session.step == legacy make_fused_step bit-for-bit on a fixed seed,
+  (a) session.step == a directly-built build_fused_step bit-for-bit on a
+      fixed seed,
   (b) the engine registry rejects unknown names listing what IS registered,
   (c) privacy_spent() matches a standalone PrivacyAccountant,
-plus the deprecation shims, describe(), fit(), and checkpoint round-trip.
+plus describe(), fit(), the masked_fused engine parity, and the
+checkpoint round-trips (params AND accountant history).
 """
-import warnings
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import (DPConfig, PrivacySession, TrainConfig,
-                        available_engines, clipping, init_state,
-                        make_accumulate_fn, make_fused_step, make_update_fn)
-from repro.core.engine import set_grad_constraint
+                        available_engines, build_fused_step, clipping,
+                        init_state)
 from repro.models import build_by_name
 from repro.optim import sgd
 from repro.privacy import PrivacyAccountant
@@ -43,22 +42,20 @@ def _session(engine="masked_pe", **dp_kw):
     return PrivacySession.from_config("qwen2-0.5b", dp, tc)
 
 
-def test_session_matches_legacy_fused_step(setup):
-    """(a) the session path and the legacy make_fused_step path are the SAME
+def test_session_matches_direct_fused_step(setup):
+    """(a) the session path and a directly-built fused step are the SAME
     jitted computation: identical params bit-for-bit after 2 DP steps."""
     model, cfg, batch = setup
     mask = jnp.array([1., 1., 0., 1.])
 
     session = _session("masked_pe")
-    # legacy path, seeded exactly like the session (params: seed, rng: seed+1)
+    # direct path, seeded exactly like the session (params: seed, rng: seed+1)
     dpc = DPConfig(clip_norm=0.1, noise_multiplier=0.7,
                    expected_batch_size=session.dp.expected_batch_size,
                    engine="masked_pe")
     opt = sgd(0.1)
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        step = jax.jit(make_fused_step(lambda p, b, t: model.loss(p, b, t),
-                                       opt, dpc))
+    step = jax.jit(build_fused_step(lambda p, b, t: model.loss(p, b, t),
+                                    opt, dpc))
     state = init_state(model.init(jax.random.PRNGKey(SEED)), opt,
                        jax.random.PRNGKey(SEED + 1))
     for _ in range(2):
@@ -171,23 +168,81 @@ def test_checkpoint_restore_roundtrip(tmp_path, setup):
         session.privacy_spent()[0], rel=1e-12)
 
 
-def test_deprecated_make_fns_warn(setup):
+def test_legacy_shims_are_gone():
+    """The deprecated pre-session API was removed outright: constructing
+    training goes through PrivacySession (or the build_* factories)."""
+    import repro.core as core
+    import repro.core.engine as engine_mod
+    for name in ("make_fused_step", "make_accumulate_fn", "make_update_fn",
+                 "make_eval_fn"):
+        assert not hasattr(core, name)
+        assert not hasattr(engine_mod, name)
+    assert not hasattr(engine_mod, "set_grad_constraint")
+    assert not hasattr(clipping, "set_pe_grad_constraint")
+    assert not hasattr(clipping, "set_pe_grad_dtype")
+
+
+def test_masked_fused_matches_masked_pe(setup):
+    """The Pallas fused clip+accumulate engine (interpret mode on CPU) is the
+    same computation as masked_pe: same norms/coefs, same summed grads."""
     model, cfg, batch = setup
-    dpc = DPConfig(clip_norm=0.1, noise_multiplier=0.7,
-                   expected_batch_size=4.0, engine="masked_pe")
+    mask = jnp.array([1., 1., 0., 1.])
     loss = lambda p, b, t: model.loss(p, b, t)
-    with pytest.warns(DeprecationWarning, match="PrivacySession"):
-        make_fused_step(loss, sgd(0.1), dpc)
-    with pytest.warns(DeprecationWarning, match="PrivacySession"):
-        make_accumulate_fn(loss, dpc)
-    with pytest.warns(DeprecationWarning, match="PrivacySession"):
-        make_update_fn(sgd(0.1), dpc)
-    with pytest.warns(DeprecationWarning, match="ShardingConstraints"):
-        set_grad_constraint(None)
-    with pytest.warns(DeprecationWarning, match="ShardingConstraints"):
-        clipping.set_pe_grad_constraint(None)
-    with pytest.warns(DeprecationWarning, match="ShardingConstraints"):
-        clipping.set_pe_grad_dtype(None)
+    params = model.init(jax.random.PRNGKey(SEED))
+    ref_fn = clipping.resolve_engine("masked_pe")
+    got_fn = clipping.resolve_engine("masked_fused")
+    ref, aux_ref = jax.jit(lambda p, b, m: ref_fn(loss, p, b, m, 0.1))(
+        params, batch, mask)
+    got, aux_got = jax.jit(lambda p, b, m: got_fn(loss, p, b, m, 0.1))(
+        params, batch, mask)
+    np.testing.assert_allclose(np.asarray(aux_got["per_example_norms"]),
+                               np.asarray(aux_ref["per_example_norms"]),
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(aux_got["clip_coef"]),
+                               np.asarray(aux_ref["clip_coef"]), rtol=1e-6)
+    for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(got)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-7)
+
+
+def test_masked_fused_session_step(setup):
+    """masked_fused drives a full DP step through the session."""
+    model, cfg, batch = setup
+    session = _session("masked_fused")
+    m = session.step(batch, jnp.ones(B))
+    assert np.isfinite(m["mean_grad_norm"])
+    assert session.privacy_spent()[0] > 0
+
+
+def test_accountant_checkpoint_roundtrip(tmp_path):
+    """The checkpoint carries the accountant's full (q, sigma, steps)
+    history, so restore is exact even when (q, sigma) varied over training —
+    the old recompose-from-step-count assumed they were constant."""
+    acc = PrivacyAccountant(delta=1e-5)
+    acc.step(0.25, 1.1, steps=3)
+    acc.step(0.5, 0.9, steps=2)      # schedule change mid-training
+    acc.step(0.25, 1.3, steps=1)
+    restored = PrivacyAccountant.from_state(acc.state_dict())
+    assert restored.epsilon() == pytest.approx(acc.epsilon(), rel=1e-12)
+    assert restored.history == acc.history
+    assert restored.delta == acc.delta
+
+
+def test_session_restore_reseats_varied_history(tmp_path, setup):
+    """End-to-end: a session whose accountant history is NOT constant
+    (q, sigma) checkpoints and restores to the exact same eps."""
+    model, cfg, batch = setup
+    session = _session("masked_pe")
+    session.step(batch, jnp.ones(B))
+    # an extra composition at a different (q, sigma) — e.g. a manual
+    # schedule change — which recompose-from-step-count could not represent
+    session.accountant.step(0.5, 2.0, steps=1)
+    eps_before = session.privacy_spent()[0]
+    session.checkpoint(str(tmp_path / "ck"))
+    restored = PrivacySession.restore(
+        str(tmp_path / "ck"), "qwen2-0.5b", session.dp, session.train_cfg)
+    assert restored.privacy_spent()[0] == pytest.approx(eps_before, rel=1e-12)
+    assert restored.accountant.history == session.accountant.history
 
 
 def test_microbatched_clip_coef_nonzero(setup):
