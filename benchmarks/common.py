@@ -66,3 +66,14 @@ def make_lm_batch(cfg, B, T, key=0):
 
 def csv_row(name, us_per_call, derived=""):
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def emit_json(filename, payload):
+    """Write a benchmark record to BENCH_<name>.json at the repo root (the
+    bench trajectory the ROADMAP tracks across PRs)."""
+    import json
+    path = os.path.join(os.path.dirname(__file__), "..", filename)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=str)
+    print(f"# wrote {os.path.normpath(path)}")
+    return path

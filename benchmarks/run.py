@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV rows.
   bench_breakdown   -> Table 2           (fwd/bwd/clip/opt section costs)
   bench_scaling     -> Fig. 7 / Fig. A.5 (multi-chip scaling, DP vs SGD)
   bench_batchsize   -> Fig. A.1          (throughput vs physical batch size)
+  bench_serving     -> (beyond the paper) continuous vs static batching
 """
 import sys
 import traceback
@@ -16,12 +17,12 @@ import traceback
 def main() -> None:
     from . import (bench_batchsize, bench_breakdown, bench_memory,
                    bench_precision, bench_recompile, bench_scaling,
-                   bench_throughput)
+                   bench_serving, bench_throughput)
     print("name,us_per_call,derived")
     ok = True
     for mod in (bench_throughput, bench_memory, bench_recompile,
                 bench_precision, bench_breakdown, bench_scaling,
-                bench_batchsize):
+                bench_batchsize, bench_serving):
         try:
             mod.main()
         except Exception:

@@ -399,52 +399,75 @@ class PrivacySession:
 
     # -- serving ------------------------------------------------------------
 
+    def serve_engine(self, *, max_slots: int = 4, max_len: int = 64,
+                     extras: dict = None):
+        """A :class:`~repro.serve.ServeEngine` over the session's CURRENT
+        parameters and executor, cached per (max_slots, max_len) so repeated
+        ``generate()`` calls reuse the compiled decode step.  On reuse the
+        engine is refreshed — post-``fit()`` params AND the cache-pool
+        template they imply (cross-KV caches are precomputed from params/
+        extras, not just zeros)."""
+        from ..serve import ServeEngine
+        key = ("serve", max_slots, max_len)
+        engine = self._jit_cache.get(key)
+        if engine is None:
+            engine = ServeEngine.from_session(self, max_slots=max_slots,
+                                              max_len=max_len, extras=extras)
+            self._jit_cache[key] = engine
+        else:
+            engine.refresh(self.state.params, extras=extras)
+        return engine
+
     def generate(self, *, batch: int = 4, prompt_len: int = 8,
-                 new_tokens: int = 8, max_len: int = 64,
-                 greedy: bool = True) -> dict:
-        """Prefill-by-decode + autoregressive generation with the session's
-        current parameters (e.g. after fit() or restore())."""
-        model, cfg, tc = self.model, self.model_cfg, self.train_cfg
-        if not hasattr(model, "decode_step"):
-            raise ValueError(f"{getattr(cfg, 'name', model)} has no decode "
-                             f"path (encoder-only)")
+                 new_tokens: int = 8, max_len: int = 64, greedy: bool = True,
+                 temperature: float = 1.0, top_k: int = 0) -> dict:
+        """Autoregressive generation with the session's current parameters
+        (e.g. after fit() or restore()) — a thin single-batch wrapper over
+        :class:`~repro.serve.ServeEngine`: ``batch`` synthetic requests are
+        submitted together and drained through the continuous-batching
+        scheduler.  ``greedy=False`` samples at ``temperature`` with
+        optional ``top_k`` truncation, each request on its own PRNG stream
+        (seeded from ``TrainConfig.seed`` + request index)."""
+        from ..serve import Request, SamplingParams
+        cfg, tc = self.model_cfg, self.train_cfg
+        if prompt_len + new_tokens > max_len:
+            raise ValueError(
+                f"prompt_len({prompt_len}) + new_tokens({new_tokens}) "
+                f"exceeds max_len={max_len}: the cache would fill before "
+                f"generation completes (raise max_len)")
         rng = jax.random.PRNGKey(tc.seed + 1)
-        prompt = jax.random.randint(rng, (batch, prompt_len), 0, cfg.vocab)
+        prompt = np.asarray(jax.random.randint(
+            rng, (batch, prompt_len), 0, cfg.vocab))
 
-        extras = {}
-        if cfg.family == "vlm":
-            extras["frontend"] = jax.random.normal(
-                rng, (batch, cfg.n_image_tokens, cfg.frontend_dim)) * 0.1
-        if cfg.family == "audio":
-            extras["frontend"] = jax.random.normal(
-                rng, (batch, cfg.n_audio_frames, cfg.d_model)) * 0.1
+        # synthetic frontends are cached per batch size: the SAME arrays are
+        # handed to serve_engine each call, so engine.refresh() recognises
+        # them and skips rebuilding the cache-pool template (whisper's
+        # init_cache runs a full encoder forward)
+        ekey = ("gen_extras", batch)
+        extras = self._jit_cache.get(ekey)
+        if extras is None:
+            extras = {}
+            if cfg.family == "vlm":
+                extras["frontend"] = jax.random.normal(
+                    rng, (batch, cfg.n_image_tokens, cfg.frontend_dim)) * 0.1
+            if cfg.family == "audio":
+                extras["frontend"] = jax.random.normal(
+                    rng, (batch, cfg.n_audio_frames, cfg.d_model)) * 0.1
+            self._jit_cache[ekey] = extras
 
-        params = self.state.params
-        cache = model.init_cache(params, batch, max_len, dtype=jnp.float32,
-                                 **extras)
-        cache = self.executor.place_cache(cache, batch)
-        # decode shapes never sequence-shard activations (T=1); installed on
-        # every call since a cached decode jit can retrace on new shapes
-        self.executor.configure_model(cfg, "decode", max_len, batch,
-                                      self.dp.engine)
-        if "decode" not in self._jit_cache:
-            self._jit_cache["decode"] = self.executor.jit_decode(
-                model.decode_step)
-        step = self._jit_cache["decode"]
-
+        engine = self.serve_engine(max_slots=batch, max_len=max_len,
+                                   extras=extras or None)
+        temp = 0.0 if greedy else temperature
+        reqs = [Request(prompt=prompt[i].tolist(), max_new_tokens=new_tokens,
+                        sampling=SamplingParams(temperature=temp, top_k=top_k,
+                                                seed=tc.seed + 1 + i))
+                for i in range(batch)]
         t0 = time.time()
-        out_tokens = []
-        tok = prompt[:, :1]
-        for t in range(prompt_len + new_tokens - 1):
-            logits, cache = step(params, cache, tok, jnp.int32(t))
-            if t + 1 < prompt_len:
-                tok = prompt[:, t + 1:t + 2]          # teacher-forced prefill
-            else:
-                nxt = jnp.argmax(logits, -1) if greedy else \
-                    jax.random.categorical(jax.random.fold_in(rng, t), logits)
-                tok = nxt[:, None].astype(jnp.int32)
-                out_tokens.append(np.asarray(nxt))
-        dt = time.time() - t0
-        gen = np.stack(out_tokens, 1)
-        return {"generated": gen.tolist(),
-                "tokens_per_s": round(batch * (prompt_len + new_tokens) / dt, 1)}
+        out = engine.run(reqs)
+        dt = max(time.time() - t0, 1e-9)
+        by_rid = {r["rid"]: r["generated"] for r in out["results"]}
+        first = min(by_rid)
+        return {"generated": [by_rid[first + i] for i in range(batch)],
+                "tokens_per_s": round(batch * (prompt_len + new_tokens) / dt, 1),
+                "iterations": out["iterations"],
+                "occupancy": out["occupancy"]}

@@ -169,7 +169,8 @@ def lower_one(arch: str, shape_name: str, *, mesh: str = "production",
             lambda p: model.init_cache(p, shape.global_batch, shape.seq_len),
             params_shape)
         tok = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
-        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        # per-slot position vector — the shape the serving engine decodes with
+        pos = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
 
         def serve_step(params, cache, tokens, p):
             return model.decode_step(params, cache, tokens, p)

@@ -1,23 +1,38 @@
-"""Batched serving driver: prefill-by-decode + autoregressive generation on a
-reduced config (CPU), through the same :class:`PrivacySession` that owns
-training — so serving a DP-trained checkpoint is one restore() away.
+"""Serving driver: the :class:`~repro.serve.ServeEngine` CLI.
+
+Serving goes through the same :class:`PrivacySession` that owns training —
+a DP-trained checkpoint is one ``restore()`` away — and through the same
+executor, so ``--mesh test`` runs the scheduler's fused decode step sharded.
+
+Two modes:
+
+  * default      — ``batch`` synthetic requests through ``session.generate``
+                   (itself a thin wrapper over the engine),
+  * --requests N — replay a synthetic request trace with mixed prompt/output
+                   lengths through the continuous-batching scheduler
+                   (``--batch`` is the slot count), reporting throughput and
+                   per-request latency.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --tokens 12
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --ckpt /tmp/ck
+  PYTHONPATH=src python -m repro.launch.serve --requests 32 --batch 8 \
+      --max-len 96 --temperature 0.8 --top-k 20 --mesh test
 """
 from __future__ import annotations
 
 import argparse
 import json
 
+import numpy as np
+
 from ..core import DPConfig
 from ..core.session import PrivacySession, TrainConfig
 from .executor import LaunchConfig
 
 
-def serve_session(arch: str, *, seed: int = 0, ckpt: str = None,
-                  mesh: str = None) -> PrivacySession:
+def serve_session(arch: str, *, seed: int = 0, ckpt: str | None = None,
+                  mesh: str | None = None) -> PrivacySession:
     """An inference-only session: nonprivate engine, no training budget.
     ``mesh`` serves through the MeshExecutor (sharded cache + decode step)."""
     dp = DPConfig(engine="nonprivate")
@@ -30,30 +45,100 @@ def serve_session(arch: str, *, seed: int = 0, ckpt: str = None,
 
 def generate(arch: str, *, batch: int = 4, prompt_len: int = 8,
              new_tokens: int = 8, max_len: int = 64, seed: int = 0,
-             greedy: bool = True, ckpt: str = None,
-             mesh: str = None) -> dict:
+             greedy: bool = True, temperature: float = 1.0, top_k: int = 0,
+             ckpt: str | None = None, mesh: str | None = None) -> dict:
     session = serve_session(arch, seed=seed, ckpt=ckpt, mesh=mesh)
     if not hasattr(session.model, "decode_step"):
         raise SystemExit(f"{arch} has no decode path (encoder-only)")
     return session.generate(batch=batch, prompt_len=prompt_len,
                             new_tokens=new_tokens, max_len=max_len,
-                            greedy=greedy)
+                            greedy=greedy, temperature=temperature,
+                            top_k=top_k)
+
+
+def synthetic_trace(n: int, vocab: int, max_len: int, seed: int = 0,
+                    temperature: float = 0.0, top_k: int = 0,
+                    profile: str = "mixed"):
+    """A mixed-length request trace — the workload continuous batching
+    exists for.  ``profile="mixed"`` draws uniform prompt/output lengths;
+    ``"bimodal"`` is mostly short chat turns with every 4th request a long
+    completion (the distribution static batching pads worst — the
+    benchmark's trace)."""
+    from ..serve import Request, SamplingParams
+    rng = np.random.RandomState(seed)
+    reqs = []
+    for i in range(n):
+        if profile == "bimodal":
+            pl = int(rng.randint(2, 9))
+            nt = (int(rng.randint(3 * max_len // 4, max_len - pl))
+                  if i % 4 == 3 else int(rng.randint(2, 9)))
+        else:
+            lo = max(2, max_len // 16)
+            pl = int(rng.randint(lo, max(lo + 1, max_len // 3)))
+            nt = int(rng.randint(1, max(2, max_len - pl)))
+        reqs.append(Request(
+            prompt=rng.randint(0, vocab, size=pl).tolist(),
+            max_new_tokens=nt,
+            sampling=SamplingParams(temperature=temperature, top_k=top_k,
+                                    seed=seed + i)))
+    return reqs
+
+
+def replay(arch: str, *, requests: int, max_slots: int = 8,
+           max_len: int = 64, seed: int = 0, temperature: float = 0.0,
+           top_k: int = 0, ckpt: str | None = None,
+           mesh: str | None = None) -> dict:
+    """Replay a synthetic trace through the continuous-batching scheduler."""
+    session = serve_session(arch, seed=seed, ckpt=ckpt, mesh=mesh)
+    engine = session.serve_engine(max_slots=max_slots, max_len=max_len)
+    reqs = synthetic_trace(requests, session.model_cfg.vocab, max_len,
+                           seed=seed, temperature=temperature, top_k=top_k)
+    from ..serve import latency_percentiles
+    out = engine.run(reqs)
+    out["latency_p50_s"], out["latency_p95_s"] = latency_percentiles(
+        out["results"])
+    out["results"] = [{k: v for k, v in r.items() if k != "generated"}
+                      for r in out["results"]]     # keep the report readable
+    return out
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-1.7b")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="generate(): request count; --requests mode: the "
+                         "engine's slot count")
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--tokens", type=int, default=8)
+    ap.add_argument("--max-len", type=int, default=64,
+                    help="cache capacity per slot (tokens)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy; > 0 samples per request")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="truncate sampling to the k most likely tokens")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--requests", type=int, default=None,
+                    help="replay a synthetic N-request trace through the "
+                         "continuous-batching scheduler instead of one "
+                         "fixed batch")
     ap.add_argument("--ckpt", help="serve params restored from a DP-trained "
                                    "checkpoint instead of a fresh init")
     ap.add_argument("--mesh", default=None,
                     help="LaunchConfig mesh preset (e.g. test, production); "
                          "default: local")
     args = ap.parse_args()
-    out = generate(args.arch, batch=args.batch, prompt_len=args.prompt_len,
-                   new_tokens=args.tokens, ckpt=args.ckpt, mesh=args.mesh)
+    if args.requests:
+        out = replay(args.arch, requests=args.requests, max_slots=args.batch,
+                     max_len=args.max_len, seed=args.seed,
+                     temperature=args.temperature, top_k=args.top_k,
+                     ckpt=args.ckpt, mesh=args.mesh)
+    else:
+        out = generate(args.arch, batch=args.batch,
+                       prompt_len=args.prompt_len, new_tokens=args.tokens,
+                       max_len=args.max_len, seed=args.seed,
+                       greedy=args.temperature == 0.0,
+                       temperature=args.temperature, top_k=args.top_k,
+                       ckpt=args.ckpt, mesh=args.mesh)
     print(json.dumps(out))
 
 

@@ -139,6 +139,22 @@ class AttnCfg:
     window: int = 0          # 0 = full; >0 = sliding window (and ring cache)
 
 
+def decode_positions(pos, B: int):
+    """Normalise a decode position argument to a (B,) int32 vector.
+
+    Scalar pos means the whole batch decodes in lockstep (the pre-serving
+    contract); a (B,) vector gives every cache slot its own write position
+    (continuous batching).
+    """
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        return jnp.broadcast_to(pos, (B,))
+    if pos.shape != (B,):
+        raise ValueError(f"decode pos must be scalar or shape ({B},); "
+                         f"got {pos.shape}")
+    return pos
+
+
 def attn_params(key, d_model: int, a: AttnCfg):
     ks = jax.random.split(key, 6)
     p = {
@@ -190,8 +206,10 @@ def attention(tape: Tape, scope: str, path: str, p, x, a: AttnCfg, *,
     """Self or cross attention.
 
     Training: positions (B,T) (or None for bidirectional), cache None.
-    Decode: x (B,1,D), cache {'k','v'} (B,S,Hkv,Dh) (+ 'pos_map' for ring
-    buffers); pos scalar int32 current position. Returns (out, new_cache).
+    Decode: x (B,1,D), cache {'k','v'} (B,S,Hkv,Dh); pos int32 current
+    position — a scalar (whole batch in lockstep) or a (B,) vector of
+    per-sequence positions (continuous batching: each cache slot holds an
+    independent request at its own depth). Returns (out, new_cache).
     """
     B, T, _ = x.shape
     H, Hkv, Dh = a.n_heads, a.n_kv_heads, a.head_dim
@@ -217,27 +235,28 @@ def attention(tape: Tape, scope: str, path: str, p, x, a: AttnCfg, *,
         o = _sdpa(q.reshape(B, T, Hkv, G, Dh), k, v, mask)
     elif cache is not None:
         # decode self-attention: project 1 token, write into the (ring) cache
+        posb = decode_positions(pos, B)                    # (B,) int32
         k1, v1 = proj("wk", x), proj("wv", x)
         q, k1 = _qk_normalize(tape, scope, path, p, q, k1, a)
         if a.use_rope:
-            pp = jnp.full((B, T), pos, jnp.int32)
+            pp = jnp.broadcast_to(posb[:, None], (B, T))
             q = apply_rope(q, pp, a.rope_theta)
             k1 = apply_rope(k1, pp, a.rope_theta)
         S = cache["k"].shape[1]
-        slot = (pos % S) if a.window else pos
-        ck = jax.lax.dynamic_update_slice(cache["k"], k1.astype(cache["k"].dtype),
-                                          (0, slot, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cache["v"], v1.astype(cache["v"].dtype),
-                                          (0, slot, 0, 0))
+        slot = (posb % S) if a.window else posb            # (B,)
+        rows = jnp.arange(B)
+        ck = cache["k"].at[rows, slot].set(k1[:, 0].astype(cache["k"].dtype))
+        cv = cache["v"].at[rows, slot].set(v1[:, 0].astype(cache["v"].dtype))
         new_cache = dict(cache)
         new_cache["k"], new_cache["v"] = ck, cv
-        sl = jnp.arange(S)
+        sl = jnp.arange(S)[None, :]                        # (1,S)
+        pc = posb[:, None]                                 # (B,1)
         if a.window:
-            orig = pos - jnp.mod(pos - sl, S)   # original position in ring slot
-            valid = (orig >= 0) & (orig <= pos) & (orig > pos - a.window)
+            orig = pc - jnp.mod(pc - sl, S)     # original position in ring slot
+            valid = (orig >= 0) & (orig <= pc) & (orig > pc - a.window)
         else:
-            valid = sl <= pos
-        mask = jnp.broadcast_to(valid[None, None, :], (B, T, S))
+            valid = sl <= pc                               # (B,S)
+        mask = jnp.broadcast_to(valid[:, None, :], (B, T, S))
         o = _sdpa(q.reshape(B, T, Hkv, G, Dh), ck, cv, mask)
     else:
         # full-sequence self attention (training / prefill)

@@ -78,15 +78,17 @@ def mla_attention(tape: Tape, scope: str, path: str, p, x, cfg: ArchConfig,
 
 
 def mla_decode(p, x, cfg: ArchConfig, cache, pos):
-    """Absorbed-matmul single-token decode against the (c, k_rope) cache."""
+    """Absorbed-matmul single-token decode against the (c, k_rope) cache.
+    ``pos`` is a scalar or a (B,) vector of per-slot positions."""
     B, T, D = x.shape
     H = cfg.n_heads
     nope, vh, rd = _dims(cfg)
     r = cfg.kv_lora
+    posb = cm.decode_positions(pos, B)                     # (B,)
 
     q = (x @ p["wq"]["w"]).reshape(B, T, H, nope + rd)
     q_nope, q_rope = q[..., :nope], q[..., nope:]
-    pp = jnp.full((B, T), pos, jnp.int32)
+    pp = jnp.broadcast_to(posb[:, None], (B, T))
     q_rope = cm.apply_rope(q_rope, pp, cfg.rope_theta)
 
     c1 = x @ p["wdkv"]["w"]
@@ -96,11 +98,10 @@ def mla_decode(p, x, cfg: ArchConfig, cache, pos):
     kr1 = (x @ p["wkr"]["w"]).reshape(B, T, 1, rd)
     kr1 = cm.apply_rope(kr1, pp, cfg.rope_theta)
 
-    cc = jax.lax.dynamic_update_slice(cache["c"], c1.astype(cache["c"].dtype),
-                                      (0, pos, 0))
-    ckr = jax.lax.dynamic_update_slice(cache["kr"],
-                                       kr1[:, :, 0].astype(cache["kr"].dtype),
-                                       (0, pos, 0))
+    rows = jnp.arange(B)
+    cc = cache["c"].at[rows, posb].set(c1[:, 0].astype(cache["c"].dtype))
+    ckr = cache["kr"].at[rows, posb].set(
+        kr1[:, 0, 0].astype(cache["kr"].dtype))
     S = cc.shape[1]
 
     wukv = p["wukv"]["w"].reshape(r, H, nope + vh)
@@ -111,8 +112,8 @@ def mla_decode(p, x, cfg: ArchConfig, cache, pos):
     s = (jnp.einsum("bthr,bsr->bhts", q_c, cc.astype(jnp.float32))
          + jnp.einsum("bthd,bsd->bhts", q_rope.astype(jnp.float32),
                       ckr.astype(jnp.float32))) * (nope + rd) ** -0.5
-    valid = jnp.arange(S) <= pos
-    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    valid = jnp.arange(S)[None, :] <= posb[:, None]        # (B,S)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
     a = jax.nn.softmax(s, axis=-1)
     ctx = jnp.einsum("bhts,bsr->bthr", a, cc.astype(jnp.float32))
     o = jnp.einsum("bthr,rhd->bthd", ctx, w_uv.astype(jnp.float32))

@@ -76,7 +76,9 @@ class DenseLM:
             lambda a: jnp.broadcast_to(a, (L_,) + a.shape), c)}
 
     def decode_step(self, params, cache, tokens, pos):
-        """One-token decode: tokens (B,1) -> (logits (B,V), new cache)."""
+        """One-token decode: tokens (B,1) -> (logits (B,V), new cache).
+        ``pos`` is a scalar (lockstep batch) or a (B,) vector of per-slot
+        positions (continuous batching — see repro.serve)."""
         cfg = self.cfg
         tape = Tape()
         x = L.embed(tape, "emb", tokens, params["emb"]["w"], param_path="emb.w")

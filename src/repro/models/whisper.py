@@ -145,8 +145,8 @@ class WhisperLM:
     def decode_step(self, params, cache, tokens, pos):
         cfg = self.cfg
         x = jnp.take(params["emb"]["w"], tokens, axis=0).astype(cfg.act_dtype)
-        x = x + sinusoid(jnp.full((1,), pos, jnp.int32),
-                         cfg.d_model)[None].astype(x.dtype)
+        posb = cm.decode_positions(pos, tokens.shape[0])
+        x = x + sinusoid(posb[:, None], cfg.d_model).astype(x.dtype)
 
         def step(carry, xs):
             p, sc, cc = xs

@@ -1,0 +1,27 @@
+"""Request-level serving: continuous batching + slot-based KV-cache pool.
+
+The ROADMAP's "heavy traffic" north star needs more than a one-shot batched
+``generate()`` — this package turns the per-arch ``init_cache``/
+``decode_step`` primitives into a serving engine:
+
+  * :mod:`~repro.serve.request`    — Request / SamplingParams / RequestState
+  * :mod:`~repro.serve.cache_pool` — one (max_slots, max_len) cache, per-slot
+                                     insert/evict/reset, [B] position vector
+  * :mod:`~repro.serve.sampling`   — fused per-request greedy/temperature/
+                                     top-k token selection
+  * :mod:`~repro.serve.scheduler`  — Orca-style iteration-level continuous
+                                     batching with mid-flight admission and
+                                     retirement
+  * :mod:`~repro.serve.engine`     — ServeEngine.from_session: the pool +
+                                     scheduler wired through the executor
+                                     (local or mesh)
+"""
+from .cache_pool import CachePool
+from .engine import ServeEngine, latency_percentiles
+from .request import Request, RequestState, SamplingParams
+from .sampling import sample_tokens
+from .scheduler import Scheduler
+
+__all__ = ["CachePool", "ServeEngine", "Request", "RequestState",
+           "SamplingParams", "Scheduler", "latency_percentiles",
+           "sample_tokens"]

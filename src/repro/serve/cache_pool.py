@@ -1,0 +1,182 @@
+"""Slot-based KV-cache pool.
+
+The pool allocates the model's decode cache ONCE at ``(max_slots, max_len)``
+— via ``model.init_cache`` and the executor's cache placement, so it is
+sharded exactly like a ``session.generate`` cache — and then serves requests
+out of its batch rows ("slots") without ever reallocating or retracing:
+
+  * :meth:`insert`  — claim a free slot for a new request,
+  * :meth:`reset`   — make the claimed slots safe for their new occupant so
+                      no KV/state leaks from the previous one: accumulating
+                      leaves (SSM state/conv, ring buffers, cross-KV) are
+                      restored to the template; position-masked KV rows need
+                      nothing (stale entries are masked dead — reads stop at
+                      the new occupant's own write position),
+  * :meth:`evict`   — return a finished request's slot to the free list.
+
+Per-slot write positions live in the host-side ``positions`` vector (one
+int32 per slot), synced from the scheduler's request states each iteration —
+the ``[B]`` position argument ``decode_step`` consumes.
+
+The batch axis of every cache leaf is detected structurally — ``init_cache``
+is probed (abstractly, via ``jax.eval_shape``) at two batch sizes and the
+axis that changes is the batch axis — so the pool works for any arch's cache
+layout: stacked ``(L, B, S, H, D)`` KV, zamba2's ``(n_super, attn_every, B,
+...)`` SSM states, MLA's ``(L, B, S, r)`` latents, whisper/VLM cross-KV.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _probe_cache_shapes(model, params, n_slots: int, max_len: int, dtype,
+                        extras: Dict):
+    """Abstract init_cache shapes at batch size ``n_slots`` (no allocation)."""
+    ex = {k: jax.ShapeDtypeStruct((n_slots,) + jnp.shape(v)[1:],
+                                  jnp.asarray(v).dtype)
+          for k, v in extras.items()}
+    return jax.eval_shape(
+        lambda p, e: model.init_cache(p, n_slots, max_len, dtype=dtype, **e),
+        params, ex)
+
+
+def detect_batch_axes(model, params, max_len: int, dtype, extras: Dict):
+    """Per-leaf batch axis of the decode cache, found by probing init_cache
+    at two batch sizes and diffing the shapes.  Returns a flat list aligned
+    with ``jax.tree.leaves`` order."""
+    s2 = jax.tree.leaves(_probe_cache_shapes(model, params, 2, max_len,
+                                             dtype, extras))
+    s3 = jax.tree.leaves(_probe_cache_shapes(model, params, 3, max_len,
+                                             dtype, extras))
+    axes: List[int] = []
+    for a, b in zip(s2, s3):
+        diff = [i for i, (x, y) in enumerate(zip(a.shape, b.shape)) if x != y]
+        if len(diff) != 1:
+            raise ValueError(
+                f"cache leaf {a.shape} has no unique batch axis (diff vs "
+                f"{b.shape}: {diff}); the slot pool needs per-slot rows in "
+                f"every cache leaf")
+        axes.append(diff[0])
+    return axes
+
+
+def detect_reset_leaves(model, params, max_len: int, dtype, extras: Dict):
+    """Which cache leaves need a template restore on slot reuse.
+
+    Position-indexed KV leaves — detected structurally: their shape changes
+    with ``max_len`` — do NOT: decode writes position ``pos`` and attention
+    masks reads to ``<= pos``, so every visible entry was written by the
+    slot's current occupant and stale rows are dead by construction.
+    Everything else (SSM state and conv tails, which accumulate; ring
+    buffers and cross-KV, whose size is max_len-independent) is restored.
+    Returns a flat bool list aligned with ``jax.tree.leaves`` order.
+    """
+    sa = jax.tree.leaves(_probe_cache_shapes(model, params, 2, max_len,
+                                             dtype, extras))
+    sb = jax.tree.leaves(_probe_cache_shapes(model, params, 2, max_len + 1,
+                                             dtype, extras))
+    return [a.shape == b.shape for a, b in zip(sa, sb)]
+
+
+class CachePool:
+    """A fixed pool of ``max_slots`` independent decode-cache rows."""
+
+    def __init__(self, model, params, max_slots: int, max_len: int, *,
+                 executor=None, dtype=jnp.float32, extras: Dict = None):
+        if executor is None:
+            from ..launch.executor import build_executor
+            executor = build_executor(None)
+        self.max_slots = int(max_slots)
+        self.max_len = int(max_len)
+        self.extras = dict(extras or {})
+        for k, v in self.extras.items():
+            if jnp.shape(v)[0] != self.max_slots:
+                raise ValueError(
+                    f"extras[{k!r}] has leading dim {jnp.shape(v)[0]}, "
+                    f"expected max_slots={self.max_slots} (per-request "
+                    f"frontends are not supported yet)")
+        self._batch_axes = detect_batch_axes(model, params, max_len, dtype,
+                                             self.extras)
+        self._needs_reset = detect_reset_leaves(model, params, max_len,
+                                                dtype, self.extras)
+        cache = model.init_cache(params, self.max_slots, self.max_len,
+                                 dtype=dtype, **self.extras)
+        # the template holds each slot's pristine row (zeros for SSM state,
+        # precomputed cross-KV for encoder-decoder archs); reset copies it
+        # back per slot.  Only the needs-reset leaves are retained — the big
+        # position-masked KV buffers are dropped (no second cache's worth of
+        # memory) because stale rows there are masked dead anyway.  The
+        # retained leaves are COPIES: the executor's decode jit donates the
+        # cache argument off-CPU, which would delete aliased template
+        # buffers on the first decode call.
+        self.cache = executor.place_cache(cache, self.max_slots)
+        self._template_leaves = [
+            jnp.copy(leaf) for leaf, need in
+            zip(jax.tree.leaves(self.cache), self._needs_reset) if need]
+        self.positions = np.zeros(self.max_slots, np.int32)
+        self._free: List[int] = list(range(self.max_slots))
+        self._reset_jit = jax.jit(self._reset_fn)
+
+    # -- slot lifecycle -----------------------------------------------------
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def insert(self) -> Optional[int]:
+        """Claim a free slot (lowest index first); None when full.  The
+        caller must :meth:`reset` the slot before decoding into it."""
+        if not self._free:
+            return None
+        self._free.sort()
+        slot = self._free.pop(0)
+        self.positions[slot] = 0
+        return slot
+
+    def evict(self, slot: int) -> None:
+        """Return a slot to the free list (its stale rows are cleared by the
+        reset that precedes the next insert)."""
+        if slot in self._free:
+            raise ValueError(f"slot {slot} is already free")
+        self._free.append(slot)
+        self.positions[slot] = 0
+
+    def reset(self, slots: Sequence[int]) -> None:
+        """Make ``slots`` safe for a new occupant, batched across all newly
+        admitted slots in one jitted select (no retracing: the mask is a
+        runtime argument).  Leaves that accumulate (SSM state/conv, ring
+        buffers, cross-KV) are restored to the template; position-masked KV
+        rows are left as-is — their stale entries are unreachable (see
+        :func:`detect_reset_leaves`), so a pure-KV arch resets for free."""
+        if not len(slots):
+            return
+        for s in slots:
+            self.positions[s] = 0
+        if not self._template_leaves:
+            return
+        mask = np.zeros(self.max_slots, bool)
+        mask[list(slots)] = True
+        self.cache = self._reset_jit(self.cache, self._template_leaves,
+                                     jnp.asarray(mask))
+
+    # -- device-side reset --------------------------------------------------
+
+    def _reset_fn(self, cache, template_leaves, mask):
+        leaves, treedef = jax.tree.flatten(cache)
+        tmpl = iter(template_leaves)
+
+        def one(c, ax, need):
+            if not need:
+                return c
+            shape = [1] * c.ndim
+            shape[ax] = self.max_slots
+            return jnp.where(mask.reshape(shape), next(tmpl), c)
+
+        return jax.tree.unflatten(
+            treedef, [one(c, ax, need) for c, ax, need in
+                      zip(leaves, self._batch_axes, self._needs_reset)])
+

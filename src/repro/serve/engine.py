@@ -1,0 +1,166 @@
+"""ServeEngine: the request-level serving entry point.
+
+Wires the slot-based :class:`~repro.serve.cache_pool.CachePool` and the
+continuous-batching :class:`~repro.serve.scheduler.Scheduler` through the
+session's :class:`~repro.launch.executor.Executor` — ``jit_decode`` compiles
+the fused per-slot decode step and ``place_cache`` shards the pool, so the
+SAME engine code runs local or on a device mesh
+(``LaunchConfig(mesh="test")`` / ``mesh="production"``).
+
+Build one from a session (typically restored from a DP-trained checkpoint;
+inference spends no additional privacy budget)::
+
+    session = PrivacySession.restore(ckpt, "qwen2-0.5b", ...)
+    engine = ServeEngine.from_session(session, max_slots=8, max_len=128)
+    state = engine.submit(Request(prompt=[1, 2, 3], max_new_tokens=16))
+    out = engine.run()          # continuous batching until the queue drains
+
+``session.generate`` is a thin single-batch wrapper over this class.
+"""
+from __future__ import annotations
+
+import math
+import time
+from typing import Dict, Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .cache_pool import CachePool
+from .request import Request, RequestState, SamplingParams
+from .sampling import sample_tokens
+from .scheduler import Scheduler
+
+
+def latency_percentiles(results) -> tuple:
+    """(p50, p95) request latency in seconds over ``engine.run()`` results,
+    by the nearest-rank method (ceil(q*n)-1)."""
+    lats = sorted(r["latency_s"] for r in results)
+    if not lats:
+        return 0.0, 0.0
+
+    def rank(q):
+        return lats[max(math.ceil(q * len(lats)) - 1, 0)]
+
+    return round(rank(0.5), 4), round(rank(0.95), 4)
+
+
+class ServeEngine:
+    """Continuous-batching serving engine over a model's decode primitives."""
+
+    def __init__(self, model, model_cfg, params, *, executor=None,
+                 max_slots: int = 4, max_len: int = 64,
+                 cache_dtype=jnp.float32, extras: Dict = None,
+                 engine_name: str = "nonprivate",
+                 admission: str = "continuous"):
+        if not hasattr(model, "decode_step"):
+            raise ValueError(f"{getattr(model_cfg, 'name', model)} has no "
+                             f"decode path (encoder-only)")
+        if executor is None:
+            from ..launch.executor import build_executor
+            executor = build_executor(None)
+        self.model = model
+        self.model_cfg = model_cfg
+        self.params = params
+        self.executor = executor
+        self.max_slots = int(max_slots)
+        self.max_len = int(max_len)
+        self._engine_name = engine_name
+        self._cache_dtype = cache_dtype
+        # decode shapes never sequence-shard activations (T=1); installed
+        # before tracing AND before every run, since the hooks are
+        # process-wide and a training step may reinstall its own
+        self._configure()
+        self.decode_fn = executor.jit_decode(model.decode_step)
+        self.sample_fn = jax.jit(sample_tokens)
+        # all-greedy iterations skip the sampler's sort + per-row PRNG (the
+        # scheduler picks host-side: temperatures are host values)
+        self.greedy_fn = jax.jit(
+            lambda logits: jnp.argmax(logits, axis=-1).astype(jnp.int32))
+        self.pool = CachePool(model, params, self.max_slots, self.max_len,
+                              executor=executor, dtype=cache_dtype,
+                              extras=extras)
+        # admission="static" gates admission on an EMPTY pool (the old
+        # fixed-batch generate() discipline) — the benchmark baseline
+        self.scheduler = Scheduler(self, admission=admission)
+
+    @classmethod
+    def from_session(cls, session, *, max_slots: int = 4, max_len: int = 64,
+                     cache_dtype=jnp.float32, extras: Dict = None
+                     ) -> "ServeEngine":
+        """An engine serving the session's current parameters through the
+        session's executor (local or mesh — same LaunchConfig semantics)."""
+        return cls(session.model, session.model_cfg, session.state.params,
+                   executor=session.executor, max_slots=max_slots,
+                   max_len=max_len, cache_dtype=cache_dtype, extras=extras,
+                   engine_name=session.dp.engine)
+
+    def _configure(self) -> None:
+        self.executor.configure_model(self.model_cfg, "decode", self.max_len,
+                                      self.max_slots, self._engine_name)
+
+    def refresh(self, params, extras: Dict = None) -> None:
+        """Serve new parameters (and optionally new frontends) with the
+        ALREADY-COMPILED decode/sample steps.  The cache pool is rebuilt —
+        its template is a function of params/extras for encoder-decoder
+        archs (precomputed cross-KV), not just zeros — so a refresh after
+        ``fit()`` never serves stale cross-attention state.  ``extras=None``
+        keeps the pool's current frontends."""
+        if self.scheduler.pending:
+            raise RuntimeError(
+                f"cannot refresh a serving engine with "
+                f"{self.scheduler.pending} request(s) in flight")
+        same_extras = (extras is None or
+                       (len(extras) == len(self.pool.extras) and
+                        all(extras.get(k) is v
+                            for k, v in self.pool.extras.items())))
+        if params is self.params and same_extras:
+            return
+        self.params = params
+        self.pool = CachePool(
+            self.model, params, self.max_slots, self.max_len,
+            executor=self.executor, dtype=self._cache_dtype,
+            extras=self.pool.extras if extras is None else extras)
+
+    # -- request API --------------------------------------------------------
+
+    def submit(self, request: Request) -> RequestState:
+        return self.scheduler.submit(request)
+
+    def submit_prompt(self, prompt, max_new_tokens: int = 16, *,
+                      temperature: float = 0.0, top_k: int = 0,
+                      seed: int = 0) -> RequestState:
+        return self.submit(Request(
+            prompt=prompt, max_new_tokens=max_new_tokens,
+            sampling=SamplingParams(temperature=temperature, top_k=top_k,
+                                    seed=seed)))
+
+    def step(self) -> bool:
+        """One scheduler iteration (admit + fused decode + retire)."""
+        self._configure()
+        return self.scheduler.step()
+
+    def run(self, requests: Optional[Iterable[Request]] = None) -> dict:
+        """Submit ``requests`` (optional), drain the queue, and report
+        per-request outputs plus engine-level throughput/occupancy."""
+        for r in (requests or ()):
+            self.submit(r)
+        self._configure()
+        it0, ast0 = self.scheduler.iterations, self.scheduler.active_slot_steps
+        t0 = time.time()
+        finished = self.scheduler.run()
+        dt = max(time.time() - t0, 1e-9)
+        iters = self.scheduler.iterations - it0
+        slot_steps = self.scheduler.active_slot_steps - ast0
+        results = [s.to_dict() for s in finished]
+        gen_tokens = sum(len(s.generated) for s in finished)
+        self.scheduler.finished = []        # drained; next run starts fresh
+        return {
+            "results": results,
+            "iterations": iters,
+            "elapsed_s": round(dt, 4),
+            "generated_tokens": gen_tokens,
+            "tokens_per_s": round(gen_tokens / dt, 1),
+            "occupancy": round(slot_steps / max(iters * self.max_slots, 1), 3),
+            "launch": self.executor.describe(),
+        }

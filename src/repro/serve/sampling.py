@@ -1,0 +1,55 @@
+"""Per-request token sampling, as one fused batched primitive.
+
+One jitted call samples the next token for every active slot, with each row
+carrying its own (temperature, top_k, seed): greedy rows (temperature == 0)
+take the argmax, sampling rows draw from the temperature-scaled, optionally
+top-k-truncated distribution via the Gumbel-max trick.
+
+The PRNG stream for a row is ``fold_in(PRNGKey(seed), position)`` — a
+function of the request's own seed and sequence position only.  That makes
+sampled tokens independent of slot index, batch composition and admission
+time, which is what lets continuous batching reproduce a solo ``generate``
+run token for token (tests/test_serve.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_tokens(logits, positions, seeds, temperatures, top_ks):
+    """Select the next token per row.
+
+    logits        (B, V) float
+    positions     (B,)   int32  position the logits were produced at
+    seeds         (B,)   int32  per-request PRNG seeds
+    temperatures  (B,)   float  0 -> greedy
+    top_ks        (B,)   int32  0 -> no truncation
+    Returns (B,) int32 tokens.
+    """
+    B, V = logits.shape
+    lf = logits.astype(jnp.float32)
+    greedy_tok = jnp.argmax(lf, axis=-1).astype(jnp.int32)
+
+    # temperature scaling (guard the greedy rows against div-by-zero)
+    temp = jnp.maximum(temperatures.astype(jnp.float32), 1e-6)[:, None]
+    scaled = lf / temp
+
+    # top-k truncation with per-row dynamic k: keep logits >= the k-th
+    # largest value of the row (full sort — V is the model vocab, and the
+    # decode step already does an O(V) head matmul per token)
+    sorted_desc = -jnp.sort(-scaled, axis=-1)                  # (B, V)
+    k = jnp.where(top_ks > 0, top_ks, V).astype(jnp.int32)
+    kth = jnp.take_along_axis(sorted_desc,
+                              jnp.clip(k - 1, 0, V - 1)[:, None], axis=-1)
+    scaled = jnp.where(scaled >= kth, scaled, -jnp.inf)
+
+    # Gumbel-max with a per-row key derived from (seed, position) only
+    def row_gumbel(seed, pos):
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), pos)
+        return jax.random.gumbel(key, (V,), jnp.float32)
+
+    g = jax.vmap(row_gumbel)(seeds, positions)                 # (B, V)
+    sampled_tok = jnp.argmax(scaled + g, axis=-1).astype(jnp.int32)
+
+    return jnp.where(temperatures > 0, sampled_tok, greedy_tok)

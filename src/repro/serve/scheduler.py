@@ -1,0 +1,157 @@
+"""Continuous-batching scheduler (Orca-style iteration-level scheduling).
+
+One scheduler iteration = one fused ``decode_step`` over ALL pool slots:
+
+  1. **admit** — queued requests claim free slots; their rows are reset in
+     one batched select (no retrace, no reallocation),
+  2. **decode** — build the ``[B]`` token / position vectors (prefilling
+     requests feed their next prompt token, decoding requests feed the token
+     they sampled last step; free slots feed a dummy token at position 0)
+     and run the jitted decode step once for the whole pool,
+  3. **select** — one fused sampling call picks every row's next token;
+     rows past their last prompt position append it to their output,
+  4. **retire** — requests that hit ``max_new_tokens`` (or the cache
+     capacity) finish MID-FLIGHT: their slot frees immediately and a queued
+     request can be admitted next iteration while the rest of the batch
+     keeps decoding.
+
+Prefill is run through the same fused step, one token per iteration
+(prefill-by-decode — exactly what ``session.generate`` always did), so a
+request admitted into a running batch simply teacher-forces its prompt while
+its neighbours decode.  Each request's tokens depend only on its own prompt,
+sampling params and positions — never on batch composition — which is the
+decode-equivalence property tests/test_serve.py pins down.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from .request import (DECODE, FINISH_LENGTH, FINISH_MAX_LEN, PREFILL,
+                      Request, RequestState)
+
+
+class Scheduler:
+    """Iteration-level scheduler over a :class:`~repro.serve.ServeEngine`'s
+    cache pool and jitted decode/sample steps."""
+
+    def __init__(self, engine, admission: str = "continuous"):
+        if admission not in ("continuous", "static"):
+            raise ValueError(f"admission must be 'continuous' or 'static', "
+                             f"got {admission!r}")
+        self.engine = engine
+        self.admission = admission
+        self.queue: deque = deque()
+        self.active: Dict[int, RequestState] = {}   # slot -> state
+        self.finished: List[RequestState] = []
+        self.iterations = 0
+        self.active_slot_steps = 0      # occupancy numerator
+        self._next_rid = 0
+
+    # -- submission ---------------------------------------------------------
+
+    def submit(self, request: Request) -> RequestState:
+        if request.prompt_len >= self.engine.max_len:
+            raise ValueError(
+                f"prompt_len={request.prompt_len} leaves no room to generate "
+                f"in a max_len={self.engine.max_len} cache")
+        if request.rid is None:
+            import dataclasses
+            request = dataclasses.replace(request, rid=self._next_rid)
+        self._next_rid = max(self._next_rid, (request.rid or 0)) + 1
+        state = RequestState(request)
+        self.queue.append(state)
+        return state
+
+    @property
+    def pending(self) -> int:
+        return len(self.queue) + len(self.active)
+
+    # -- one iteration ------------------------------------------------------
+
+    def _admit(self) -> None:
+        pool = self.engine.pool
+        if self.admission == "static" and self.active:
+            return      # static batching: drain the whole group first
+        newly: List[int] = []
+        while self.queue and pool.n_free:
+            state = self.queue.popleft()
+            slot = pool.insert()
+            state.slot = slot
+            state.status = PREFILL
+            self.active[slot] = state
+            newly.append(slot)
+        pool.reset(newly)
+
+    def step(self) -> bool:
+        """Run one scheduler iteration; False when there is nothing to do."""
+        self._admit()
+        if not self.active:
+            return False
+        pool = self.engine.pool
+        B = pool.max_slots
+
+        tok = np.zeros((B, 1), np.int32)
+        temps = np.zeros(B, np.float32)
+        topks = np.zeros(B, np.int32)
+        seeds = np.zeros(B, np.int32)
+        pos = np.zeros(B, np.int32)
+        for slot, st in self.active.items():
+            tok[slot, 0] = st.next_input_token()
+            pos[slot] = st.pos
+            sp = st.request.sampling
+            temps[slot] = sp.temperature
+            topks[slot] = sp.top_k
+            seeds[slot] = sp.seed
+        # RequestState.pos is the single source of truth; the pool's [B]
+        # vector is synced here, the one place it is consumed
+        pool.positions[:] = pos
+
+        logits, pool.cache = self.engine.decode_fn(
+            self.engine.params, pool.cache, tok, pos)
+        if temps.any():
+            next_tok = np.asarray(self.engine.sample_fn(
+                logits, pos, seeds, temps, topks))
+        else:
+            next_tok = np.asarray(self.engine.greedy_fn(logits))
+
+        self.iterations += 1
+        self.active_slot_steps += len(self.active)
+
+        now = time.time()
+        for slot, st in list(self.active.items()):
+            consumed = st.pos                          # position just decoded
+            if st.wants_sample_at(consumed):
+                st.generated.append(int(next_tok[slot]))
+                if st.first_token_at is None:
+                    st.first_token_at = now
+            st.pos += 1
+            st.status = PREFILL if st.pos < st.prompt_len else DECODE
+            if len(st.generated) >= st.request.max_new_tokens:
+                st.finish(FINISH_LENGTH)
+            elif st.pos >= self.engine.max_len:
+                st.finish(FINISH_MAX_LEN)
+            if st.finished_at is not None:
+                # retire mid-flight: the slot frees NOW; a queued request
+                # takes it next iteration while the rest keep decoding
+                del self.active[slot]
+                pool.evict(slot)
+                self.finished.append(st)
+        return True
+
+    # -- drain --------------------------------------------------------------
+
+    def run(self, max_iterations: Optional[int] = None) -> List[RequestState]:
+        """Step until every submitted request has finished; returns the
+        finished states in completion order."""
+        it = 0
+        while self.queue or self.active:
+            if not self.step():
+                break
+            it += 1
+            if max_iterations is not None and it >= max_iterations:
+                break
+        return self.finished

@@ -179,8 +179,13 @@ def cache_pspec(path: Tuple[str, ...], shape: Tuple[int, ...], mesh: Mesh,
         if _div(shape[cand], mesh, "data"):
             spec[cand] = "data"
     # shard the LARGEST unsharded divisible dim over model (usually S for KV
-    # caches when kv-heads don't divide; heads for SSM states)
-    cands = [i for i in range(nd)
+    # caches when kv-heads don't divide; heads for SSM states).  The trailing
+    # feature axis (head_dim / latent rank) is NEVER a candidate: rotary
+    # embeddings split/concat that axis at its midpoint, and XLA:CPU's SPMD
+    # partitioner miscompiles that reshard inside the cache-update program
+    # (K values double — verified empirically on jax 0.4.x; tests/test_serve
+    # exercises the B=1 mesh path that used to hit it).
+    cands = [i for i in range(nd - 1)
              if spec[i] is None and i != b_ax
              and _div(shape[i], mesh, "model")
              and shape[i] >= mesh.shape["model"]]

@@ -1,0 +1,252 @@
+"""The serving subsystem's contract: continuous batching is invisible.
+
+Every request's tokens must depend only on its own prompt, sampling params
+and positions — never on which slot it lands in, which requests share the
+batch, or when it was admitted.  Pinned by comparing scheduler output
+against solo (max_slots=1) runs, including mid-flight admission, slot
+eviction/reuse (KV and SSM state), and the 2x2 CPU mesh path.
+"""
+import numpy as np
+import pytest
+
+from repro.core import DPConfig
+from repro.core.session import PrivacySession, TrainConfig
+from repro.serve import CachePool, Request, SamplingParams, ServeEngine
+
+from conftest import run_multidevice_sub as _run_sub  # noqa: E402
+
+MAX_LEN = 32
+
+
+def _session(arch):
+    return PrivacySession.from_config(
+        arch, DPConfig(engine="nonprivate"), TrainConfig(seed=0, smoke=True))
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    return _session("qwen2-0.5b")
+
+
+@pytest.fixture(scope="module")
+def qwen_solo(qwen):
+    return ServeEngine.from_session(qwen, max_slots=1, max_len=MAX_LEN)
+
+
+def _prompts(vocab, sizes, seed=0):
+    rng = np.random.RandomState(seed)
+    return [rng.randint(0, vocab, size=s).tolist() for s in sizes]
+
+
+def _solo_tokens(solo_engine, req: Request) -> list:
+    out = solo_engine.run([Request(prompt=req.prompt,
+                                   max_new_tokens=req.max_new_tokens,
+                                   sampling=req.sampling)])
+    return out["results"][0]["generated"]
+
+
+def _by_rid(out):
+    return {r["rid"]: r["generated"] for r in out["results"]}
+
+
+# -- decode equivalence under continuous batching ---------------------------
+
+def test_continuous_matches_solo_with_slot_reuse(qwen, qwen_solo):
+    """6 mixed-length requests through 4 slots: retirement + reuse happen
+    mid-run, and every request still matches its solo greedy run exactly."""
+    vocab = qwen.model_cfg.vocab
+    engine = ServeEngine.from_session(qwen, max_slots=4, max_len=MAX_LEN)
+    reqs = [Request(prompt=p, max_new_tokens=nt)
+            for p, nt in zip(_prompts(vocab, [3, 7, 2, 5, 4, 6]),
+                             [9, 3, 12, 5, 7, 4])]
+    out = engine.run(reqs)
+    assert all(r["finish_reason"] == "length" for r in out["results"])
+    gen = _by_rid(out)
+    for i, r in enumerate(reqs):
+        assert gen[i] == _solo_tokens(qwen_solo, r), f"request {i} diverged"
+    # more requests than slots: the scheduler really did retire + readmit
+    assert out["iterations"] < sum(r.prompt_len + r.max_new_tokens - 1
+                                   for r in reqs)
+
+
+def test_midflight_admission_matches_solo(qwen, qwen_solo):
+    """A request admitted into a RUNNING batch (others mid-decode) matches
+    its solo run — per-slot positions, not a shared step counter."""
+    vocab = qwen.model_cfg.vocab
+    engine = ServeEngine.from_session(qwen, max_slots=3, max_len=MAX_LEN)
+    early = [Request(prompt=p, max_new_tokens=8)
+             for p in _prompts(vocab, [4, 6], seed=1)]
+    for r in early:
+        engine.submit(r)
+    for _ in range(5):          # early requests are now mid-flight
+        assert engine.step()
+    late = Request(prompt=_prompts(vocab, [3], seed=2)[0], max_new_tokens=6)
+    engine.submit(late)
+    out = engine.run()
+    gen = _by_rid(out)
+    for i, r in enumerate(early):
+        assert gen[i] == _solo_tokens(qwen_solo, r), f"early {i} diverged"
+    assert gen[2] == _solo_tokens(qwen_solo, late), "late request diverged"
+
+
+@pytest.fixture(scope="module")
+def mamba():
+    return _session("mamba2-1.3b")
+
+
+def test_slot_reuse_does_not_leak_ssm_state(mamba):
+    """SSM state/conv caches accumulate (unlike position-masked KV) — slot
+    reset on admission must clear them.  Identical prompts before and after
+    other traffic through the same slots must generate identical tokens."""
+    session = mamba
+    vocab = session.model_cfg.vocab
+    engine = ServeEngine.from_session(session, max_slots=2, max_len=MAX_LEN)
+    probe = Request(prompt=_prompts(vocab, [4], seed=3)[0], max_new_tokens=6)
+    first = engine.run([probe])["results"][0]["generated"]
+    # churn both slots with other traffic
+    engine.run([Request(prompt=p, max_new_tokens=5)
+                for p in _prompts(vocab, [6, 3, 5], seed=4)])
+    again = engine.run([probe])["results"][0]["generated"]
+    assert first == again, "slot reuse leaked state across requests"
+
+
+def test_sampling_slot_independent_and_topk1_is_greedy(qwen, qwen_solo):
+    """Sampled tokens are a function of (seed, position) only: the same
+    sampled request matches its solo run even inside a busy batch; and
+    top_k=1 at any temperature degenerates to greedy."""
+    vocab = qwen.model_cfg.vocab
+    engine = ServeEngine.from_session(qwen, max_slots=4, max_len=MAX_LEN)
+    sampled = Request(prompt=_prompts(vocab, [4], seed=5)[0],
+                      max_new_tokens=7,
+                      sampling=SamplingParams(temperature=0.8, top_k=5,
+                                              seed=11))
+    filler = [Request(prompt=p, max_new_tokens=6)
+              for p in _prompts(vocab, [3, 5, 6], seed=6)]
+    out = engine.run([sampled] + filler)
+    assert _by_rid(out)[0] == _solo_tokens(qwen_solo, sampled)
+
+    greedy = Request(prompt=sampled.prompt, max_new_tokens=7)
+    topk1 = Request(prompt=sampled.prompt, max_new_tokens=7,
+                    sampling=SamplingParams(temperature=1.3, top_k=1, seed=9))
+    assert _solo_tokens(qwen_solo, topk1) == _solo_tokens(qwen_solo, greedy)
+
+
+def test_generate_is_engine_wrapper(qwen):
+    """session.generate rides the engine: output schema is stable and each
+    row matches a solo engine run of the same synthetic request."""
+    out = qwen.generate(batch=3, prompt_len=4, new_tokens=5, max_len=MAX_LEN)
+    assert len(out["generated"]) == 3
+    assert all(len(g) == 5 for g in out["generated"])
+    assert out["occupancy"] == 1.0      # equal-length batch: no padding
+    # repeat: cached engine, same tokens (params unchanged)
+    out2 = qwen.generate(batch=3, prompt_len=4, new_tokens=5, max_len=MAX_LEN)
+    assert out["generated"] == out2["generated"]
+
+
+def test_cached_engine_refreshes_cross_kv_template():
+    """Encoder-decoder cache templates embed cross-KV computed FROM params:
+    a cached engine must rebuild its pool when the session's params change,
+    not just swap the params reference (else post-fit() serving silently
+    attends to the old encoder's KV)."""
+    import jax
+    session = _session("whisper-base")
+    g1 = session.generate(batch=2, prompt_len=3, new_tokens=4, max_len=16)
+    # simulate a training step's param update (fast: no fit() needed)
+    session.state = session.state._replace(params=jax.tree.map(
+        lambda x: x * 1.5, session.state.params))
+    g2 = session.generate(batch=2, prompt_len=3, new_tokens=4, max_len=16)
+    session._jit_cache.clear()          # force a fresh engine + pool
+    g3 = session.generate(batch=2, prompt_len=3, new_tokens=4, max_len=16)
+    assert g2["generated"] == g3["generated"], \
+        "cached engine served a stale cross-KV template"
+    assert g1["generated"] != g2["generated"]   # params really changed
+
+
+# -- cache pool unit behaviour ----------------------------------------------
+
+def test_cache_pool_insert_evict_positions(qwen):
+    pool = CachePool(qwen.model, qwen.state.params, 3, 16)
+    assert [pool.insert() for _ in range(3)] == [0, 1, 2]
+    assert pool.insert() is None and pool.n_free == 0
+    pool.evict(1)
+    with pytest.raises(ValueError):
+        pool.evict(1)
+    assert pool.insert() == 1
+    pool.positions[:] = [2, 5, 1]       # scheduler sync point
+    pool.reset([1])
+    assert pool.positions.tolist() == [2, 0, 1]
+    # position-masked KV caches reset for free: no template leaves retained
+    assert pool._needs_reset == [False] * len(pool._needs_reset)
+    assert pool._template_leaves == []
+
+
+def test_cache_pool_reset_restores_state_leaves(mamba):
+    """SSM caches (no max_len axis) are classified needs-reset and restored
+    to the template; untouched slots keep their values."""
+    import jax
+    import jax.numpy as jnp
+    pool = CachePool(mamba.model, mamba.state.params, 3, 16)
+    assert all(pool._needs_reset)       # state + conv leaves only
+    pool.insert()
+    pool.insert()
+    template = [jnp.array(t) for t in pool._template_leaves]
+    pool.cache = jax.tree.map(lambda c: c + 1.0, pool.cache)
+    pool.reset([1])
+    for c, t, ax in zip(jax.tree.leaves(pool.cache), template,
+                        pool._batch_axes):
+        assert jnp.array_equal(jnp.take(c, 1, axis=ax),
+                               jnp.take(t, 1, axis=ax))
+        assert jnp.array_equal(jnp.take(c, 0, axis=ax),
+                               jnp.take(t, 0, axis=ax) + 1.0)
+    assert pool.positions[1] == 0
+
+
+def test_pool_rejects_oversized_prompt(qwen):
+    engine = ServeEngine.from_session(qwen, max_slots=1, max_len=8)
+    with pytest.raises(ValueError):
+        engine.submit(Request(prompt=list(range(8)), max_new_tokens=2))
+
+
+# -- sharded path ------------------------------------------------------------
+
+@pytest.mark.slow
+def test_engine_runs_on_mesh():
+    """The engine through MeshExecutor on a 2x2 CPU mesh: continuous
+    batching (with mid-flight admission) matches solo runs ON THE MESH,
+    and the pool/decode really execute sharded."""
+    out = _run_sub(r"""
+import json
+import numpy as np
+from repro.core import DPConfig, LaunchConfig, PrivacySession, TrainConfig
+from repro.serve import Request, ServeEngine
+
+session = PrivacySession.from_config(
+    "qwen2-0.5b", DPConfig(engine="nonprivate"),
+    TrainConfig(seed=0, smoke=True), launch=LaunchConfig(mesh="test"))
+rng = np.random.RandomState(0)
+vocab = session.model_cfg.vocab
+reqs = [Request(prompt=rng.randint(0, vocab, size=s).tolist(),
+                max_new_tokens=nt)
+        for s, nt in [(3, 8), (6, 3), (2, 5)]]
+
+engine = ServeEngine.from_session(session, max_slots=2, max_len=32)
+engine.submit(reqs[0]); engine.submit(reqs[1])
+for _ in range(3):
+    engine.step()
+engine.submit(reqs[2])            # admitted mid-flight, on the mesh
+out = engine.run()
+gen = {r["rid"]: r["generated"] for r in out["results"]}
+
+solo = ServeEngine.from_session(session, max_slots=1, max_len=32)
+match = all(
+    gen[i] == solo.run([reqs[i]])["results"][0]["generated"]
+    for i in range(3))
+print(json.dumps({"match": match, "launch": out["launch"],
+                  "n": len(gen)}))
+""")
+    import json
+    rec = json.loads(out.strip().splitlines()[-1])
+    assert rec["match"], rec
+    assert rec["n"] == 3
+    assert rec["launch"] == {"executor": "mesh",
+                             "mesh": {"data": 2, "model": 2}, "layout": "dp"}
