@@ -1,9 +1,12 @@
 """Paper Table 2: per-section cost of the DP step — forward, backward
-(per-example), clip+accumulate, optimizer(+noise) step — non-private vs DP."""
+(per-example), clip+accumulate, optimizer(+noise) step — non-private vs DP,
+on hand-built section programs (``bench_step`` measures the SAME phases
+through the real engine/session paths and adds the bytes-accessed
+assertions).  Emits BENCH_breakdown.json."""
 import jax
 import jax.numpy as jnp
 
-from .common import csv_row, make_lm_batch, timeit
+from .common import csv_row, emit_json, make_lm_batch, timeit
 
 from repro.core import Tape, clipping as C
 from repro.models import build_by_name
@@ -64,6 +67,17 @@ def main():
     csv_row("breakdown/optimizer_dp", t_opt * 1e6,
             f"with noise;x{t_opt / max(t_opt0, 1e-9):.2f} vs plain")
     csv_row("breakdown/optimizer_plain", t_opt0 * 1e6, "non-private")
+    emit_json("BENCH_breakdown.json", {
+        "bench": "breakdown", "arch": "vit-base", "B": B, "T": T,
+        "sections_ms": {
+            "forward": round(t_fwd * 1e3, 3),
+            "backward_batched": round(t_bwd * 1e3, 3),
+            "backward_per_example": round(t_pe * 1e3, 3),
+            "clip_accumulate": round(t_clip * 1e3, 3),
+            "optimizer_dp": round(t_opt * 1e3, 3),
+            "optimizer_plain": round(t_opt0 * 1e3, 3)},
+        "pe_vs_batched_backward": round(t_pe / t_bwd, 2),
+        "dp_vs_plain_optimizer": round(t_opt / max(t_opt0, 1e-9), 2)})
 
 
 if __name__ == "__main__":

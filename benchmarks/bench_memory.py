@@ -8,7 +8,7 @@ non-private 268)."""
 import jax
 import jax.numpy as jnp
 
-from .common import csv_row, make_lm_batch, make_session
+from .common import csv_row, emit_json, make_lm_batch, make_session
 
 BUDGET = 16 * 2 ** 30
 ENGINES = ["nonprivate", "masked_pe", "masked_ghost", "masked_bk"]
@@ -28,6 +28,7 @@ def temp_bytes(engine, B, T=16):
 
 
 def main():
+    rows = {}
     for eng in ENGINES:
         per_b = {}
         for B in (4, 16):
@@ -39,6 +40,11 @@ def main():
         csv_row(f"memory/vit-base/{eng}", per_b[16] / 1e3,
                 f"bytes_at_b16={per_b[16]};bytes_per_example={slope:.0f};"
                 f"max_physical_batch_16GB={max_b}")
+        rows[eng] = {"bytes_at_b16": int(per_b[16]),
+                     "bytes_per_example": int(slope),
+                     "max_physical_batch_16GB": max_b}
+    emit_json("BENCH_memory.json", {"bench": "memory", "arch": "vit-base",
+                                    "budget_bytes": BUDGET, "engines": rows})
 
 
 if __name__ == "__main__":

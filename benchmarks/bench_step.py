@@ -1,0 +1,186 @@
+"""Paper Table 2, end-to-end on THIS stack: per-phase cost of the DP step —
+forward, backward(+norms), clip+accumulate, noise+update — for every clipping
+engine, plus the structural one-pass-vs-multi-pass claim for the fused
+SGD/momentum update over the flat gradient accumulator.
+
+Two kinds of numbers go into BENCH_step.json:
+
+  * wall-clock medians per phase (CPU, reduced configs — trend data only;
+    interpret-mode Pallas wall-clock is NOT the headline);
+  * ``bytes accessed`` from XLA's post-optimization cost_analysis, measured
+    per compiled program.  This is the structural assertion: within one jit
+    XLA fuses the whole update into single loops, so the fused flat-buffer
+    update touches each parameter-sized buffer (params, accumulator,
+    momentum) at most once per read+write — while the Opacus-style baseline
+    (noise+rescale and optimizer apply as SEPARATE programs, the way eager
+    frameworks execute them — paper Table 2's 99.65 ms optimizer step)
+    must materialise the noisy gradient between programs, re-reading every
+    buffer.  The assertion compares passes-per-parameter-buffer with the
+    (engine-independent) RNG cost measured separately and subtracted.
+"""
+import jax
+import jax.numpy as jnp
+
+from .common import (compiled_cost, csv_row, emit_json, make_lm_batch,
+                     make_session, timeit)
+
+from repro.core import Tape, build_update_fn, clipping as C
+from repro.utils.params import FlatGradView
+
+ENGINES = ["nonprivate", "masked_pe", "masked_ghost", "masked_bk",
+           "masked_fused"]
+B, T = 8, 16
+
+
+def _phase_programs(session, batch, mask):
+    """Separate jitted programs per Table-2 phase for one engine."""
+    loss_fn = session.loss_fn
+    params = session.state.params
+    eng = session.dp.engine
+
+    progs = {"forward": (lambda p: loss_fn(p, batch, Tape()).sum(), (params,))}
+    if eng == "nonprivate":
+        progs["backward"] = (
+            jax.grad(lambda p: (loss_fn(p, batch, Tape()) * mask).sum()),
+            (params,))
+    elif eng in ("masked_ghost", "masked_bk"):
+        # the eps-backward IS the norm computation for the record engines
+        progs["norms"] = (lambda p: C.ghost_norms(loss_fn, p, batch)[0],
+                          (params,))
+    else:                       # pe-style: vmapped per-example backward
+        progs["backward_pe"] = (
+            lambda p: C.per_example_grads_and_sq(loss_fn, p, batch)[1],
+            (params,))
+    # clip+accumulate == the engine's whole accumulate step (fwd+bwd+clip+
+    # scatter into the flat accumulator) — phase-split like Opacus does it
+    acc_fn = session._jitted("accumulate")
+    progs["clip_accumulate"] = (acc_fn, (session.state, batch, mask))
+    return progs
+
+
+def run_engines(arch="vit-base"):
+    out = {}
+    for eng in ENGINES:
+        session = make_session(arch, eng, B, momentum=0.9)
+        batch = make_lm_batch(session.model_cfg, B, T)
+        mask = jnp.ones(B)
+        rows = {}
+        for phase, (fn, args) in _phase_programs(session, batch, mask).items():
+            jfn = jax.jit(fn) if not hasattr(fn, "lower") else fn
+            dt = timeit(lambda: jfn(*args), warmup=1, iters=3)
+            bytes_, flops = compiled_cost(fn, *args)
+            rows[phase] = {"wall_ms": round(dt * 1e3, 3),
+                           "bytes_accessed": bytes_, "flops": flops}
+            csv_row(f"step/{arch}/{eng}/{phase}", dt * 1e6,
+                    f"bytes={bytes_:.3g}")
+        # noise+update (the fused path — measured in detail in update_traffic)
+        upd = session._jitted("update")
+        dt = timeit(lambda: upd(session.state), warmup=1, iters=3)
+        bytes_, flops = compiled_cost(
+            build_update_fn(session.optimizer, session.dp), session.state)
+        rows["noise_update"] = {"wall_ms": round(dt * 1e3, 3),
+                                "bytes_accessed": bytes_, "flops": flops}
+        csv_row(f"step/{arch}/{eng}/noise_update", dt * 1e6,
+                f"bytes={bytes_:.3g}")
+        out[eng] = rows
+    return out
+
+
+def update_traffic(arch="vit-base"):
+    """The one-pass claim, asserted structurally from bytes-accessed.
+
+    Programs compared (identical math, same σC/L/lr/momentum):
+      fused      — ONE jit: flat accumulator + fused SGD kernel path
+      split      — TWO jits: (noise+rescale) then (optimizer apply), the
+                   Opacus phase structure; the noisy gradient crosses HBM
+      tree_1jit  — generic optimizer path in one jit (what XLA fusion does
+                   to the unfused pytree formulation — the 'shortcut-free
+                   framework already fuses this' data point)
+      rng        — noise generation alone (engine-independent floor)
+      nonprivate — fused non-private update (the paper's lower bound)
+    """
+    session = make_session(arch, "masked_pe", B, momentum=0.9)
+    state = session.state
+    view = FlatGradView.for_tree(state.params)
+    D = view.total
+    pbytes = 4.0 * D
+    dp, opt = session.dp, session.optimizer
+    sigma_c = dp.noise_multiplier * dp.clip_norm
+    L = dp.expected_batch_size
+
+    fused_fn = build_update_fn(opt, dp, fuse=True)
+    tree_fn = build_update_fn(opt, dp, fuse=False)
+
+    b_fused, _ = compiled_cost(fused_fn, state)
+    b_tree, _ = compiled_cost(tree_fn, state)
+    b_rng, _ = compiled_cost(
+        lambda k: jax.random.normal(k, (D,), jnp.float32),
+        jax.random.PRNGKey(0))
+
+    # split (Opacus-style): noisy grad materialised between two programs
+    def noise_stage(acc, key):
+        z = jax.random.normal(key, (D,), jnp.float32)
+        return (acc + sigma_c * z) / L
+
+    def opt_stage(state, g_flat):
+        mom = state.opt_state["mom"]
+        lr = opt.hyper["lr"](state.opt_state["count"])
+        new_mom = opt.hyper["momentum"] * mom + g_flat
+        newp = jax.tree.map(lambda p, u: p - lr * u, state.params,
+                            view.unflatten(new_mom))
+        return newp, new_mom, jnp.zeros_like(g_flat)
+
+    b_n, _ = compiled_cost(noise_stage, state.grad_acc, jax.random.PRNGKey(0))
+    b_o, _ = compiled_cost(opt_stage, state, state.grad_acc)
+    b_split = b_n + b_o
+
+    nonpriv = build_update_fn(opt, session.dp.__class__(
+        clip_norm=dp.clip_norm, noise_multiplier=0.0,
+        expected_batch_size=L, engine="nonprivate"))
+    b_np, _ = compiled_cost(nonpriv, state)
+
+    passes = lambda b: round(b / pbytes, 2)
+    rec = {
+        "D": D, "param_bytes": pbytes,
+        "bytes": {"fused": b_fused, "split": b_split, "tree_1jit": b_tree,
+                  "rng_only": b_rng, "nonprivate": b_np},
+        "passes_per_param_buffer": {
+            "fused": passes(b_fused), "split": passes(b_split),
+            "tree_1jit": passes(b_tree), "rng_only": passes(b_rng),
+            "nonprivate": passes(b_np)},
+        # parameter-sized buffers the fused private update touches: params,
+        # accumulator (read + zero-reset), momentum — noise internals are
+        # measured separately as rng_only
+        "fused_passes_ex_rng": passes(b_fused - b_rng),
+        "split_passes_ex_rng": passes(b_split - b_rng),
+    }
+    # ---- the acceptance assertions (structural, not wall-clock) ----
+    # fused: <= 1 read+write of each of {params, acc(+reset), momentum}
+    # (6 passes) + slack for scalars/padding
+    assert rec["fused_passes_ex_rng"] <= 7.0, rec
+    # split: the materialised noisy-gradient adds >= 2 full passes (write in
+    # program 1, read in program 2) on top of the fused traffic
+    assert rec["split_passes_ex_rng"] >= rec["fused_passes_ex_rng"] + 1.5, rec
+    # DP overhead over non-private is the noise term, not extra buffer passes
+    assert b_fused - b_np <= b_rng + 2.5 * pbytes, rec
+    csv_row("step/update/fused", 0.0,
+            f"passes_ex_rng={rec['fused_passes_ex_rng']}")
+    csv_row("step/update/split", 0.0,
+            f"passes_ex_rng={rec['split_passes_ex_rng']}")
+    return rec
+
+
+def main():
+    arch = "vit-base"
+    engines = run_engines(arch)
+    traffic = update_traffic(arch)
+    payload = {"bench": "step", "arch": arch, "B": B, "T": T,
+               "engines": engines, "update_traffic": traffic,
+               "note": ("bytes_accessed from post-optimization HLO "
+                        "cost_analysis; wall-clock is CPU/interpret-mode "
+                        "trend data, not the headline")}
+    emit_json("BENCH_step.json", payload)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,10 +1,11 @@
 """Paper Fig. 1 / Fig. 4: throughput (examples/s) per clipping engine,
 relative to the non-private baseline.  Reduced ViT (the paper's model) and a
-reduced LM, measured wall-clock on CPU."""
+reduced LM, measured wall-clock on CPU.  Emits BENCH_throughput.json (the
+across-PR trajectory is its git history)."""
 import jax
 import jax.numpy as jnp
 
-from .common import csv_row, make_lm_batch, make_session, timeit
+from .common import csv_row, emit_json, make_lm_batch, make_session, timeit
 
 ENGINES = ["nonprivate", "masked_pe", "masked_ghost", "masked_bk"]
 
@@ -17,16 +18,20 @@ def run(arch="vit-base", B=8, T=16):
         mask = jnp.ones(B)
         step = jax.jit(session.step_fn)
         dt = timeit(lambda: step(session.state, batch, mask)[0])
-        rows[eng] = B / dt
-        rel = rows["nonprivate"] / rows[eng]
+        ex_s = B / dt
+        rel = 1.0 if eng == "nonprivate" \
+            else rows["nonprivate"]["ex_per_s"] / ex_s
+        rows[eng] = {"ex_per_s": round(ex_s, 2), "step_us": round(dt * 1e6, 1),
+                     "rel_slowdown": round(rel, 2)}
         csv_row(f"throughput/{arch}/{eng}", dt * 1e6,
-                f"ex_per_s={rows[eng]:.2f};rel_slowdown=x{rel:.2f}")
+                f"ex_per_s={rows[eng]['ex_per_s']};rel_slowdown=x{rel:.2f}")
     return rows
 
 
 def main():
-    run("vit-base")
-    run("qwen2-0.5b")
+    payload = {"bench": "throughput", "B": 8, "T": 16,
+               "archs": {a: run(a) for a in ("vit-base", "qwen2-0.5b")}}
+    emit_json("BENCH_throughput.json", payload)
 
 
 if __name__ == "__main__":

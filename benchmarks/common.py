@@ -19,7 +19,8 @@ from repro.models import build_by_name
 
 def make_session(arch, engine="masked_pe", B=8, *, clip_norm=1.0,
                  noise_multiplier=1.0, microbatches=1, lr=1e-3,
-                 seed=0, model_cfg=None) -> PrivacySession:
+                 momentum=0.0, optimizer="sgd", seed=0,
+                 model_cfg=None) -> PrivacySession:
     """A benchmark session: expected logical batch pinned to the physical
     batch B (benchmarks time fixed-size steps, not Poisson draws)."""
     if model_cfg is not None:
@@ -30,8 +31,8 @@ def make_session(arch, engine="masked_pe", B=8, *, clip_norm=1.0,
     dp = DPConfig(clip_norm=clip_norm, noise_multiplier=noise_multiplier,
                   expected_batch_size=float(B), engine=engine,
                   microbatches=microbatches)
-    tc = TrainConfig(physical_batch=B, lr=lr, optimizer="sgd", momentum=0.0,
-                     seed=seed)
+    tc = TrainConfig(physical_batch=B, lr=lr, optimizer=optimizer,
+                     momentum=momentum, seed=seed)
     return PrivacySession(model, cfg, dp, tc)
 
 
@@ -69,11 +70,34 @@ def csv_row(name, us_per_call, derived=""):
 
 
 def emit_json(filename, payload):
-    """Write a benchmark record to BENCH_<name>.json at the repo root (the
-    bench trajectory the ROADMAP tracks across PRs)."""
+    """Write the latest benchmark record to BENCH_<name>.json at the repo
+    root, replacing the previous one — the across-PR trajectory lives in the
+    file's git history, not inside the file."""
     import json
     path = os.path.join(os.path.dirname(__file__), "..", filename)
     with open(path, "w") as f:
         json.dump(payload, f, indent=1, default=str)
     print(f"# wrote {os.path.normpath(path)}")
     return path
+
+
+def compiled_cost(fn, *shaped_args):
+    """Lower+compile ``fn`` on ShapeDtypeStructs and return
+    (bytes_accessed, flops) from XLA's post-optimization cost_analysis —
+    the structural numbers the one-pass-vs-multi-pass assertions use
+    (jax<0.5 returns one dict per partition; we take the first)."""
+    shaped = [jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), a)
+        for a in shaped_args]
+    c = jax.jit(fn).lower(*shaped).compile()
+    ca = c.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0] if ca else {}
+    ca = ca or {}
+    bytes_ = float(ca.get("bytes accessed", -1.0))
+    if bytes_ <= 0:
+        # fail loudly rather than let the one-pass assertions compare
+        # garbage sentinels (cost_analysis shape drifts across jax versions)
+        raise RuntimeError(
+            f"cost_analysis returned no usable 'bytes accessed' ({ca!r})")
+    return bytes_, float(ca.get("flops", -1.0))

@@ -1,28 +1,70 @@
 """Benchmark harness — one module per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows; benches with a JSON payload
+also refresh their ``BENCH_*.json`` record at the repo root (the across-PR
+trajectory is those files' git history).
 
   bench_throughput  -> Fig. 1 / Fig. 4   (throughput by clipping engine)
   bench_memory      -> Fig. 3 / Table 3  (max physical batch / memory wall)
   bench_recompile   -> Fig. A.2 / §6     (naive vs masked recompilation)
   bench_precision   -> Fig. 5            (TF32 -> bf16/relaxed-matmul analogue)
   bench_breakdown   -> Table 2           (fwd/bwd/clip/opt section costs)
+  bench_step        -> Table 2, per engine, through the REAL session paths +
+                       the fused-update bytes-accessed assertions
   bench_scaling     -> Fig. 7 / Fig. A.5 (multi-chip scaling, DP vs SGD)
   bench_batchsize   -> Fig. A.1          (throughput vs physical batch size)
   bench_serving     -> (beyond the paper) continuous vs static batching
+
+``--smoke`` runs the CI subset (bench_step + bench_breakdown) — fast enough
+for the 8-device job, still exercising the session/engine bench plumbing and
+the one-pass assertions so the benches can't bit-rot.
 """
+import argparse
 import sys
 import traceback
 
 
-def main() -> None:
-    from . import (bench_batchsize, bench_breakdown, bench_memory,
-                   bench_precision, bench_recompile, bench_scaling,
-                   bench_serving, bench_throughput)
+def _modules():
+    try:
+        from . import (bench_batchsize, bench_breakdown, bench_memory,
+                       bench_precision, bench_recompile, bench_scaling,
+                       bench_serving, bench_step, bench_throughput)
+    except ImportError:
+        # `python benchmarks/run.py` (no package context, e.g. the CI smoke
+        # step): import absolutely with the repo root on sys.path
+        import os
+        sys.path.insert(0, os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))))
+        from benchmarks import (bench_batchsize, bench_breakdown,
+                                bench_memory, bench_precision,
+                                bench_recompile, bench_scaling,
+                                bench_serving, bench_step, bench_throughput)
+    all_mods = (bench_throughput, bench_memory, bench_recompile,
+                bench_precision, bench_breakdown, bench_step, bench_scaling,
+                bench_batchsize, bench_serving)
+    smoke_mods = (bench_step, bench_breakdown)
+    return all_mods, smoke_mods
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI subset: bench_step + bench_breakdown")
+    ap.add_argument("--only", default=None,
+                    help="run a single bench by name (e.g. bench_step)")
+    args = ap.parse_args(argv)
+
+    all_mods, smoke_mods = _modules()
+    mods = smoke_mods if args.smoke else all_mods
+    if args.only:
+        byname = {m.__name__.rsplit(".", 1)[-1]: m for m in all_mods}
+        if args.only not in byname:
+            ap.error(f"unknown bench {args.only!r}; "
+                     f"expected one of {sorted(byname)}")
+        mods = (byname[args.only],)
+
     print("name,us_per_call,derived")
     ok = True
-    for mod in (bench_throughput, bench_memory, bench_recompile,
-                bench_precision, bench_breakdown, bench_scaling,
-                bench_batchsize, bench_serving):
+    for mod in mods:
         try:
             mod.main()
         except Exception:

@@ -1,3 +1,3 @@
-from .ckpt import save, restore, restore_into
+from .ckpt import AsyncCheckpointer, save, restore, restore_into
 
-__all__ = ["save", "restore", "restore_into"]
+__all__ = ["AsyncCheckpointer", "save", "restore", "restore_into"]

@@ -4,12 +4,21 @@
 privacy accountant's full state under ``meta["accountant"]`` (delta, alphas
 and the (q, sigma, steps) history) so ``restore`` re-seats the exact RDP
 composition — no constant-(q, sigma) recompose assumption.
+
+:class:`AsyncCheckpointer` moves the device→host copy and the npz/json
+write off the step path: ``save`` snapshots the pytree's array references
+(plus a device-side copy where buffer donation could invalidate them),
+returns immediately, and a background thread runs ``jax.device_get`` + the
+file writes.  It blocks only if a previous write is still in flight, so a
+training loop checkpoints at the cadence of the slower of (disk, interval)
+without ever stalling on d2h.
 """
 from __future__ import annotations
 
 import json
 import os
-from typing import Any, Tuple
+import threading
+from typing import Any, Optional, Tuple
 
 import jax
 import numpy as np
@@ -33,6 +42,9 @@ def _flatten_state(tree, prefix=""):
 
 def save(path: str, params: Any, opt_state: Any = None, step: int = 0,
          meta: dict = None) -> None:
+    """Atomic write: serialise to `.tmp` siblings, then os.replace — a crash
+    mid-write (incl. the AsyncCheckpointer's background thread dying with
+    the process) can never corrupt the previous good checkpoint at `path`."""
     os.makedirs(path, exist_ok=True)
     flat = {f"params.{k}": np.asarray(v)
             for k, v in flatten_params(params).items()}
@@ -40,9 +52,13 @@ def save(path: str, params: Any, opt_state: Any = None, step: int = 0,
         flat.update({f"opt.{k}": np.asarray(v)
                      for k, v in _flatten_state(opt_state).items()
                      if v is not None})
-    np.savez(os.path.join(path, "state.npz"), **flat)
-    with open(os.path.join(path, "meta.json"), "w") as f:
+    state_path = os.path.join(path, "state.npz")
+    np.savez(state_path + ".tmp.npz", **flat)
+    os.replace(state_path + ".tmp.npz", state_path)
+    meta_path = os.path.join(path, "meta.json")
+    with open(meta_path + ".tmp", "w") as f:
         json.dump({"step": int(step), **(meta or {})}, f)
+    os.replace(meta_path + ".tmp", meta_path)
 
 
 def restore(path: str) -> Tuple[dict, dict, int, dict]:
@@ -63,3 +79,62 @@ def restore_into(path: str, params_like: Any):
     out = {k: np.asarray(got[k]).astype(v.dtype).reshape(v.shape)
            for k, v in tmpl.items()}
     return unflatten_params(out), step, meta
+
+
+class AsyncCheckpointer:
+    """Background checkpoint writer (see module docstring).
+
+    One write may be in flight at a time; a second ``save`` first waits for
+    it (bounding dirty state to one checkpoint interval).  ``wait`` makes
+    the last enqueued checkpoint durable — call it before reading the files
+    back or at the end of training.  Exceptions raised by the background
+    write re-surface on the next ``save``/``wait``.
+    """
+
+    def __init__(self):
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def _snapshot(self, tree):
+        if tree is None:
+            return None
+        # device-side copy, dispatched asynchronously: on backends where the
+        # step functions donate their inputs (TPU), the live state buffers
+        # may be invalidated by the NEXT step while the background d2h is
+        # still reading — a private copy never is.
+        return jax.tree.map(
+            lambda x: x.copy() if isinstance(x, jax.Array) else x, tree)
+
+    def save(self, path: str, params: Any, opt_state: Any = None,
+             step: int = 0, meta: dict = None) -> None:
+        """Enqueue a checkpoint write; blocks only on a still-running
+        previous write.  ``step``/``meta`` must be host values."""
+        self.wait()
+        params = self._snapshot(params)
+        opt_state = self._snapshot(opt_state)
+
+        def _write():
+            try:
+                save(path, jax.device_get(params),
+                     jax.device_get(opt_state) if opt_state is not None
+                     else None, step, meta)
+            except BaseException as e:     # surfaced by the next save/wait
+                self._error = e
+
+        self._thread = threading.Thread(target=_write, daemon=True,
+                                        name="repro-async-ckpt")
+        self._thread.start()
+
+    @property
+    def in_flight(self) -> bool:
+        return self._thread is not None and self._thread.is_alive()
+
+    def wait(self) -> None:
+        """Block until the pending write (if any) is durable; re-raise any
+        background failure."""
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err

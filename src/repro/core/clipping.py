@@ -52,6 +52,10 @@ class ShardingConstraints:
     grad     — applied to the summed (already clipped) gradient pytree;
                pins it to the parameter (FSDP) layout so GSPMD
                reduce-scatters instead of all-reduce + all-gather.
+    grad_flat — applied to the FLAT f32 gradient accumulator
+               (``TrainState.grad_acc``); pins its single axis to the data
+               axes (offset-range FSDP) so the accumulator never
+               materialises replicated under 2d/dp_sp layouts.
     pe_grad  — applied to the vmapped per-example gradient pytree; without
                it GSPMD falls into "involuntary full rematerialization"
                (replicating B x params buffers) on the per-example
@@ -60,6 +64,7 @@ class ShardingConstraints:
                halves their HBM footprint).
     """
     grad: Optional[Callable] = None
+    grad_flat: Optional[Callable] = None
     pe_grad: Optional[Callable] = None
     pe_dtype: Any = None
 

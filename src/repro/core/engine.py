@@ -9,6 +9,15 @@ Step anatomy (paper Alg. 2 / Opacus BatchMemoryManager semantics):
   * ``fused_step``: accumulate(+optional microbatch scan) + update in one jit —
     the unit that is lowered in the multi-pod dry-run and rooflined.
 
+``TrainState.grad_acc`` is ONE flat f32 buffer (layout:
+:class:`~repro.utils.params.FlatGradView`), not a per-leaf pytree:
+``accumulate`` scatters the clipped sum into it once, and for SGD/momentum
+``update`` dispatches to the fused :func:`repro.kernels.tree_noisy_update` —
+noise + rescale + optimizer apply in one pass, one read+write of
+params/acc/momentum per step (paper Table 2's DP-optimizer overhead is
+exactly the extra passes this removes).  Adam-family optimizers take the
+generic path on a lazily-unflattened tree view of the same buffer.
+
 All step functions are pure; the host-side lifecycle (sampler, memory
 manager, accountant, checkpointing) is owned by
 :class:`repro.core.session.PrivacySession`, which is the supported entry
@@ -23,8 +32,9 @@ from typing import Any, Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from ..kernels import tree_noisy_update
 from ..optim import Optimizer
-from ..utils.tree import tree_noise_like, tree_zeros_like
+from ..utils.params import FlatGradView
 from . import clipping
 from .clipping import ShardingConstraints
 from .tape import Tape
@@ -56,17 +66,32 @@ def _grad_hook(constraints: Optional[ShardingConstraints]):
 class TrainState(NamedTuple):
     params: Any
     opt_state: Any
-    grad_acc: Any
+    grad_acc: Any         # flat f32 (D,) buffer — FlatGradView(params) layout
     rng: jax.Array
     step: jax.Array       # optimizer steps taken
-    seen: jax.Array       # masked examples accumulated since last update
+    seen: jax.Array       # f32 masked examples accumulated since last update
+
+
+def fused_sgd(optimizer: Optimizer) -> bool:
+    """True when the optimizer's update is the fused single-pass kernel
+    (plain/momentum SGD); nesterov and Adam-family go through the generic
+    ``optimizer.update`` on a tree view of the flat accumulator."""
+    return (optimizer.kind == "sgd" and isinstance(optimizer.hyper, dict)
+            and not optimizer.hyper.get("nesterov", False))
 
 
 def init_state(params, optimizer: Optimizer, rng) -> TrainState:
+    view = FlatGradView.for_tree(params)
+    opt_state = optimizer.init(params)
+    if (fused_sgd(optimizer) and isinstance(opt_state, dict)
+            and opt_state.get("mom") is not None):
+        # momentum lives in the same flat layout as grad_acc, so the fused
+        # update reads/writes it in the one pass
+        opt_state = dict(opt_state, mom=view.zeros())
     return TrainState(
         params=params,
-        opt_state=optimizer.init(params),
-        grad_acc=jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+        opt_state=opt_state,
+        grad_acc=view.zeros(),
         rng=rng,
         step=jnp.zeros((), jnp.int32),
         seen=jnp.zeros((), jnp.float32),
@@ -115,6 +140,11 @@ def build_accumulate_fn(loss_fn: Callable, cfg: DPConfig, *,
     """accumulate(state, batch, mask) -> (state, metrics). Jit-stable shapes."""
 
     def accumulate(state: TrainState, batch, mask):
+        # seen handling is normalised to f32 HERE, once: integer Poisson
+        # masks otherwise accumulate an int `seen` that the nonprivate
+        # update's f32 reset would retrace against
+        mask = mask.astype(jnp.float32)
+        view = FlatGradView.for_tree(state.params)
         grad_constraint = _grad_hook(constraints)
         if cfg.private:
             g, aux = _microbatched_clipped_sum(loss_fn, state.params, batch,
@@ -134,30 +164,69 @@ def build_accumulate_fn(loss_fn: Callable, cfg: DPConfig, *,
             metrics = {}
         if grad_constraint is not None:
             g = grad_constraint(g)
-        acc = jax.tree.map(jnp.add, state.grad_acc, g)
+        # ONE scatter of the clipped sum into the flat accumulator (the
+        # concat fuses with the producers — no per-leaf buffer round-trip)
+        acc = state.grad_acc + view.flatten(g)
+        if constraints is not None and constraints.grad_flat is not None:
+            acc = constraints.grad_flat(acc)
         return state._replace(grad_acc=acc, seen=state.seen + mask.sum()), metrics
 
     return accumulate
 
 
-def build_update_fn(optimizer: Optimizer, cfg: DPConfig):
-    """update(state) -> state. Noise + optimizer step + reset accumulator."""
+def build_update_fn(optimizer: Optimizer, cfg: DPConfig, *, fuse: bool = True):
+    """update(state) -> state. Noise + optimizer step + reset accumulator.
+
+    SGD/momentum dispatches to the fused
+    :func:`repro.kernels.tree_noisy_update` (noise generated and applied in
+    one pass over the flat accumulator); other optimizers — and ``fuse=False``,
+    the benchmark's multi-pass baseline — materialise the noisy gradient tree
+    and run the generic ``optimizer.update``.
+    """
 
     def update(state: TrainState):
+        view = FlatGradView.for_tree(state.params)
         rng, nkey = jax.random.split(state.rng)
-        if cfg.private:
-            noisy = tree_noise_like(state.grad_acc, nkey,
-                                    cfg.noise_multiplier * cfg.clip_norm)
-            g = jax.tree.map(lambda a, z: (a + z) / cfg.expected_batch_size,
-                             state.grad_acc, noisy)
+        sigma_c = cfg.noise_multiplier * cfg.clip_norm
+
+        if fuse and fused_sgd(optimizer):
+            hyper = optimizer.hyper
+            count = state.opt_state["count"]
+            lr = hyper["lr"](count)
+            if cfg.private:
+                key, denom = nkey, cfg.expected_batch_size
+            else:
+                key, denom = None, jnp.maximum(state.seen, 1.0)
+            params, new_mom = tree_noisy_update(
+                state.params, state.grad_acc, key, sigma_c, denom, lr,
+                momentum_buf=state.opt_state.get("mom"),
+                momentum=hyper["momentum"], view=view)
+            opt_state = dict(state.opt_state, count=count + 1)
+            if new_mom is not None:
+                opt_state["mom"] = new_mom
         else:
-            g = jax.tree.map(lambda a: a / jnp.maximum(state.seen, 1.0),
-                             state.grad_acc)
-        updates, opt_state = optimizer.update(g, state.opt_state, state.params)
-        params = jax.tree.map(lambda p, u: (p + u).astype(p.dtype),
-                              state.params, updates)
-        return TrainState(params, opt_state,
-                          tree_zeros_like(state.grad_acc), rng,
+            # generic path: lazy tree view of the flat accumulator (+ flat
+            # noise — the SAME stream the fused path draws, so both paths
+            # produce identical updates for identical keys)
+            if cfg.private:
+                g_flat = (state.grad_acc + sigma_c * view.noise(nkey)) \
+                    / cfg.expected_batch_size
+            else:
+                g_flat = state.grad_acc / jnp.maximum(state.seen, 1.0)
+            g = view.unflatten(g_flat)
+            opt_in = state.opt_state
+            # a fusable-SGD state stores momentum flat; present the generic
+            # optimizer a tree view and restore the flat layout after
+            mom_flat = (fused_sgd(optimizer) and isinstance(opt_in, dict)
+                        and opt_in.get("mom") is not None)
+            if mom_flat:
+                opt_in = dict(opt_in, mom=view.unflatten(opt_in["mom"]))
+            updates, opt_state = optimizer.update(g, opt_in, state.params)
+            if mom_flat:
+                opt_state = dict(opt_state, mom=view.flatten(opt_state["mom"]))
+            params = jax.tree.map(lambda p, u: (p + u).astype(p.dtype),
+                                  state.params, updates)
+        return TrainState(params, opt_state, view.zeros(), rng,
                           state.step + 1, jnp.zeros((), jnp.float32))
 
     return update

@@ -25,10 +25,34 @@ from typing import Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from ..kernels import ghost_norm_dense
 from .tape import LayerSpec, Tape
 
 # Flip to force one ghost-vs-direct path in tests.
 _FORCE_PATH: Optional[str] = None
+
+# Backend for the dense direct-path norm ‖X_bᵀdY_b‖²_F:
+#   "auto"   — the Pallas kernel (interpret mode off-TPU), the default
+#   "xla"    — the pure-XLA einsum, kept as the everywhere-fallback
+_NORM_BACKEND = "auto"
+
+
+def set_norm_backend(mode: str) -> None:
+    """Select the dense direct-path norm backend ("auto" | "xla")."""
+    global _NORM_BACKEND
+    if mode not in ("auto", "xla"):
+        raise ValueError(f"norm backend {mode!r}; expected 'auto' or 'xla'")
+    _NORM_BACKEND = mode
+
+
+def _norm_tiles(T: int, di: int, do: int):
+    """Full 128 (sublane×lane-legal) tiles on TPU — Mosaic cannot lower a
+    trailing tile below 128 for f32, the kernel pads instead; shape-fitted
+    8-aligned tiles in interpret mode so the padded smoke shapes stay tiny."""
+    if jax.default_backend() == "tpu":
+        return (128, 128, 128)
+    r8 = lambda n: -(-n // 8) * 8
+    return (min(128, r8(di)), min(128, r8(do)), min(128, r8(T)))
 
 
 # ---------------------------------------------------------------------------
@@ -185,7 +209,11 @@ def _sq_norm_dense_one(x, dy, has_bias):
     """x (B,T,i), dy (B,T,o) -> (B,) squared norm of per-example W (+ b) grads.
 
     Chooses the ghost path (O(T^2 d)) vs the direct path (O(T i o)) per the
-    Mixed-Ghost rule (Bu et al., 2022).
+    Mixed-Ghost rule (Bu et al., 2022) — the same selection
+    ``launch.costmodel._ghost_norm_flops`` prices.  The direct path runs the
+    :func:`repro.kernels.ghost_norm_dense` Pallas kernel (the per-example
+    (din, dout) gradient block never leaves VMEM); ``set_norm_backend("xla")``
+    falls back to the pure-XLA einsum everywhere.
     """
     x = _as_btd(x)
     dy = _as_btd(dy)
@@ -198,6 +226,10 @@ def _sq_norm_dense_one(x, dy, has_bias):
         gx = jnp.einsum("bti,bsi->bts", xf, xf)
         gd = jnp.einsum("bto,bso->bts", df, df)
         nw = jnp.sum(gx * gd, axis=(1, 2))
+    elif _NORM_BACKEND != "xla":
+        nw = ghost_norm_dense(xf, df,
+                              interpret=jax.default_backend() != "tpu",
+                              tiles=_norm_tiles(T, di, do))
     else:
         m = jnp.einsum("bti,bto->bio", xf, df)
         nw = jnp.sum(m * m, axis=(1, 2))

@@ -141,6 +141,7 @@ class PrivacySession:
             params, self.optimizer, jax.random.PRNGKey(train.seed + 1)))
         self.restored_meta: Optional[dict] = None   # set by restore()
         self._jit_cache: dict = {}
+        self._ckpt_writer = None                    # lazy AsyncCheckpointer
 
     # -- construction -------------------------------------------------------
 
@@ -289,10 +290,17 @@ class PrivacySession:
         batch, mask = self.executor.place(batch, mask)
         return float(self._jitted("evaluate")(self.state.params, batch, mask))
 
-    def fit(self, dataset=None, steps: int = None, *, ckpt: str = None) -> dict:
+    def fit(self, dataset=None, steps: int = None, *, ckpt: str = None,
+            ckpt_every: int = 0) -> dict:
         """Run the full loop: PoissonSampler -> BatchMemoryManager ->
         accumulate/update -> accountant (-> checkpoint).  Returns the same
-        record the legacy ``launch.train.train`` driver produced."""
+        record the legacy ``launch.train.train`` driver produced.
+
+        Checkpoints are written asynchronously (device→host copy + npz write
+        on a background thread): with ``ckpt_every=N`` a snapshot is enqueued
+        every N optimizer steps without stalling the step loop (it blocks
+        only if the previous write is still in flight); the final checkpoint
+        is always taken and made durable before fit returns."""
         tc = self.train_cfg
         steps = steps if steps is not None else tc.steps
         if tc.target_eps is not None and steps > tc.steps:
@@ -324,6 +332,10 @@ class PrivacySession:
         history = []
         t0 = time.time()
         examples = 0
+        # one sync BEFORE the loop (restored sessions start at step > 0);
+        # in-loop checkpoints then derive the step count host-side
+        init_step = int(self.state.step) if ckpt and ckpt_every else 0
+        last_async_at = done = 0
         for step_i, indices in enumerate(sampler):
             for pb in bmm.batches(indices):
                 # pb is already placed by the memory manager's executor hook;
@@ -333,6 +345,11 @@ class PrivacySession:
                                                            pb.data, pb.mask)
             examples += len(indices)    # == sum of masks, without a device->host sync
             self.update()
+            if ckpt and ckpt_every and (step_i + 1) % ckpt_every == 0:
+                # optimizer steps taken == step_i + 1 on this loop, known
+                # host-side — no device sync on the step path
+                self.checkpoint_async(ckpt, step=init_step + step_i + 1)
+                last_async_at = step_i + 1
             if (step_i + 1) % tc.log_every == 0:
                 idx_eval = np.arange(min(tc.physical_batch, tc.n_data))
                 eb = dataset.fetch(idx_eval)
@@ -342,8 +359,14 @@ class PrivacySession:
                        "eps": round(eps, 4), "logical_batch": len(indices),
                        "throughput": round(examples / (time.time() - t0), 1)}
                 history.append(rec)
+            done = step_i + 1
         if ckpt:
-            self.checkpoint(ckpt)
+            if last_async_at and last_async_at == done:
+                # the final state is already enqueued — just make it durable
+                # instead of re-snapshotting and rewriting identical files
+                self.checkpoint_wait()
+            else:
+                self.checkpoint(ckpt)
         return {"history": history, "sigma": self.dp.noise_multiplier,
                 "final_eps": self.privacy_spent()[0],
                 "examples_per_s": examples / (time.time() - t0)}
@@ -354,16 +377,37 @@ class PrivacySession:
             return 0.0, self.accountant.delta
         return self.accountant.spent()
 
-    def checkpoint(self, path: str) -> None:
-        from ..checkpoint import save
+    def _ckpt_meta(self) -> dict:
         eps, delta = self.privacy_spent()
-        save(path, self.state.params, self.state.opt_state,
-             int(self.state.step),
-             {"arch": getattr(self.model_cfg, "name", "?"),
-              "engine": self.dp.engine, "eps": eps, "delta": delta,
-              # full (q, sigma, steps) history: restore() replays the exact
-              # composition instead of assuming constant (q, sigma)
-              "accountant": self.accountant.state_dict()})
+        return {"arch": getattr(self.model_cfg, "name", "?"),
+                "engine": self.dp.engine, "eps": eps, "delta": delta,
+                # full (q, sigma, steps) history: restore() replays the exact
+                # composition instead of assuming constant (q, sigma)
+                "accountant": self.accountant.state_dict()}
+
+    def checkpoint_async(self, path: str, *, step: int = None) -> None:
+        """Enqueue a checkpoint on the background writer and return — the
+        step loop keeps running while d2h + npz write happen off-thread.
+        Blocks only if a previous write is still in flight.  Pass ``step``
+        when the caller knows it host-side (fit's loop does): reading
+        ``state.step`` would force a host-device sync on the step path."""
+        from ..checkpoint import AsyncCheckpointer
+        if self._ckpt_writer is None:
+            self._ckpt_writer = AsyncCheckpointer()
+        if step is None:
+            step = int(self.state.step)
+        self._ckpt_writer.save(path, self.state.params, self.state.opt_state,
+                               step, self._ckpt_meta())
+
+    def checkpoint_wait(self) -> None:
+        """Make the last enqueued checkpoint durable (no-op when idle)."""
+        if self._ckpt_writer is not None:
+            self._ckpt_writer.wait()
+
+    def checkpoint(self, path: str) -> None:
+        """Synchronous checkpoint: enqueue + wait until durable."""
+        self.checkpoint_async(path)
+        self.checkpoint_wait()
 
     # -- reporting ----------------------------------------------------------
 

@@ -1,5 +1,6 @@
+from .noisy_update import bits_to_normal
 from .ops import (clip_accum, ghost_norm_dense, noisy_sgd_update,
                   tree_clip_accum, tree_noisy_update)
 
-__all__ = ["clip_accum", "ghost_norm_dense", "noisy_sgd_update",
-           "tree_clip_accum", "tree_noisy_update"]
+__all__ = ["bits_to_normal", "clip_accum", "ghost_norm_dense",
+           "noisy_sgd_update", "tree_clip_accum", "tree_noisy_update"]

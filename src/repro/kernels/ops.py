@@ -1,41 +1,43 @@
 """Jit'd pytree-level wrappers around the Pallas kernels.
 
-These are the integration points the engine can swap in on TPU:
+These are the integration points the DP step builders swap in:
   * ``tree_clip_accum``    — replaces the clip+accumulate of the pe engines.
-  * ``tree_noisy_update``  — replaces noise-add + SGD apply in the DP step.
+  * ``tree_noisy_update``  — the fused noise + SGD(+momentum) apply over the
+                             flat gradient accumulator (one read+write of
+                             params/acc/momentum per step).
   * ``ghost_norm_dense``   — drop-in for the dense direct-path norm.
+
+``tree_noisy_update`` has two executions of the same math, chosen by
+``use_kernel`` (default: the Pallas kernel on TPU, pure XLA elsewhere):
+
+  * kernel  — one :func:`~repro.kernels.noisy_update.noisy_sgd_update` call
+              per parameter leaf against its static offset range of the flat
+              accumulator; on TPU the noise is drawn in-kernel (``seed=``)
+              so the noise buffer never round-trips HBM.
+  * XLA     — the identical flat expression written so XLA's fusion produces
+              one loop per leaf over (params, acc segment, momentum segment):
+              static slices of the flat buffers fuse into their consumers,
+              which is what the step-phase benchmark's bytes-accessed
+              assertion pins down structurally.
 """
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from ..utils.tree import tree_zeros_like
+from ..utils.params import FlatGradView
 from .clip_accum import clip_accum
 from .ghost_norm import ghost_norm_dense  # re-export
 from .noisy_update import noisy_sgd_update
 
 __all__ = ["clip_accum", "ghost_norm_dense", "noisy_sgd_update",
-           "tree_clip_accum", "tree_noisy_update", "flatten_tree",
-           "unflatten_tree"]
+           "tree_clip_accum", "tree_noisy_update"]
 
 
-def flatten_tree(tree):
-    """Concatenate all leaves into one flat f32 vector (+ structure info)."""
-    leaves, treedef = jax.tree.flatten(tree)
-    shapes = [l.shape for l in leaves]
-    sizes = [int(l.size) for l in leaves]
-    flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves])
-    return flat, (treedef, shapes, sizes)
-
-
-def unflatten_tree(flat, meta):
-    treedef, shapes, sizes = meta
-    out, off = [], 0
-    for sh, sz in zip(shapes, sizes):
-        out.append(flat[off:off + sz].reshape(sh))
-        off += sz
-    return jax.tree.unflatten(treedef, out)
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
 
 
 def tree_clip_accum(per_example_grads, norms, mask, clip_norm, *,
@@ -56,11 +58,83 @@ def tree_clip_accum(per_example_grads, norms, mask, clip_norm, *,
 
 
 def tree_noisy_update(params, grad_acc, key, sigma_c, expected_batch, lr, *,
-                      interpret=True):
-    """Fused DP-SGD apply across a whole parameter pytree."""
-    pflat, meta = flatten_tree(params)
-    aflat, _ = flatten_tree(grad_acc)
-    z = jax.random.normal(key, pflat.shape, jnp.float32)
-    new = noisy_sgd_update(pflat, aflat, z, sigma_c, expected_batch, lr,
-                           interpret=interpret)
-    return unflatten_tree(new, meta)
+                      momentum_buf=None, momentum=0.0,
+                      view: Optional[FlatGradView] = None,
+                      use_kernel: Optional[bool] = None,
+                      interpret: Optional[bool] = None):
+    """Fused DP-SGD apply: params tree + flat accumulator -> new params tree.
+
+    ``grad_acc`` is the flat f32 accumulator laid out by ``view`` (built from
+    ``params`` when omitted; a legacy pytree accumulator is flattened first).
+    ``momentum_buf``, when given, is the flat momentum buffer and a
+    ``(new_params, new_momentum)`` pair is returned.  ``key=None`` skips the
+    noise term entirely (``sigma_c`` is then ignored — the non-private fused
+    step), in which case ``expected_batch`` may be a traced scalar (the seen
+    count).
+    """
+    if view is None:
+        view = FlatGradView.for_tree(params)
+    if not (hasattr(grad_acc, "ndim") and grad_acc.ndim == 1):
+        grad_acc = view.flatten(grad_acc)          # legacy pytree accumulator
+    use_kernel = _on_tpu() if use_kernel is None else use_kernel
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    leaves = jax.tree.leaves(params)
+
+    if use_kernel:
+        in_kernel_rng = key is not None and not interpret
+        z = (None if key is None or in_kernel_rng else view.noise(key))
+        if in_kernel_rng:
+            kd = (key if jnp.issubdtype(key.dtype, jnp.unsignedinteger)
+                  else jax.random.key_data(key))     # old- vs new-style keys
+            seeds = kd.astype(jnp.uint32).reshape(-1)[-2:]
+        else:
+            seeds = None
+        newp, newm_segs = [], []
+        for i, p in enumerate(leaves):
+            o, n = view.offsets[i], view.sizes[i]
+            a_seg = jax.lax.slice(grad_acc, (o,), (o + n,))
+            kw = dict(interpret=interpret)
+            if in_kernel_rng:
+                # fold the leaf index into the seed: leaves get independent
+                # in-kernel streams (program_id only separates tiles)
+                kw["seed"] = seeds + jnp.uint32(i)
+            # key=None leaves noise AND seed unset -> the kernel's noiseless
+            # variants (no zero buffer is materialised or read)
+            z_seg = (jax.lax.slice(z, (o,), (o + n,))
+                     if z is not None else None)
+            sc = sigma_c if key is not None else 0.0
+            if momentum_buf is None:
+                out = noisy_sgd_update(p.reshape(-1).astype(jnp.float32),
+                                       a_seg, z_seg, sc, expected_batch, lr,
+                                       **kw)
+            else:
+                m_seg = jax.lax.slice(momentum_buf, (o,), (o + n,))
+                out, newm = noisy_sgd_update(
+                    p.reshape(-1).astype(jnp.float32), a_seg, z_seg, sc,
+                    expected_batch, lr, momentum_buf=m_seg,
+                    momentum=momentum, **kw)
+                newm_segs.append(newm)
+            newp.append(out.reshape(p.shape).astype(p.dtype))
+        new_params = jax.tree.unflatten(jax.tree.structure(params), newp)
+        if momentum_buf is None:
+            return new_params, None
+        tail = view.total - view.n_params
+        if tail:
+            newm_segs.append(jnp.zeros((tail,), jnp.float32))
+        return new_params, jnp.concatenate(newm_segs)
+
+    # pure-XLA flat-fused path: one expression over the flat buffers; the
+    # per-leaf static slices below are views XLA fuses into the update loop
+    if key is not None:
+        g_flat = (grad_acc + sigma_c * view.noise(key)) * (1.0 / expected_batch)
+    else:
+        g_flat = grad_acc * (1.0 / expected_batch)
+    if momentum_buf is not None:
+        new_mom = momentum * momentum_buf + g_flat
+        use = new_mom
+    else:
+        new_mom = None
+        use = g_flat
+    newp = [(p.astype(jnp.float32) - lr * view.segment(use, i)).astype(p.dtype)
+            for i, p in enumerate(leaves)]
+    return jax.tree.unflatten(jax.tree.structure(params), newp), new_mom

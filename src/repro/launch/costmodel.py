@@ -137,9 +137,10 @@ def _ghost_norm_flops(flat, cfg: ArchConfig, B: float, T: float) -> float:
 
 
 ENGINE_MM_MULT = {"nonprivate": 3.0, "pe": 3.0, "masked_pe": 3.0,
-                  "masked_ghost": 5.0, "masked_bk": 3.0}
+                  "masked_fused": 3.0, "masked_ghost": 5.0, "masked_bk": 3.0}
 ENGINE_ATTN_MULT = {"nonprivate": 3.0, "pe": 3.0, "masked_pe": 3.0,
-                    "masked_ghost": 5.0, "masked_bk": 3.0}
+                    "masked_fused": 3.0, "masked_ghost": 5.0,
+                    "masked_bk": 3.0}
 
 
 def train_costs(model, cfg: ArchConfig, shape: InputShape, engine: str,
@@ -162,7 +163,7 @@ def train_costs(model, cfg: ArchConfig, shape: InputShape, engine: str,
     # params: fwd read + bwd read + grad write/read + opt update (f32 state)
     p_bytes = n * (2 * dtype_bytes + 4 * 4)
     # activations: ~6 tensors of (B,T,d) per layer (records for ghost/bk)
-    act_coeff = {"nonprivate": 4, "pe": 6, "masked_pe": 6,
+    act_coeff = {"nonprivate": 4, "pe": 6, "masked_pe": 6, "masked_fused": 6,
                  "masked_ghost": 12, "masked_bk": 10}[engine]
     acts = act_coeff * tokens * cfg.d_model * max(cfg.n_layers, 1) * dtype_bytes
     # attention scores traffic (write+read of (B,H,T,Tk))
@@ -174,13 +175,16 @@ def train_costs(model, cfg: ArchConfig, shape: InputShape, engine: str,
     else:
         scores = 0.0
     # per-example grads (the pe engines' memory wall): write + read of B·N
-    pe_bytes = 2 * B * n * 4 if engine in ("pe", "masked_pe") else 0.0
+    # (masked_fused materialises them too — its kernel fuses only the
+    # clip+accumulate re-read, one of the two passes)
+    pe_bytes = 2 * B * n * 4 \
+        if engine in ("pe", "masked_pe", "masked_fused") else 0.0
     hbm = p_bytes + acts + scores + pe_bytes
 
     # ---- collective bytes (per device) ----
     # FSDP weight all-gathers: each device receives the full (TP-sharded)
     # weight set once per pass; passes: fwd+bwd(+ghost 2nd pass)
-    passes = {"nonprivate": 2, "pe": 2, "masked_pe": 2,
+    passes = {"nonprivate": 2, "pe": 2, "masked_pe": 2, "masked_fused": 2,
               "masked_ghost": 4, "masked_bk": 2}[engine]
     ag_w = passes * (n / mshard) * dtype_bytes * (dshard - 1) / dshard
     # grad all-reduce over data (ring: 2x per byte)

@@ -53,7 +53,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from ..utils.sharding import (batch_pspec, cache_shardings, grads_constraint,
+from ..utils.sharding import (batch_pspec, cache_shardings,
+                              flat_grads_constraint, grads_constraint,
                               params_shardings, pe_grads_constraint,
                               state_shardings)
 from . import mesh as mesh_mod
@@ -271,10 +272,19 @@ class MeshExecutor(Executor):
         from ..core.clipping import ShardingConstraints
         pe_dtype = jnp.bfloat16 if self.launch.pe_bf16 else None
         if self.layout in ("dp", "dp_sp"):
-            # replicated params: GSPMD needs no layout pins
+            # fully replicated state: GSPMD needs no layout pins.  The flat
+            # accumulator stays REPLICATED here on purpose: forcing it to
+            # the offset-range layout makes XLA:CPU's SPMD partitioner
+            # produce values ~1e-2 off the replicated program (not
+            # reduction-order ULPs — same backend bug class as the rope
+            # reshard in utils/sharding.cache_pspec), which would break the
+            # dp/dp_sp fit()==local parity contract.  Under 2d that exact
+            # parity was never on offer (params themselves reshard), so the
+            # memory win is taken there.
             return ShardingConstraints(pe_dtype=pe_dtype)
         return ShardingConstraints(
             grad=grads_constraint(self.mesh),
+            grad_flat=flat_grads_constraint(self.mesh),
             pe_grad=(pe_grads_constraint(self.mesh)
                      if _engine_traits(engine)[0] else None),
             pe_dtype=pe_dtype)
@@ -292,6 +302,9 @@ class MeshExecutor(Executor):
 
     def state_sharding(self, state_shape):
         if self.layout in ("dp", "dp_sp"):
+            # fully replicated, including the flat accumulator — see the
+            # constraints() comment for why it is NOT offset-range-sharded
+            # in these layouts
             return jax.tree.map(lambda _: self._replicated, state_shape)
         return state_shardings(state_shape, self.mesh)
 

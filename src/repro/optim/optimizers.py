@@ -14,8 +14,17 @@ import jax.numpy as jnp
 
 
 class Optimizer(NamedTuple):
+    """(init, update) pair plus static metadata.
+
+    ``kind``/``hyper`` let the DP step builders recognise optimizers whose
+    update is a fused single-pass kernel away (plain/momentum SGD: the
+    ``repro.kernels.noisy_update`` path); anything else goes through the
+    generic ``update`` callable on a lazily-unflattened gradient tree.
+    """
     init: Callable
     update: Callable
+    kind: str = ""           # "sgd" | "adamw" | "" (custom)
+    hyper: dict = None       # static hyperparams (lr schedule, momentum, ...)
 
 
 def _sched(lr):
@@ -24,6 +33,7 @@ def _sched(lr):
 
 def sgd(lr, momentum: float = 0.0, nesterov: bool = False) -> Optimizer:
     lr = _sched(lr)
+    hyper = {"lr": lr, "momentum": momentum, "nesterov": nesterov}
 
     def init(params):
         mom = jax.tree.map(jnp.zeros_like, params) if momentum else None
@@ -42,12 +52,14 @@ def sgd(lr, momentum: float = 0.0, nesterov: bool = False) -> Optimizer:
         updates = jax.tree.map(lambda u: -step_lr * u, use)
         return updates, new_state
 
-    return Optimizer(init, update)
+    return Optimizer(init, update, kind="sgd", hyper=hyper)
 
 
 def adamw(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
           weight_decay: float = 0.0) -> Optimizer:
     lr = _sched(lr)
+    hyper = {"lr": lr, "b1": b1, "b2": b2, "eps": eps,
+             "weight_decay": weight_decay}
 
     def init(params):
         z = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
@@ -75,4 +87,4 @@ def adamw(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
         updates = jax.tree.map(upd, mu, nu, params)
         return updates, {"count": c, "mu": mu, "nu": nu}
 
-    return Optimizer(init, update)
+    return Optimizer(init, update, kind="adamw", hyper=hyper)

@@ -1,4 +1,5 @@
-"""Path-string addressing of nested-dict parameter trees.
+"""Path-string addressing of nested-dict parameter trees, plus the
+:class:`FlatGradView` that backs the single flat gradient accumulator.
 
 Params are nested dicts of arrays.  Paths are '.'-joined key chains, e.g.
 ``blocks.attn.wq.w`` — the same strings the DP layer primitives use as
@@ -6,7 +7,8 @@ Params are nested dicts of arrays.  Paths are '.'-joined key chains, e.g.
 """
 from __future__ import annotations
 
-from typing import Dict
+import dataclasses
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -51,3 +53,94 @@ def grads_into_tree(flat_grads: Dict[str, jnp.ndarray], params):
 def missing_paths(flat_grads: Dict[str, jnp.ndarray], params):
     """Paths in ``params`` that no BK gradient covers (should be empty)."""
     return sorted(set(flatten_params(params)) - set(flat_grads))
+
+
+# ---------------------------------------------------------------------------
+# FlatGradView: static layout of one flat f32 gradient buffer
+# ---------------------------------------------------------------------------
+
+# pad the flat buffer's total length so its single axis divides the data axes
+# of every supported mesh (test: 2, production: 16, multipod: 2*16) — the
+# executor feature-shards the accumulator by offset range without per-shape
+# special cases.  256 covers every power-of-two data extent up to 256.
+FLAT_ALIGN = 256
+
+
+def _prod(shape) -> int:
+    out = 1
+    for s in shape:
+        out *= int(s)
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatGradView:
+    """Static offsets/shapes mapping a parameter pytree onto ONE flat f32
+    buffer of length ``total`` (tail-padded to :data:`FLAT_ALIGN`).
+
+    The view itself holds no arrays — it is trace-time metadata, so it can be
+    (re)built inside a jitted function from ``state.params`` for free.  The
+    flat buffer is the storage format of ``TrainState.grad_acc`` (and the
+    fused SGD momentum); tree views are created lazily via :meth:`unflatten`
+    only on the generic optimizer fallback, as zero-copy static slices that
+    XLA fuses into their consumers.
+
+    Offsets depend only on leaf *sizes* (in elements), never on dtypes: a
+    bf16/f32 mixed tree and its all-f32 twin share one layout.
+    """
+    treedef: Any
+    shapes: Tuple[Tuple[int, ...], ...]
+    sizes: Tuple[int, ...]
+    offsets: Tuple[int, ...]
+    total: int
+
+    @classmethod
+    def for_tree(cls, tree) -> "FlatGradView":
+        leaves, treedef = jax.tree.flatten(tree)
+        shapes = tuple(tuple(l.shape) for l in leaves)
+        sizes = tuple(int(_prod(s)) for s in shapes)   # works on eval_shape too
+        offsets, off = [], 0
+        for s in sizes:
+            offsets.append(off)
+            off += s
+        total = off + ((-off) % FLAT_ALIGN)
+        return cls(treedef, shapes, sizes, tuple(offsets), total)
+
+    @property
+    def n_params(self) -> int:
+        return sum(self.sizes)
+
+    def zeros(self) -> jnp.ndarray:
+        return jnp.zeros((self.total,), jnp.float32)
+
+    def flatten(self, tree) -> jnp.ndarray:
+        """Concatenate the tree's leaves (f32) into the flat layout.  The
+        concat fuses with freshly-computed producers — no extra HBM pass."""
+        leaves = jax.tree.leaves(tree)
+        parts = [l.reshape(-1).astype(jnp.float32) for l in leaves]
+        pad = self.total - sum(self.sizes)
+        if pad:
+            parts.append(jnp.zeros((pad,), jnp.float32))
+        return jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+
+    def noise(self, key, scale: float = 1.0) -> jnp.ndarray:
+        """Flat N(0, scale²) draw covering the real parameters, ZERO over the
+        alignment tail — every flat buffer (accumulator, momentum) keeps the
+        tail-is-zero invariant, and the fused/generic update paths share one
+        noise stream."""
+        z = jax.random.normal(key, (self.n_params,), jnp.float32)
+        if scale != 1.0:
+            z = z * scale
+        pad = self.total - self.n_params
+        return jnp.pad(z, (0, pad)) if pad else z
+
+    def segment(self, flat: jnp.ndarray, i: int) -> jnp.ndarray:
+        """Leaf i's slice of the flat buffer, reshaped — a static slice
+        (fusible view), not a gather."""
+        o, n, sh = self.offsets[i], self.sizes[i], self.shapes[i]
+        return jax.lax.slice(flat, (o,), (o + n,)).reshape(sh)
+
+    def unflatten(self, flat: jnp.ndarray):
+        """Lazy tree view of the flat buffer (f32 leaves, static slices)."""
+        return jax.tree.unflatten(
+            self.treedef, [self.segment(flat, i) for i in range(len(self.sizes))])

@@ -18,7 +18,7 @@ left replicated, so every (arch x shape) combination lowers.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -102,23 +102,59 @@ def params_shardings(params_shape, mesh: Mesh):
     return jax.tree_util.tree_map_with_path(one, params_shape)
 
 
+def flat_grad_pspec(mesh: Mesh, n: int) -> P:
+    """The flat f32 gradient accumulator (and the fused SGD momentum):
+    feature-sharded by offset range over the data axes — the flat analogue
+    of the per-leaf FSDP pins.  FlatGradView pads its total to 256, so every
+    supported mesh's data extent divides."""
+    ax = [a for a in _data_axes(mesh) if a in mesh.shape]
+    total = 1
+    for a in ax:
+        total *= mesh.shape[a]
+    if ax and n % total == 0:
+        return P(tuple(ax) if len(ax) > 1 else ax[0])
+    if "data" in mesh.shape and n % mesh.shape["data"] == 0:
+        return P("data")
+    return P()
+
+
+def flat_grads_constraint(mesh: Mesh):
+    """Constraint hook for the flat accumulator — the flat-buffer variant of
+    :func:`grads_constraint`.  Feed it to ``ShardingConstraints(grad_flat=...)``."""
+    def apply(flat):
+        return jax.lax.with_sharding_constraint(
+            flat, NamedSharding(mesh, flat_grad_pspec(mesh, flat.shape[0])))
+    return apply
+
+
 def state_shardings(state_shape, mesh: Mesh):
-    """TrainState: params/grad_acc/opt moments like params; scalars replicated."""
+    """TrainState: params/opt moments like params; the flat grad accumulator
+    (and a flat momentum) offset-range-sharded; scalars replicated."""
     pshard = params_shardings(state_shape.params, mesh)
 
     def like_params(tree):
         # tree has the same structure as params at its leaves
         return params_shardings(tree, mesh)
 
+    acc_shape = state_shape.grad_acc.shape
+    flat = NamedSharding(mesh, flat_grad_pspec(mesh, acc_shape[0]))
+
+    def moment(v):
+        # a fused-SGD momentum is a flat buffer in the accumulator's layout;
+        # tree moments (adam mu/nu, nesterov mom) shard like params
+        if getattr(v, "shape", None) == acc_shape:
+            return flat
+        return like_params(v)
+
     rep = NamedSharding(mesh, P())
     opt = {
-        k: (like_params(v) if k in ("mu", "nu", "mom") and v is not None
+        k: (moment(v) if k in ("mu", "nu", "mom") and v is not None
             else jax.tree_util.tree_map(lambda _: rep, v))
         for k, v in state_shape.opt_state.items()}
     return type(state_shape)(
         params=pshard,
         opt_state=opt,
-        grad_acc=like_params(state_shape.grad_acc),
+        grad_acc=flat,
         rng=rep, step=rep, seen=rep)
 
 

@@ -1,5 +1,8 @@
 """Integration tests: engines produce IDENTICAL updates; virtual batching ==
-one-shot; the full train loop decreases loss and meets its eps budget."""
+one-shot; the full train loop decreases loss and meets its eps budget; the
+flat gradient accumulator (FlatGradView) round-trips; the engine-parity
+sweep covers every registered arch incl. masked_fused and the kernel-backed
+ghost-norm path."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,8 +11,9 @@ import pytest
 from repro.core import (DPConfig, Tape, build_accumulate_fn,
                         build_fused_step, build_update_fn, init_state)
 from repro.launch.train import train
-from repro.models import build_by_name
+from repro.models import ARCH_IDS, build_by_name
 from repro.optim import sgd
+from repro.utils.params import FLAT_ALIGN, FlatGradView
 
 
 @pytest.fixture(scope="module")
@@ -37,11 +41,11 @@ def _run_engine(model, params, batch, mask, engine, microbatches=1):
 
 def test_all_engines_identical_update(setup):
     """Same rng + same clipped grads => bitwise-equivalent DP updates across
-    pe / ghost / bk (they are different EXECUTIONS of the same math)."""
+    pe / ghost / bk / fused (different EXECUTIONS of the same math)."""
     model, cfg, params, batch = setup
     mask = jnp.array([1., 1., 0., 1.])
     ref = _run_engine(model, params, batch, mask, "masked_pe")
-    for eng in ("masked_ghost", "masked_bk"):
+    for eng in ("masked_ghost", "masked_bk", "masked_fused"):
         got = _run_engine(model, params, batch, mask, eng)
         for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(got)):
             np.testing.assert_allclose(np.asarray(a), np.asarray(b),
@@ -107,6 +111,191 @@ def test_checkpoint_roundtrip(tmp_path):
     assert step == 7
     for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(got)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_async_checkpointer_matches_sync(tmp_path):
+    """AsyncCheckpointer: same files as the sync save (incl. the flat SGD
+    momentum buffer), back-to-back saves serialise, wait() makes the last
+    one durable."""
+    from repro.checkpoint import AsyncCheckpointer, restore, save
+    model, cfg = build_by_name("qwen2-0.5b", smoke=True)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = sgd(0.1, momentum=0.9)
+    state = init_state(params, opt, jax.random.PRNGKey(1))
+    assert state.opt_state["mom"].ndim == 1          # flat momentum layout
+
+    save(str(tmp_path / "sync"), state.params, state.opt_state, 3, {"k": "v"})
+    ac = AsyncCheckpointer()
+    ac.save(str(tmp_path / "a1"), state.params, state.opt_state, 3, {"k": "v"})
+    # enqueue a second write immediately: must block on the first, not race
+    ac.save(str(tmp_path / "a2"), state.params, state.opt_state, 4, {"k": "w"})
+    ac.wait()
+    assert not ac.in_flight
+    p_sync, o_sync, step_s, meta_s = restore(str(tmp_path / "sync"))
+    p_a, o_a, step_a, meta_a = restore(str(tmp_path / "a1"))
+    assert (step_s, meta_s["k"]) == (3, "v") and (step_a, meta_a["k"]) == (3, "v")
+    for a, b in zip(jax.tree.leaves(p_sync), jax.tree.leaves(p_a)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(o_sync["mom"], o_a["mom"])
+    assert restore(str(tmp_path / "a2"))[2] == 4
+
+
+def test_fit_async_checkpoint_restores(tmp_path):
+    """fit(ckpt=..., ckpt_every=1) checkpoints mid-loop without stalling the
+    step loop; the final checkpoint is durable when fit returns and restores
+    to the exact trained params + eps."""
+    from repro.core import DPConfig as DPC, PrivacySession, TrainConfig
+    dp = DPC(clip_norm=0.1, noise_multiplier=0.7, engine="masked_pe")
+    tc = TrainConfig(steps=2, n_data=16, q=0.25, seq_len=8, physical_batch=4,
+                     seed=0, lr=0.1, optimizer="sgd", momentum=0.9)
+    session = PrivacySession.from_config("qwen2-0.5b", dp, tc)
+    session.fit(ckpt=str(tmp_path / "ck"), ckpt_every=1)
+    restored = PrivacySession.restore(str(tmp_path / "ck"), "qwen2-0.5b",
+                                      dp, tc)
+    assert int(restored.state.step) == 2
+    for a, b in zip(jax.tree.leaves(session.params),
+                    jax.tree.leaves(restored.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert restored.privacy_spent()[0] == pytest.approx(
+        session.privacy_spent()[0], rel=1e-12)
+
+
+def test_int_mask_batch_end_to_end(setup):
+    """seen handling is normalised to f32 in ONE place: an int 0/1 Poisson
+    mask trains identically to its f32 twin, private and non-private, and
+    the state dtypes stay jit-stable."""
+    model, cfg, params, batch = setup
+    for engine in ("masked_pe", "nonprivate"):
+        dpc = DPConfig(clip_norm=0.1, noise_multiplier=0.7,
+                       expected_batch_size=4.0, engine=engine)
+        opt = sgd(0.1)
+        acc = jax.jit(build_accumulate_fn(lambda p, b, t: model.loss(p, b, t),
+                                          dpc))
+        upd = jax.jit(build_update_fn(opt, dpc))
+        outs = []
+        for mask in (jnp.array([1, 1, 0, 1], jnp.int32),
+                     jnp.array([1., 1., 0., 1.], jnp.float32)):
+            st = init_state(params, opt, jax.random.PRNGKey(42))
+            st, _ = acc(st, batch, mask)
+            assert st.seen.dtype == jnp.float32
+            assert float(st.seen) == 3.0
+            st = upd(st)
+            assert st.seen.dtype == jnp.float32
+            outs.append(st.params)
+        for a, b in zip(jax.tree.leaves(outs[0]), jax.tree.leaves(outs[1])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_fused_update_matches_generic_path(setup):
+    """The fused SGD/momentum update (one-pass kernel path) and the generic
+    optimizer path (the bench's multi-pass baseline, fuse=False) draw the
+    same flat noise stream and produce the same step."""
+    model, cfg, params, batch = setup
+    dpc = DPConfig(clip_norm=0.1, noise_multiplier=0.7,
+                   expected_batch_size=4.0, engine="masked_pe")
+    opt = sgd(0.1, momentum=0.9)
+    acc = jax.jit(build_accumulate_fn(lambda p, b, t: model.loss(p, b, t),
+                                      dpc))
+    st = init_state(params, opt, jax.random.PRNGKey(7))
+    st, _ = acc(st, batch, jnp.ones(4))
+    sf = jax.jit(build_update_fn(opt, dpc, fuse=True))(st)
+    sg = jax.jit(build_update_fn(opt, dpc, fuse=False))(st)
+    for a, b in zip(jax.tree.leaves(sf.params), jax.tree.leaves(sg.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(sf.opt_state["mom"]),
+                               np.asarray(sg.opt_state["mom"]),
+                               rtol=1e-6, atol=1e-7)
+    assert int(sf.opt_state["count"]) == int(sg.opt_state["count"]) == 1
+
+
+# ---------------------------------------------------------------------------
+# FlatGradView: the flat gradient accumulator's layout
+# ---------------------------------------------------------------------------
+
+def test_flat_grad_view_roundtrip():
+    """tree -> flat -> tree identity; offsets are a function of leaf sizes
+    only (stable under dtype mix); the tail pad aligns the total."""
+    tree = {"a": {"w": jax.random.normal(jax.random.PRNGKey(0), (3, 4)),
+                  "b": jnp.arange(5, dtype=jnp.float32)},
+            "c": jnp.float32(2.5).reshape(())}
+    view = FlatGradView.for_tree(tree)
+    assert view.total % FLAT_ALIGN == 0
+    assert view.n_params == 3 * 4 + 5 + 1
+    flat = view.flatten(tree)
+    assert flat.shape == (view.total,) and flat.dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(flat[view.n_params:]), 0.0)
+    back = view.unflatten(flat)
+    assert jax.tree.structure(back) == jax.tree.structure(tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b))
+
+    # dtype mix does not move offsets (layout depends on sizes alone)
+    mixed = jax.tree.map(lambda x: x.astype(jnp.bfloat16), tree)
+    vm = FlatGradView.for_tree(mixed)
+    assert vm.offsets == view.offsets and vm.total == view.total
+    # eval_shape'd trees produce the same static layout
+    vs = FlatGradView.for_tree(jax.eval_shape(lambda: tree))
+    assert vs.offsets == view.offsets and vs.total == view.total
+
+
+def test_flat_grad_view_matches_state_layout(setup):
+    """TrainState.grad_acc is the FlatGradView layout of params, and a
+    flat accumulate equals the per-leaf sum it replaced."""
+    model, cfg, params, batch = setup
+    view = FlatGradView.for_tree(params)
+    opt = sgd(0.1)
+    st = init_state(params, opt, jax.random.PRNGKey(0))
+    assert st.grad_acc.shape == (view.total,)
+    g = jax.tree.map(lambda p: jnp.full(p.shape, 2.0, jnp.float32), params)
+    acc = st.grad_acc + view.flatten(g)
+    for a, b in zip(jax.tree.leaves(view.unflatten(acc)), jax.tree.leaves(g)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# engine-parity sweep across every registered arch (masked_fused + the
+# kernel-backed ghost-norm dense path)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_engine_parity_all_archs(arch):
+    """For every registered arch: masked_fused's clipped sums == masked_pe's
+    (same shared pe plumbing, Pallas reduction), and the ghost norms stay
+    oracle-exact with the DIRECT (kernel-backed) dense path forced on every
+    layer — the T² > din·dout branch of the mixed rule runs the Pallas
+    kernel in interpret mode here."""
+    from repro.core import clipping as C, layers as L
+    # direct module import: tests/ is on sys.path under both `pytest` and
+    # `python -m pytest` (no tests/__init__.py — same convention as
+    # test_executor's `from conftest import ...`)
+    from test_models_smoke import make_batch
+    model, cfg = build_by_name(arch, smoke=True)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, B=2, T=4)
+    loss_fn = lambda p, b, t: model.loss(p, b, t)
+    mask = jnp.array([1., 1.])
+
+    gpe, aux_pe = C.per_example_clipped_grads(loss_fn, params, batch, mask,
+                                              0.05)
+    gf, aux_f = C.ENGINES["masked_fused"](loss_fn, params, batch, mask, 0.05)
+    np.testing.assert_allclose(np.asarray(aux_f["per_example_norms"]),
+                               np.asarray(aux_pe["per_example_norms"]),
+                               rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(gpe), jax.tree.leaves(gf)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-3, atol=1e-6)
+
+    old = L._FORCE_PATH
+    L._FORCE_PATH = "direct"      # kernel-backed path on EVERY dense layer
+    try:
+        sq, _ = C.ghost_norms(loss_fn, params, batch)
+    finally:
+        L._FORCE_PATH = old
+    np.testing.assert_allclose(np.asarray(jnp.sqrt(sq)),
+                               np.asarray(aux_pe["per_example_norms"]),
+                               rtol=5e-3)
 
 
 def test_optimizers_match_reference():

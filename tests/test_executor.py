@@ -142,8 +142,18 @@ mesh = PrivacySession.from_config("qwen2-0.5b", dp, tc,
 out_m = mesh.fit()
 md = max(float(jnp.abs(a - b).max()) for a, b in
          zip(jax.tree.leaves(local.params), jax.tree.leaves(mesh.params)))
+# dp_sp keeps the same replicated-state parity contract (the flat grad
+# accumulator must NOT be offset-range-sharded here — see
+# MeshExecutor.constraints; XLA:CPU SPMD breaks values on that reshard)
+sp = PrivacySession.from_config("qwen2-0.5b", dp, tc,
+                                launch=LaunchConfig(mesh="test",
+                                                    layout="dp_sp"))
+sp.fit()
+md_sp = max(float(jnp.abs(a - b).max()) for a, b in
+            zip(jax.tree.leaves(local.params), jax.tree.leaves(sp.params)))
 print(json.dumps({
     "max_param_diff": md,
+    "max_param_diff_dp_sp": md_sp,
     "eps_equal": bool(out_l["final_eps"] == out_m["final_eps"]),
     "eps": float(out_m["final_eps"]),
     "hist_keys_equal": [sorted(r) for r in out_l["history"]] ==
@@ -157,6 +167,7 @@ print(json.dumps({
     assert rec["eps_equal"], rec
     assert rec["eps"] > 0
     assert rec["max_param_diff"] < 1e-6, rec     # reduction-order ULPs only
+    assert rec["max_param_diff_dp_sp"] < 1e-6, rec
     assert rec["hist_keys_equal"] and rec["loss_close"], rec
     assert rec["mesh_launch"] == {"executor": "mesh",
                                   "mesh": {"data": 2, "model": 2},

@@ -81,7 +81,63 @@ def test_tree_wrappers_match_engine():
 
 def test_tree_noisy_update_roundtrip():
     params = {"w": jnp.ones((10, 3)), "b": jnp.zeros((7,))}
-    acc = jax.tree.map(jnp.ones_like, params)
-    new = tree_noisy_update(params, acc, jax.random.PRNGKey(0), 0.0, 2.0, 0.5)
+    acc = jax.tree.map(jnp.ones_like, params)   # legacy pytree accumulator
+    new, mom = tree_noisy_update(params, acc, jax.random.PRNGKey(0),
+                                 0.0, 2.0, 0.5)
+    assert mom is None
     np.testing.assert_allclose(np.asarray(new["w"]),
                                np.ones((10, 3)) - 0.5 * 0.5, rtol=1e-6)
+
+
+def test_tree_noisy_update_kernel_matches_xla():
+    """The Pallas path (interpret mode, per-leaf segments of the flat
+    accumulator) and the pure-XLA flat-fused expression are the same math —
+    including momentum, noise, and the non-private seen-count divide."""
+    from repro.utils.params import FlatGradView
+    params = {"a": {"w": jax.random.normal(jax.random.PRNGKey(0), (9, 5))},
+              "b": jax.random.normal(jax.random.PRNGKey(1), (33,))}
+    view = FlatGradView.for_tree(params)
+    acc = jax.random.normal(jax.random.PRNGKey(2), (view.total,))
+    mom = jax.random.normal(jax.random.PRNGKey(3), (view.total,))
+    key = jax.random.PRNGKey(4)
+    for m in (None, mom):
+        px, mx = tree_noisy_update(params, acc, key, 1.3, 16.0, 0.05,
+                                   momentum_buf=m, momentum=0.9, view=view,
+                                   use_kernel=False)
+        pk, mk = tree_noisy_update(params, acc, key, 1.3, 16.0, 0.05,
+                                   momentum_buf=m, momentum=0.9, view=view,
+                                   use_kernel=True, interpret=True)
+        for a, b in zip(jax.tree.leaves(px), jax.tree.leaves(pk)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-6)
+        if m is not None:
+            np.testing.assert_allclose(np.asarray(mx[:view.n_params]),
+                                       np.asarray(mk[:view.n_params]),
+                                       rtol=1e-5, atol=1e-6)
+    # non-private: no key, traced seen-count denominator
+    px, _ = tree_noisy_update(params, acc, None, 0.0, jnp.float32(3.0), 0.1,
+                              view=view, use_kernel=False)
+    pk, _ = tree_noisy_update(params, acc, None, 0.0, jnp.float32(3.0), 0.1,
+                              view=view, use_kernel=True, interpret=True)
+    for a, b in zip(jax.tree.leaves(px), jax.tree.leaves(pk)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_bits_to_normal_is_standard_normal():
+    """The Box–Muller transform behind the in-kernel TPU noise path (the
+    kernel itself needs pltpu.prng_*, which has no interpret lowering):
+    uniform uint32 bits in, N(0,1) out — checked on moments and finiteness."""
+    from repro.kernels import bits_to_normal
+    rng = np.random.default_rng(0)
+    n = 200_000
+    b1 = jnp.asarray(rng.integers(0, 2 ** 32, size=n, dtype=np.uint32))
+    b2 = jnp.asarray(rng.integers(0, 2 ** 32, size=n, dtype=np.uint32))
+    z = np.asarray(bits_to_normal(b1, b2))
+    assert np.all(np.isfinite(z))
+    assert abs(z.mean()) < 0.01
+    assert abs(z.std() - 1.0) < 0.01
+    # extreme bits stay finite (u1=0 would be -inf; the offset prevents it)
+    z0 = np.asarray(bits_to_normal(jnp.zeros(4, jnp.uint32),
+                                   jnp.zeros(4, jnp.uint32)))
+    assert np.all(np.isfinite(z0))
