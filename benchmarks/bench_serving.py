@@ -1,70 +1,142 @@
-"""Serving: continuous batching vs static batched generation.
+"""Serving: static vs continuous batching, chunked prefill, prefix sharing.
 
-Replays ONE mixed-length synthetic request trace (short chats next to long
-completions) two ways through the SAME jitted decode step and cache pool:
+Replays ONE shared-prefix bimodal synthetic trace (mostly short chat turns
+over a handful of common "system prompt" prefixes, every 4th request a long
+completion) four ways through the same model:
 
-  * static     — requests admitted in fixed groups of ``slots``; every group
-                 runs until its LONGEST member finishes (retired slots idle
-                 as padding) before the next group starts — the old
-                 one-shot ``generate()`` service discipline,
-  * continuous — the scheduler admits a queued request the moment a slot
-                 retires mid-flight (Orca-style iteration-level scheduling).
+  * static       — requests admitted in fixed groups of ``slots``; every
+                   group runs until its LONGEST member finishes (retired
+                   slots idle as padding) — the old one-shot ``generate()``
+                   service discipline,
+  * continuous   — mid-flight admission, one prompt token per iteration
+                   (the PR 3 baseline),
+  * chunked      — continuous + chunked prefill: an admitted prompt catches
+                   up ``chunk`` tokens per fused step while its neighbours
+                   decode,
+  * chunked+prefix — chunked + prefix-cache sharing: an admission whose
+                   prompt prefix is resident copies those KV rows
+                   device-side and skips that much prefill entirely.
 
-Equal token budgets by construction (same trace), so the tokens/s ratio is
-exactly the padding the static discipline wastes.  Emits ``BENCH_serving.json``
-with throughput and p50/p95 per-request latency for both disciplines.
+Equal token budgets by construction (same trace), and every discipline must
+produce byte-identical tokens (the serving contract tests/test_serve.py
+pins) — asserted here, so the speedups can never come from decoding
+different sequences.  Emits ``BENCH_serving.json`` with throughput,
+latency p50/p95, TTFT p50/p95 and prefix-hit-rate per discipline.
 """
 from .common import csv_row, emit_json
 from repro.core import DPConfig
 from repro.core.session import PrivacySession, TrainConfig
-from repro.launch.serve import synthetic_trace
-from repro.serve import Request, ServeEngine, latency_percentiles
+from repro.serve import (Request, SamplingParams, ServeEngine,
+                         latency_percentiles, ttft_percentiles)
+
+import numpy as np
 
 
-def run_discipline(engine, reqs, admission):
-    """Replay the trace under one admission discipline on the same engine +
-    jit.  "static" gates admission on an empty pool, so each group of
-    ``max_slots`` drains fully (retired slots pad) before the next group
-    starts — no mid-flight admission.  All requests are submitted up front
-    either way, so queue wait counts toward latency identically."""
+def shared_prefix_trace(n, vocab, max_len, seed=0, n_prefixes=4,
+                        prefix_len=10):
+    """Bimodal lengths over a handful of shared prompt prefixes — the
+    workload prefix sharing exists for (system prompts / few-shot headers
+    shared across requests)."""
+    rng = np.random.RandomState(seed)
+    prefixes = [rng.randint(0, vocab, size=prefix_len).tolist()
+                for _ in range(n_prefixes)]
+    reqs = []
+    for i in range(n):
+        tail = rng.randint(0, vocab, size=int(rng.randint(2, 7))).tolist()
+        prompt = prefixes[i % n_prefixes] + tail
+        nt = (int(rng.randint(3 * max_len // 4 - prefix_len,
+                              max_len - len(prompt)))
+              if i % 4 == 3 else int(rng.randint(2, 9)))
+        reqs.append(Request(prompt=prompt, max_new_tokens=max(nt, 1),
+                            sampling=SamplingParams()))
+    return reqs
+
+
+def run_discipline(engine, reqs, admission="continuous"):
+    """Replay the trace under one admission discipline.  All requests are
+    submitted up front either way, so queue wait counts toward latency and
+    TTFT identically."""
     engine.scheduler.admission = admission
     try:
         out = engine.run(reqs)
     finally:
         engine.scheduler.admission = "continuous"
     p50, p95 = latency_percentiles(out["results"])
-    return {"tokens": out["generated_tokens"], "elapsed_s": out["elapsed_s"],
-            "tokens_per_s": out["tokens_per_s"], "iterations": out["iterations"],
-            "occupancy": out["occupancy"], "latency_p50_s": p50,
-            "latency_p95_s": p95}
+    t50, t95 = ttft_percentiles(out["results"])
+    return {
+        "tokens": out["generated_tokens"], "elapsed_s": out["elapsed_s"],
+        "tokens_per_s": out["tokens_per_s"], "iterations": out["iterations"],
+        "occupancy": out["occupancy"], "latency_p50_s": p50,
+        "latency_p95_s": p95, "ttft_p50_s": t50, "ttft_p95_s": t95,
+        "prefix_hit_rate": out["prefix_hit_rate"],
+        "prefix_hits": out["prefix_hits"],
+    # rids keep incrementing across runs on a shared engine — compare
+    # token sequences in submission order, which every discipline shares
+    }, [g for _, g in sorted((r["rid"], r["generated"])
+                             for r in out["results"])]
 
 
-def main(arch="qwen2-0.5b", slots=8, n_requests=24, max_len=64, seed=0):
+def main(arch="qwen2-0.5b", slots=8, n_requests=24, max_len=64, seed=0,
+         chunk=4, smoke=False):
+    if smoke:
+        slots, n_requests, max_len = 4, 10, 48
     session = PrivacySession.from_config(
         arch, DPConfig(engine="nonprivate"), TrainConfig(seed=seed, smoke=True))
-    engine = ServeEngine.from_session(session, max_slots=slots,
-                                      max_len=max_len)
-    # compile the decode + sample steps outside the timed region
-    engine.run([Request(prompt=[1, 2], max_new_tokens=2)])
+    trace = shared_prefix_trace(n_requests, session.model_cfg.vocab, max_len,
+                                seed=seed)
 
-    trace = synthetic_trace(n_requests, session.model_cfg.vocab, max_len,
-                            seed=seed, profile="bimodal")
-    static = run_discipline(engine, trace, "static")
-    cont = run_discipline(engine, trace, "continuous")
-    assert cont["tokens"] == static["tokens"], (cont["tokens"],
-                                                static["tokens"])
+    def build(prefill_chunk, prefix_sharing):
+        eng = ServeEngine.from_session(session, max_slots=slots,
+                                       max_len=max_len,
+                                       prefill_chunk=prefill_chunk,
+                                       prefix_sharing=prefix_sharing)
+        # compile decode/prefill/sample — and, for the sharing engine, the
+        # device-side prefix-copy program — outside the timed region (the
+        # second request is admitted mid-flight so its prefix is resident)
+        eng.submit(Request(prompt=[1, 2, 3, 4, 5, 6], max_new_tokens=8))
+        for _ in range(7):
+            eng.step()
+        eng.submit(Request(prompt=[1, 2, 3, 4, 5, 9], max_new_tokens=2))
+        eng.run()
+        return eng
+
+    baseline = build(1, False)
+    static, gen_static = run_discipline(baseline, trace, "static")
+    cont, gen_cont = run_discipline(baseline, trace)
+    chunked, gen_chunk = run_discipline(build(chunk, False), trace)
+    prefix, gen_prefix = run_discipline(build(chunk, True), trace)
+
+    # equal token budget AND byte-identical tokens across disciplines — the
+    # speedups below can only come from scheduling, never from decoding
+    # different sequences
+    for name, gen in (("continuous", gen_cont), ("chunked", gen_chunk),
+                      ("chunked+prefix", gen_prefix)):
+        assert gen == gen_static, f"{name} diverged from static tokens"
+
     speedup = cont["tokens_per_s"] / max(static["tokens_per_s"], 1e-9)
+    sp_chunk = chunked["tokens_per_s"] / max(cont["tokens_per_s"], 1e-9)
+    sp_prefix = prefix["tokens_per_s"] / max(cont["tokens_per_s"], 1e-9)
+    ttft_chunk = cont["ttft_p50_s"] / max(chunked["ttft_p50_s"], 1e-9)
+    ttft_prefix = cont["ttft_p50_s"] / max(prefix["ttft_p50_s"], 1e-9)
 
-    csv_row(f"serving/{arch}/static", static["elapsed_s"] * 1e6,
-            f"tok_per_s={static['tokens_per_s']};occ={static['occupancy']}")
-    csv_row(f"serving/{arch}/continuous", cont["elapsed_s"] * 1e6,
-            f"tok_per_s={cont['tokens_per_s']};occ={cont['occupancy']}"
-            f";speedup=x{speedup:.2f}")
+    for name, rec in (("static", static), ("continuous", cont),
+                      ("chunked", chunked), ("chunked_prefix", prefix)):
+        csv_row(f"serving/{arch}/{name}", rec["elapsed_s"] * 1e6,
+                f"tok_per_s={rec['tokens_per_s']};occ={rec['occupancy']}"
+                f";ttft_p50={rec['ttft_p50_s']}"
+                f";prefix_hit_rate={rec['prefix_hit_rate']}")
     emit_json("BENCH_serving.json", {
         "arch": arch, "slots": slots, "n_requests": n_requests,
-        "max_len": max_len, "trace_tokens": cont["tokens"],
-        "static": static, "continuous": cont,
+        "max_len": max_len, "prefill_chunk": chunk,
+        "trace": "shared_prefix_bimodal",
+        "trace_tokens": cont["tokens"],
+        "static": static, "continuous": cont, "chunked": chunked,
+        "chunked_prefix": prefix,
         "speedup_tokens_per_s": round(speedup, 3),
+        "chunked_speedup_vs_continuous": round(sp_chunk, 3),
+        "prefix_speedup_vs_continuous": round(sp_prefix, 3),
+        "ttft_p50_speedup_chunked": round(ttft_chunk, 3),
+        "ttft_p50_speedup_prefix": round(ttft_prefix, 3),
     })
     return speedup
 

@@ -12,13 +12,16 @@ trajectory is those files' git history).
                        the fused-update bytes-accessed assertions
   bench_scaling     -> Fig. 7 / Fig. A.5 (multi-chip scaling, DP vs SGD)
   bench_batchsize   -> Fig. A.1          (throughput vs physical batch size)
-  bench_serving     -> (beyond the paper) continuous vs static batching
+  bench_serving     -> (beyond the paper) static vs continuous vs chunked
+                       prefill vs prefix sharing on a shared-prefix trace
 
-``--smoke`` runs the CI subset (bench_step + bench_breakdown) — fast enough
-for the 8-device job, still exercising the session/engine bench plumbing and
-the one-pass assertions so the benches can't bit-rot.
+``--smoke`` runs the CI subset (bench_step + bench_breakdown +
+bench_serving on a reduced trace) — fast enough for the 8-device job, still
+exercising the session/engine bench plumbing, the one-pass assertions and
+the serving token-identity assert so the benches can't bit-rot.
 """
 import argparse
+import inspect
 import sys
 import traceback
 
@@ -41,14 +44,15 @@ def _modules():
     all_mods = (bench_throughput, bench_memory, bench_recompile,
                 bench_precision, bench_breakdown, bench_step, bench_scaling,
                 bench_batchsize, bench_serving)
-    smoke_mods = (bench_step, bench_breakdown)
+    smoke_mods = (bench_step, bench_breakdown, bench_serving)
     return all_mods, smoke_mods
 
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
-                    help="CI subset: bench_step + bench_breakdown")
+                    help="CI subset: bench_step + bench_breakdown + "
+                         "bench_serving (reduced trace)")
     ap.add_argument("--only", default=None,
                     help="run a single bench by name (e.g. bench_step)")
     args = ap.parse_args(argv)
@@ -66,7 +70,11 @@ def main(argv=None) -> None:
     ok = True
     for mod in mods:
         try:
-            mod.main()
+            # benches with a smoke mode shrink their workload under --smoke
+            if args.smoke and "smoke" in inspect.signature(mod.main).parameters:
+                mod.main(smoke=True)
+            else:
+                mod.main()
         except Exception:
             ok = False
             traceback.print_exc()

@@ -336,30 +336,46 @@ class PrivacySession:
         # in-loop checkpoints then derive the step count host-side
         init_step = int(self.state.step) if ckpt and ckpt_every else 0
         last_async_at = done = 0
-        for step_i, indices in enumerate(sampler):
-            for pb in bmm.batches(indices):
-                # pb is already placed by the memory manager's executor hook;
-                # call the jitted fn directly rather than accumulate(), which
-                # would place a second time
-                self.state, _ = self._jitted("accumulate")(self.state,
-                                                           pb.data, pb.mask)
-            examples += len(indices)    # == sum of masks, without a device->host sync
-            self.update()
-            if ckpt and ckpt_every and (step_i + 1) % ckpt_every == 0:
-                # optimizer steps taken == step_i + 1 on this loop, known
-                # host-side — no device sync on the step path
-                self.checkpoint_async(ckpt, step=init_step + step_i + 1)
-                last_async_at = step_i + 1
-            if (step_i + 1) % tc.log_every == 0:
-                idx_eval = np.arange(min(tc.physical_batch, tc.n_data))
-                eb = dataset.fetch(idx_eval)
-                l = self.evaluate(eb, np.ones(len(idx_eval), np.float32))
-                eps = self.privacy_spent()[0]
-                rec = {"step": step_i + 1, "loss": round(l, 4),
-                       "eps": round(eps, 4), "logical_batch": len(indices),
-                       "throughput": round(examples / (time.time() - t0), 1)}
-                history.append(rec)
-            done = step_i + 1
+        try:
+            for step_i, indices in enumerate(sampler):
+                for pb in bmm.batches(indices):
+                    # pb is already placed by the memory manager's executor
+                    # hook; call the jitted fn directly rather than
+                    # accumulate(), which would place a second time
+                    self.state, _ = self._jitted("accumulate")(self.state,
+                                                               pb.data,
+                                                               pb.mask)
+                examples += len(indices)  # == sum of masks, no d2h sync
+                self.update()
+                if ckpt and ckpt_every and (step_i + 1) % ckpt_every == 0:
+                    # optimizer steps taken == step_i + 1 on this loop, known
+                    # host-side — no device sync on the step path
+                    self.checkpoint_async(ckpt, step=init_step + step_i + 1)
+                    last_async_at = step_i + 1
+                if (step_i + 1) % tc.log_every == 0:
+                    idx_eval = np.arange(min(tc.physical_batch, tc.n_data))
+                    eb = dataset.fetch(idx_eval)
+                    l = self.evaluate(eb, np.ones(len(idx_eval), np.float32))
+                    eps = self.privacy_spent()[0]
+                    rec = {"step": step_i + 1, "loss": round(l, 4),
+                           "eps": round(eps, 4),
+                           "logical_batch": len(indices),
+                           "throughput": round(examples / (time.time() - t0),
+                                               1)}
+                    history.append(rec)
+                done = step_i + 1
+        except BaseException:
+            # the loop died mid-flight: make the last enqueued snapshot
+            # durable before propagating, so a crash never loses the
+            # checkpoint that was already on its way to disk.  Flush
+            # failures are swallowed here — the loop's exception is the one
+            # the caller must see.
+            if ckpt:
+                try:
+                    self.checkpoint_wait()
+                except Exception:
+                    pass
+            raise
         if ckpt:
             if last_async_at and last_async_at == done:
                 # the final state is already enqueued — just make it durable
@@ -444,19 +460,24 @@ class PrivacySession:
     # -- serving ------------------------------------------------------------
 
     def serve_engine(self, *, max_slots: int = 4, max_len: int = 64,
-                     extras: dict = None):
+                     extras: dict = None, prefill_chunk: int = 1,
+                     token_budget: int = None, prefix_sharing: bool = True):
         """A :class:`~repro.serve.ServeEngine` over the session's CURRENT
-        parameters and executor, cached per (max_slots, max_len) so repeated
+        parameters and executor, cached per (max_slots, max_len,
+        prefill_chunk, token_budget, prefix_sharing) so repeated
         ``generate()`` calls reuse the compiled decode step.  On reuse the
         engine is refreshed — post-``fit()`` params AND the cache-pool
         template they imply (cross-KV caches are precomputed from params/
         extras, not just zeros)."""
         from ..serve import ServeEngine
-        key = ("serve", max_slots, max_len)
+        key = ("serve", max_slots, max_len, prefill_chunk, token_budget,
+               prefix_sharing)
         engine = self._jit_cache.get(key)
         if engine is None:
-            engine = ServeEngine.from_session(self, max_slots=max_slots,
-                                              max_len=max_len, extras=extras)
+            engine = ServeEngine.from_session(
+                self, max_slots=max_slots, max_len=max_len, extras=extras,
+                prefill_chunk=prefill_chunk, token_budget=token_budget,
+                prefix_sharing=prefix_sharing)
             self._jit_cache[key] = engine
         else:
             engine.refresh(self.state.params, extras=extras)

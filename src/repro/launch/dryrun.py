@@ -83,7 +83,7 @@ def lower_one(arch: str, shape_name: str, *, mesh: str = "production",
               unroll: bool = False, compile_: bool = True,
               layout: str = "2d", ce_chunk: int = 512,
               pe_bf16: bool = False, remat: bool = False,
-              smoke: bool = False) -> dict:
+              smoke: bool = False, prefill_chunk: int = 0) -> dict:
     cfg = _arch_config(arch, shape_name)
     if smoke:
         cfg = cfg.reduced()
@@ -177,6 +177,26 @@ def lower_one(arch: str, shape_name: str, *, mesh: str = "production",
 
         lowered = executor.lower_decode(serve_step, params_shape, cache_shape,
                                         tok, pos)
+        if prefill_chunk > 1 and hasattr(model, "prefill_step"):
+            # the serving engine's OTHER jit entry point: one fused call
+            # consuming (B, C) prompt tokens at per-slot offsets — lowered
+            # through the same executor path the engine executes
+            t_pf = time.time()
+            tok_c = jax.ShapeDtypeStruct(
+                (shape.global_batch, prefill_chunk), jnp.int32)
+            ntok = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+
+            def chunk_step(params, cache, tokens, p, n):
+                return model.prefill_step(params, cache, tokens, p, n)
+
+            pf_lowered = executor.lower_prefill_step(
+                chunk_step, params_shape, cache_shape, tok_c, pos, ntok)
+            rec["prefill_chunk"] = prefill_chunk
+            rec["prefill_lower_s"] = round(time.time() - t_pf, 2)
+            if compile_:
+                t_pf = time.time()
+                pf_lowered.compile()
+                rec["prefill_compile_s"] = round(time.time() - t_pf, 2)
         costs = costmodel.decode_costs(model, cfg, shape,
                                        dict(executor.mesh.shape))
 
@@ -257,6 +277,10 @@ def main():
     ap.add_argument("--remat", action="store_true")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced model configs (CPU-testable lowering)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="also lower the serving engine's chunked "
+                         "prefill_step at this chunk size for decode shapes "
+                         "(0 = skip)")
     ap.add_argument("--no-compile", action="store_true")
     ap.add_argument("--out", default=None, help="directory for JSON records")
     args = ap.parse_args()
@@ -284,7 +308,8 @@ def main():
                             unroll=args.unroll, compile_=not args.no_compile,
                             layout=args.layout, ce_chunk=args.ce_chunk,
                             pe_bf16=args.pe_bf16, remat=args.remat,
-                            smoke=args.smoke)
+                            smoke=args.smoke,
+                            prefill_chunk=args.prefill_chunk)
             rec["status"] = "ok"
             ok += 1
         except Exception as e:

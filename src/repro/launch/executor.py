@@ -181,6 +181,12 @@ class Executor:
         """(params, cache, tokens, pos) -> (logits, cache)."""
         return jax.jit(fn)
 
+    def jit_prefill_step(self, fn: Callable) -> Callable:
+        """(params, cache, tokens (B,C), pos (B,), n_tok (B,)) ->
+        (logits, cache) — the chunked-prefill entry point beside
+        jit_decode (see repro.serve.scheduler)."""
+        return jax.jit(fn)
+
     # -- placement ---------------------------------------------------------
 
     def place_state(self, state):
@@ -327,6 +333,9 @@ class MeshExecutor(Executor):
     def jit_decode(self, fn):
         return jax.jit(fn, donate_argnums=self._donate((1,)))
 
+    def jit_prefill_step(self, fn):
+        return jax.jit(fn, donate_argnums=self._donate((1,)))
+
     # -- placement ---------------------------------------------------------
 
     def place_state(self, state):
@@ -428,6 +437,23 @@ class MeshExecutor(Executor):
                 out_shardings=(bspec, cshard),
                 donate_argnums=(1,)).lower(params_shape, cache_shape,
                                            tok_spec, pos_spec)
+
+    def lower_prefill_step(self, fn, params_shape, cache_shape, tok_spec,
+                           pos_spec, ntok_spec):
+        """AOT lowering of the chunked-prefill entry point — the same
+        shardings as lower_decode with the (B, C) token chunk batched over
+        the data axes and the per-slot pos/n_tok vectors replicated."""
+        pshard = params_shardings(params_shape, self.mesh)
+        bsz = tok_spec.shape[0]
+        cshard = cache_shardings(cache_shape, self.mesh, bsz)
+        bspec = self.batch_sharding(bsz)
+        with self.mesh:
+            return jax.jit(
+                fn, in_shardings=(pshard, cshard, bspec, self._replicated,
+                                  self._replicated),
+                out_shardings=(bspec, cshard),
+                donate_argnums=(1,)).lower(params_shape, cache_shape,
+                                           tok_spec, pos_spec, ntok_spec)
 
 
 def build_executor(launch: Optional[LaunchConfig]) -> Executor:

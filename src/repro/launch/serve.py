@@ -87,16 +87,27 @@ def synthetic_trace(n: int, vocab: int, max_len: int, seed: int = 0,
 def replay(arch: str, *, requests: int, max_slots: int = 8,
            max_len: int = 64, seed: int = 0, temperature: float = 0.0,
            top_k: int = 0, ckpt: str | None = None,
-           mesh: str | None = None) -> dict:
-    """Replay a synthetic trace through the continuous-batching scheduler."""
+           mesh: str | None = None, prefill_chunk: int = 1,
+           token_budget: int | None = None, prefix_sharing: bool = True,
+           profile: str = "mixed") -> dict:
+    """Replay a synthetic trace through the continuous-batching scheduler;
+    reports throughput, per-request latency AND time-to-first-token
+    percentiles (the metric chunked prefill / prefix sharing improve), plus
+    the prefix-hit rate."""
     session = serve_session(arch, seed=seed, ckpt=ckpt, mesh=mesh)
-    engine = session.serve_engine(max_slots=max_slots, max_len=max_len)
+    engine = session.serve_engine(max_slots=max_slots, max_len=max_len,
+                                  prefill_chunk=prefill_chunk,
+                                  token_budget=token_budget,
+                                  prefix_sharing=prefix_sharing)
     reqs = synthetic_trace(requests, session.model_cfg.vocab, max_len,
-                           seed=seed, temperature=temperature, top_k=top_k)
+                           seed=seed, temperature=temperature, top_k=top_k,
+                           profile=profile)
     from ..serve import latency_percentiles
     out = engine.run(reqs)
     out["latency_p50_s"], out["latency_p95_s"] = latency_percentiles(
         out["results"])
+    out["prefill_chunk"] = engine.prefill_chunk
+    out["prefix_sharing"] = engine.prefix_sharing
     out["results"] = [{k: v for k, v in r.items() if k != "generated"}
                       for r in out["results"]]     # keep the report readable
     return out
@@ -121,6 +132,20 @@ def main():
                     help="replay a synthetic N-request trace through the "
                          "continuous-batching scheduler instead of one "
                          "fixed batch")
+    ap.add_argument("--prefill-chunk", type=int, default=1,
+                    help="prompt tokens consumed per slot per iteration "
+                         "(1 = prefill-by-decode; > 1 runs the fused "
+                         "chunked prefill_step)")
+    ap.add_argument("--token-budget", type=int, default=None,
+                    help="max tokens consumed per scheduler iteration "
+                         "(throttles prefill; decoding slots always get "
+                         "their 1 token)")
+    ap.add_argument("--no-prefix-sharing", action="store_true",
+                    help="disable prompt prefix-cache sharing across "
+                         "requests (pure-KV archs share by default)")
+    ap.add_argument("--profile", default="mixed",
+                    choices=["mixed", "bimodal"],
+                    help="synthetic trace shape for --requests mode")
     ap.add_argument("--ckpt", help="serve params restored from a DP-trained "
                                    "checkpoint instead of a fresh init")
     ap.add_argument("--mesh", default=None,
@@ -131,7 +156,11 @@ def main():
         out = replay(args.arch, requests=args.requests, max_slots=args.batch,
                      max_len=args.max_len, seed=args.seed,
                      temperature=args.temperature, top_k=args.top_k,
-                     ckpt=args.ckpt, mesh=args.mesh)
+                     ckpt=args.ckpt, mesh=args.mesh,
+                     prefill_chunk=args.prefill_chunk,
+                     token_budget=args.token_budget,
+                     prefix_sharing=not args.no_prefix_sharing,
+                     profile=args.profile)
     else:
         out = generate(args.arch, batch=args.batch,
                        prompt_len=args.prompt_len, new_tokens=args.tokens,

@@ -155,6 +155,39 @@ def decode_positions(pos, B: int):
     return pos
 
 
+# ---------------------------------------------------------------------------
+# chunked-prefill helpers (repro.serve: consume (B, C) tokens per fused call)
+# ---------------------------------------------------------------------------
+
+def chunk_valid(tokens, n_tok):
+    """(B, C) bool mask: token j of each row is consumed iff j < n_tok[row].
+    Rows may consume 0..C tokens; unconsumed tail tokens must leave the
+    cache untouched (their writes are dropped / state updates masked)."""
+    C = tokens.shape[1]
+    return jnp.arange(C, dtype=jnp.int32)[None, :] < n_tok[:, None]
+
+
+def gather_last(x, n_tok):
+    """x (B, C, ...) -> (B, 1, ...): each row's entry at its LAST consumed
+    chunk index n_tok-1 (clipped for n_tok == 0 rows, whose output is
+    ignored by the scheduler)."""
+    last = jnp.clip(n_tok - 1, 0, x.shape[1] - 1).astype(jnp.int32)
+    idx = last.reshape((-1,) + (1,) * (x.ndim - 1))
+    return jnp.take_along_axis(x, idx, axis=1)
+
+
+def scatter_rows(buf, slot, vals, valid):
+    """Write vals (B, T, ...) into buf (B, S, ...) at per-token indices
+    slot (B, T).  Invalid chunk-tail tokens are redirected out of bounds and
+    dropped by the scatter — no second cache-sized select buffer."""
+    B, T = slot.shape
+    rows = jnp.broadcast_to(jnp.arange(B)[:, None], (B, T))
+    if valid is not None:
+        slot = jnp.where(valid, slot, buf.shape[1])
+        return buf.at[rows, slot].set(vals.astype(buf.dtype), mode="drop")
+    return buf.at[rows, slot].set(vals.astype(buf.dtype))
+
+
 def attn_params(key, d_model: int, a: AttnCfg):
     ks = jax.random.split(key, 6)
     p = {
@@ -202,14 +235,18 @@ def _qk_normalize(tape, scope, path, p, q, k, a: AttnCfg):
 
 def attention(tape: Tape, scope: str, path: str, p, x, a: AttnCfg, *,
               positions=None, kv_x=None, cache: Optional[Dict] = None,
-              pos=None):
+              pos=None, valid=None):
     """Self or cross attention.
 
     Training: positions (B,T) (or None for bidirectional), cache None.
-    Decode: x (B,1,D), cache {'k','v'} (B,S,Hkv,Dh); pos int32 current
-    position — a scalar (whole batch in lockstep) or a (B,) vector of
-    per-sequence positions (continuous batching: each cache slot holds an
-    independent request at its own depth). Returns (out, new_cache).
+    Decode: x (B,T,D) — T == 1 for plain decode, T == C for a chunked
+    prefill step — cache {'k','v'} (B,S,Hkv,Dh); pos int32 start position —
+    a scalar (whole batch in lockstep) or a (B,) vector of per-sequence
+    positions (continuous batching: each cache slot holds an independent
+    request at its own depth); token i of a chunk lands at pos+i.  valid
+    (B,T) masks unconsumed chunk-tail tokens: their KV writes are dropped
+    and their outputs are garbage the caller ignores.
+    Returns (out, new_cache).
     """
     B, T, _ = x.shape
     H, Hkv, Dh = a.n_heads, a.n_kv_heads, a.head_dim
@@ -234,29 +271,44 @@ def attention(tape: Tape, scope: str, path: str, p, x, a: AttnCfg, *,
         mask = jnp.ones((T, k.shape[1]), bool)
         o = _sdpa(q.reshape(B, T, Hkv, G, Dh), k, v, mask)
     elif cache is not None:
-        # decode self-attention: project 1 token, write into the (ring) cache
+        # decode self-attention: project the chunk's T tokens (T == 1 for
+        # plain decode) and write them at per-slot offsets pos..pos+T-1 in
+        # one scatter; within-chunk causality falls out of the read mask
+        # (token i sees cache rows <= pos+i, which includes tokens j <= i of
+        # its own chunk — written by the same scatter — and nothing later)
         posb = decode_positions(pos, B)                    # (B,) int32
+        if a.window and T > 1:
+            # a ring cache cannot take a single-scatter chunk: once a slot's
+            # positions wrap the window, a later in-chunk token's write lands
+            # on the ring row an earlier in-chunk token must still read, and
+            # the read mask's position reconstruction then attends to the
+            # NEW key under the old position — silently wrong tokens.
+            # Sliding-window archs serve with prefill_chunk=1 (also enforced
+            # at ServeEngine construction).
+            raise ValueError(
+                f"chunked prefill (T={T}) is unsupported on sliding-window "
+                f"attention (window={a.window}): in-chunk ring writes "
+                f"overwrite rows earlier chunk tokens still read once "
+                f"positions wrap; serve this arch with prefill_chunk=1")
         k1, v1 = proj("wk", x), proj("wv", x)
         q, k1 = _qk_normalize(tape, scope, path, p, q, k1, a)
+        tok_pos = posb[:, None] + jnp.arange(T, dtype=jnp.int32)   # (B,T)
         if a.use_rope:
-            pp = jnp.broadcast_to(posb[:, None], (B, T))
-            q = apply_rope(q, pp, a.rope_theta)
-            k1 = apply_rope(k1, pp, a.rope_theta)
+            q = apply_rope(q, tok_pos, a.rope_theta)
+            k1 = apply_rope(k1, tok_pos, a.rope_theta)
         S = cache["k"].shape[1]
-        slot = (posb % S) if a.window else posb            # (B,)
-        rows = jnp.arange(B)
-        ck = cache["k"].at[rows, slot].set(k1[:, 0].astype(cache["k"].dtype))
-        cv = cache["v"].at[rows, slot].set(v1[:, 0].astype(cache["v"].dtype))
+        slot = (tok_pos % S) if a.window else tok_pos      # (B,T)
         new_cache = dict(cache)
+        ck = scatter_rows(cache["k"], slot, k1, valid)
+        cv = scatter_rows(cache["v"], slot, v1, valid)
         new_cache["k"], new_cache["v"] = ck, cv
-        sl = jnp.arange(S)[None, :]                        # (1,S)
-        pc = posb[:, None]                                 # (B,1)
+        sl = jnp.arange(S)[None, None, :]                  # (1,1,S)
+        pc = tok_pos[:, :, None]                           # (B,T,1)
         if a.window:
             orig = pc - jnp.mod(pc - sl, S)     # original position in ring slot
-            valid = (orig >= 0) & (orig <= pc) & (orig > pc - a.window)
+            mask = (orig >= 0) & (orig <= pc) & (orig > pc - a.window)
         else:
-            valid = sl <= pc                               # (B,S)
-        mask = jnp.broadcast_to(valid[:, None, :], (B, T, S))
+            mask = sl <= pc                                # (B,T,S)
         o = _sdpa(q.reshape(B, T, Hkv, G, Dh), ck, cv, mask)
     else:
         # full-sequence self attention (training / prefill)

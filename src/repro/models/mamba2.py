@@ -111,7 +111,7 @@ def mamba_params(key, cfg: ArchConfig):
 
 
 def _mamba_pre(tape: Tape, scope: str, path: str, p, x, cfg: ArchConfig,
-               conv_window=None):
+               conv_window=None, valid=None):
     """Shared projection/conv/gating prologue. Returns
     (z, xs, Bm, Cm, dt, u, new_conv_tail)."""
     B, T, D = x.shape
@@ -128,10 +128,22 @@ def _mamba_pre(tape: Tape, scope: str, path: str, p, x, cfg: ArchConfig,
                                    param_path=f"{path}.conv.w")
         new_tail = None
     else:
-        win = jnp.concatenate([conv_window, xbc], axis=1)      # (B,K,C)
-        xbc_c = jnp.einsum("bkc,kc->bc", win.astype(jnp.float32),
-                           p["conv"]["w"])[:, None].astype(x.dtype)
-        new_tail = win[:, 1:]
+        # causal depthwise conv over [cached tail, chunk]: token t reads rows
+        # [t, t+K) of the concatenation (T == 1 for plain decode)
+        K = conv_window.shape[1] + 1
+        win = jnp.concatenate([conv_window, xbc], axis=1)      # (B,K-1+T,C)
+        wins = jnp.stack([win[:, t:t + K] for t in range(T)], axis=1)
+        xbc_c = jnp.einsum("btkc,kc->btc", wins.astype(jnp.float32),
+                           p["conv"]["w"]).astype(x.dtype)
+        if valid is None:
+            new_tail = win[:, T:]
+        else:
+            # each row's tail advances by its OWN consumed count: the last
+            # K-1 rows of [tail, consumed tokens] — never past an
+            # unconsumed chunk-tail token
+            n_tok = valid.sum(axis=1, dtype=jnp.int32)         # (B,)
+            idx = n_tok[:, None] + jnp.arange(K - 1, dtype=jnp.int32)
+            new_tail = jnp.take_along_axis(win, idx[:, :, None], axis=1)
     xbc_c = jax.nn.silu(xbc_c.astype(jnp.float32)).astype(x.dtype)
     xs, Bm, Cm = (xbc_c[..., :di], xbc_c[..., di:di + N],
                   xbc_c[..., di + N:])
@@ -171,16 +183,40 @@ def mamba_block(tape: Tape, scope: str, path: str, p, x, cfg: ArchConfig):
     return _mamba_post(tape, scope, path, p, y, xs, z, cfg)
 
 
-def mamba_decode(p, x, cfg: ArchConfig, cache):
-    """One-token decode. cache {'state' (B,H,N,P), 'conv' (B,K-1,C)}."""
+def mamba_decode(p, x, cfg: ArchConfig, cache, valid=None):
+    """Cache decode over a chunk of T >= 1 tokens (T == 1 is plain decode).
+    cache {'state' (B,H,N,P), 'conv' (B,K-1,C)}; valid (B,T) masks
+    unconsumed chunk-tail tokens (their dt/decay are zeroed so the state
+    recurrence is the identity for them; their outputs are garbage the
+    caller ignores).
+
+    The recurrence is a sequential scan of :func:`ssd_step` — NOT the
+    chunkwise SSD form — on purpose: the serving contract (tests/
+    test_serve.py) is that a chunked prefill is BIT-identical to the same
+    tokens decoded one at a time, and the chunkwise L-matrix reassociates
+    the float math.  Projections/conv/gating are still batched over T.
+    """
     B, T, D = x.shape
     H, P = cfg.nheads_ssm, cfg.ssm_head_dim
     tape = Tape()
     z, xs, Bm, Cm, dt, u, new_tail = _mamba_pre(
-        tape, "m", "-", p, x, cfg, conv_window=cache["conv"])
-    y1, state = ssd_step(cache["state"], xs[:, 0].reshape(B, H, P),
-                         dt[:, 0], u[:, 0], Bm[:, 0], Cm[:, 0])
-    y = y1[:, None].astype(x.dtype)                            # (B,1,H,P)
+        tape, "m", "-", p, x, cfg, conv_window=cache["conv"], valid=valid)
+    if valid is not None:
+        # masked steps are the identity: decay exp(0) = 1, update dt = 0
+        dt = jnp.where(valid[..., None], dt, 0.0)
+        u = jnp.where(valid[..., None], u, 0.0)
+    xsr = xs.reshape(B, T, H, P)
+
+    def stepf(state, inp):
+        x_t, dt_t, u_t, B_t, C_t = inp
+        y_t, state = ssd_step(state, x_t, dt_t, u_t, B_t, C_t)
+        return state, y_t
+
+    state, ys = jax.lax.scan(
+        stepf, cache["state"],
+        (xsr.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+         u.transpose(1, 0, 2), Bm.transpose(1, 0, 2), Cm.transpose(1, 0, 2)))
+    y = ys.transpose(1, 0, 2, 3).astype(x.dtype)               # (B,T,H,P)
     out = _mamba_post(tape, "m", "-", p, y, xs, z, cfg)
     return out, {"state": state, "conv": new_tail}
 
@@ -239,7 +275,7 @@ class Mamba2LM:
         return {"blocks": jax.tree.map(
             lambda a: jnp.broadcast_to(a, (n,) + a.shape), one)}
 
-    def decode_step(self, params, cache, tokens, pos):
+    def _decode_core(self, params, cache, tokens, pos, valid):
         cfg = self.cfg
         x = jnp.take(params["emb"]["w"], tokens, axis=0).astype(cfg.act_dtype)
 
@@ -247,10 +283,24 @@ class Mamba2LM:
             p, c = xs
             t = Tape()
             h = cm.rmsnorm(t, "ln", carry, p["ln"], path="-")
-            o, nc = mamba_decode(p["mamba"], h, cfg, c)
+            o, nc = mamba_decode(p["mamba"], h, cfg, c, valid=valid)
             return carry + o, nc
 
         x, ncache = jax.lax.scan(step, x, (params["blocks"], cache["blocks"]))
         x = cm.rmsnorm(Tape(), "lnf", x, params["lnf"], path="lnf")
+        return x, {"blocks": ncache}
+
+    def decode_step(self, params, cache, tokens, pos):
+        x, ncache = self._decode_core(params, cache, tokens, pos, None)
         logits = x @ params["head"]["w"].astype(x.dtype)
-        return logits[:, 0], {"blocks": ncache}
+        return logits[:, 0], ncache
+
+    def prefill_step(self, params, cache, tokens, pos, n_tok):
+        """Chunked prefill (see DenseLM.prefill_step): tokens (B,C) at
+        per-slot offsets, n_tok (B,) consumed per row; SSM state/conv only
+        advance over consumed tokens."""
+        x, ncache = self._decode_core(params, cache, tokens, pos,
+                                      cm.chunk_valid(tokens, n_tok))
+        xl = cm.gather_last(x, n_tok)
+        logits = xl @ params["head"]["w"].astype(x.dtype)
+        return logits[:, 0], ncache

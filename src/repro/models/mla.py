@@ -77,31 +77,32 @@ def mla_attention(tape: Tape, scope: str, path: str, p, x, cfg: ArchConfig,
                    param_path=f"{path}.wo")
 
 
-def mla_decode(p, x, cfg: ArchConfig, cache, pos):
-    """Absorbed-matmul single-token decode against the (c, k_rope) cache.
-    ``pos`` is a scalar or a (B,) vector of per-slot positions."""
+def mla_decode(p, x, cfg: ArchConfig, cache, pos, valid=None):
+    """Absorbed-matmul decode against the (c, k_rope) cache, over a chunk
+    of T >= 1 tokens at per-slot offsets (T == 1 is plain decode).
+    ``pos`` is a scalar or a (B,) vector of per-slot start positions;
+    ``valid`` (B,T) masks unconsumed chunk-tail tokens (their cache writes
+    are dropped)."""
     B, T, D = x.shape
     H = cfg.n_heads
     nope, vh, rd = _dims(cfg)
     r = cfg.kv_lora
     posb = cm.decode_positions(pos, B)                     # (B,)
+    tok_pos = posb[:, None] + jnp.arange(T, dtype=jnp.int32)   # (B,T)
 
     q = (x @ p["wq"]["w"]).reshape(B, T, H, nope + rd)
     q_nope, q_rope = q[..., :nope], q[..., nope:]
-    pp = jnp.broadcast_to(posb[:, None], (B, T))
-    q_rope = cm.apply_rope(q_rope, pp, cfg.rope_theta)
+    q_rope = cm.apply_rope(q_rope, tok_pos, cfg.rope_theta)
 
     c1 = x @ p["wdkv"]["w"]
     c1f = c1.astype(jnp.float32)
     c1 = (c1f * jax.lax.rsqrt(jnp.mean(c1f * c1f, -1, keepdims=True) + 1e-6)
           ).astype(x.dtype) * p["ckv_norm"]["w"].astype(x.dtype)
     kr1 = (x @ p["wkr"]["w"]).reshape(B, T, 1, rd)
-    kr1 = cm.apply_rope(kr1, pp, cfg.rope_theta)
+    kr1 = cm.apply_rope(kr1, tok_pos, cfg.rope_theta)
 
-    rows = jnp.arange(B)
-    cc = cache["c"].at[rows, posb].set(c1[:, 0].astype(cache["c"].dtype))
-    ckr = cache["kr"].at[rows, posb].set(
-        kr1[:, 0, 0].astype(cache["kr"].dtype))
+    cc = cm.scatter_rows(cache["c"], tok_pos, c1, valid)
+    ckr = cm.scatter_rows(cache["kr"], tok_pos, kr1[:, :, 0], valid)
     S = cc.shape[1]
 
     wukv = p["wukv"]["w"].reshape(r, H, nope + vh)
@@ -112,8 +113,8 @@ def mla_decode(p, x, cfg: ArchConfig, cache, pos):
     s = (jnp.einsum("bthr,bsr->bhts", q_c, cc.astype(jnp.float32))
          + jnp.einsum("bthd,bsd->bhts", q_rope.astype(jnp.float32),
                       ckr.astype(jnp.float32))) * (nope + rd) ** -0.5
-    valid = jnp.arange(S)[None, :] <= posb[:, None]        # (B,S)
-    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    vis = jnp.arange(S)[None, None, :] <= tok_pos[:, :, None]  # (B,T,S)
+    s = jnp.where(vis[:, None], s, -1e30)
     a = jax.nn.softmax(s, axis=-1)
     ctx = jnp.einsum("bhts,bsr->bthr", a, cc.astype(jnp.float32))
     o = jnp.einsum("bthr,rhd->bthd", ctx, w_uv.astype(jnp.float32))
@@ -216,8 +217,9 @@ class DeepseekV2LM:
                 "moe_blocks": jax.tree.map(
                     lambda a: jnp.broadcast_to(a, (cfg.n_layers - nd,) + a.shape), one)}
 
-    def decode_step(self, params, cache, tokens, pos):
+    def _decode_core(self, params, cache, tokens, pos, valid):
         cfg = self.cfg
+        T = tokens.shape[1]
         x = jnp.take(params["emb"]["w"], tokens, axis=0).astype(cfg.act_dtype)
 
         def rms(x, p):
@@ -227,7 +229,8 @@ class DeepseekV2LM:
 
         def dense_step(carry, xs):
             p, c = xs
-            a, nc = mla_decode(p["attn"], rms(carry, p["ln1"]), cfg, c, pos)
+            a, nc = mla_decode(p["attn"], rms(carry, p["ln1"]), cfg, c, pos,
+                               valid=valid)
             carry = carry + a
             h = rms(carry, p["ln2"])
             carry = carry + cm.swiglu(Tape(), "mlp", "-", p["mlp"], h)
@@ -235,10 +238,11 @@ class DeepseekV2LM:
 
         def moe_step(carry, xs):
             p, c = xs
-            a, nc = mla_decode(p["attn"], rms(carry, p["ln1"]), cfg, c, pos)
+            a, nc = mla_decode(p["attn"], rms(carry, p["ln1"]), cfg, c, pos,
+                               valid=valid)
             carry = carry + a
             h = rms(carry, p["ln2"])
-            y, _ = moe_block(Tape(), "moe", "-", p["moe"], h, cfg)
+            y, _ = moe_block(Tape(), "moe", "-", p["moe"], h, cfg, min_cap=T)
             y = y + cm.swiglu(Tape(), "shared", "-", p["shared"], h)
             return carry + y, nc
 
@@ -247,5 +251,18 @@ class DeepseekV2LM:
         x, nmc = jax.lax.scan(moe_step, x,
                               (params["moe_blocks"], cache["moe_blocks"]))
         x = rms(x, params["lnf"])
+        return x, {"dense_blocks": ndc, "moe_blocks": nmc}
+
+    def decode_step(self, params, cache, tokens, pos):
+        x, new_cache = self._decode_core(params, cache, tokens, pos, None)
         logits = x @ params["head"]["w"].astype(x.dtype)
-        return logits[:, 0], {"dense_blocks": ndc, "moe_blocks": nmc}
+        return logits[:, 0], new_cache
+
+    def prefill_step(self, params, cache, tokens, pos, n_tok):
+        """Chunked prefill against the latent cache (see
+        DenseLM.prefill_step)."""
+        x, new_cache = self._decode_core(params, cache, tokens, pos,
+                                         cm.chunk_valid(tokens, n_tok))
+        xl = cm.gather_last(x, n_tok)
+        logits = xl @ params["head"]["w"].astype(x.dtype)
+        return logits[:, 0], new_cache

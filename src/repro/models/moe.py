@@ -34,11 +34,19 @@ def moe_params(key, d_model: int, n_experts: int, d_ff: int):
     }
 
 
-def moe_block(tape: Tape, scope: str, path: str, p, x, cfg: ArchConfig):
-    """x (B,T,D) -> (out (B,T,D), aux_loss (B,))."""
+def moe_block(tape: Tape, scope: str, path: str, p, x, cfg: ArchConfig,
+              min_cap: int = 1):
+    """x (B,T,D) -> (out (B,T,D), aux_loss (B,)).
+
+    ``min_cap`` floors the per-expert capacity: chunked decode passes the
+    chunk length T so no token is ever dropped (top-k picks distinct experts
+    per token, so an expert receives at most T assignments per row) — a
+    token routed alone (T=1, never dropped) must not be dropped just because
+    it arrived inside a prefill chunk, or chunked serving would diverge from
+    per-token decoding."""
     B, T, D = x.shape
     E, K = cfg.n_experts, cfg.top_k
-    cap = max(1, math.ceil(T * K * cfg.capacity_factor / E))
+    cap = max(min_cap, math.ceil(T * K * cfg.capacity_factor / E))
 
     logits = L.dense(tape, f"{scope}.router", x, p["router"]["w"],
                      param_path=f"{path}.router")
@@ -163,8 +171,9 @@ class MoeLM:
         return {"blocks": jax.tree.map(
             lambda a: jnp.broadcast_to(a, (n,) + a.shape), c)}
 
-    def decode_step(self, params, cache, tokens, pos):
+    def _decode_core(self, params, cache, tokens, pos, valid):
         cfg = self.cfg
+        T = tokens.shape[1]
         tape = Tape()
         x = L.embed(tape, "emb", tokens, params["emb"]["w"], param_path="emb.w")
         x = x.astype(cfg.act_dtype)
@@ -174,14 +183,28 @@ class MoeLM:
             t = Tape()
             h = cm.rmsnorm(t, "ln1", carry, p["ln1"], path="-")
             a, nc = cm.attention(t, "attn", "-", p["attn"], h, self.acfg,
-                                 cache=c, pos=pos)
+                                 cache=c, pos=pos, valid=valid)
             carry = carry + a
             t2 = Tape()
             h = cm.rmsnorm(t2, "ln2", carry, p["ln2"], path="-")
-            y, _ = moe_block(t2, "moe", "-", p["moe"], h, self.cfg)
+            y, _ = moe_block(t2, "moe", "-", p["moe"], h, self.cfg, min_cap=T)
             return carry + y, nc
 
         x, new_blocks = jax.lax.scan(step, x, (params["blocks"], cache["blocks"]))
         x = cm.rmsnorm(Tape(), "lnf", x, params["lnf"], path="lnf")
+        return x, {"blocks": new_blocks}
+
+    def decode_step(self, params, cache, tokens, pos):
+        x, new_cache = self._decode_core(params, cache, tokens, pos, None)
         logits = L.dense(Tape(), "head", x, params["head"]["w"], param_path="head")
-        return logits[:, 0], {"blocks": new_blocks}
+        return logits[:, 0], new_cache
+
+    def prefill_step(self, params, cache, tokens, pos, n_tok):
+        """Chunked prefill (see DenseLM.prefill_step); the MoE capacity is
+        floored at the chunk length so no in-chunk token is dropped."""
+        x, new_cache = self._decode_core(params, cache, tokens, pos,
+                                         cm.chunk_valid(tokens, n_tok))
+        xl = cm.gather_last(x, n_tok)
+        logits = L.dense(Tape(), "head", xl, params["head"]["w"],
+                         param_path="head")
+        return logits[:, 0], new_cache

@@ -75,10 +75,7 @@ class DenseLM:
         return {"blocks": jax.tree.map(
             lambda a: jnp.broadcast_to(a, (L_,) + a.shape), c)}
 
-    def decode_step(self, params, cache, tokens, pos):
-        """One-token decode: tokens (B,1) -> (logits (B,V), new cache).
-        ``pos`` is a scalar (lockstep batch) or a (B,) vector of per-slot
-        positions (continuous batching — see repro.serve)."""
+    def _decode_core(self, params, cache, tokens, pos, valid):
         cfg = self.cfg
         tape = Tape()
         x = L.embed(tape, "emb", tokens, params["emb"]["w"], param_path="emb.w")
@@ -88,7 +85,7 @@ class DenseLM:
             p, c = xs
             h = cm.rmsnorm(tape.subtape({}), "ln1", carry, p["ln1"], path="-")
             a, nc = cm.attention(tape.subtape({}), "attn", "-", p["attn"], h,
-                                 self.acfg, cache=c, pos=pos)
+                                 self.acfg, cache=c, pos=pos, valid=valid)
             carry = carry + a
             h = cm.rmsnorm(tape.subtape({}), "ln2", carry, p["ln2"], path="-")
             carry = carry + cm.swiglu(tape.subtape({}), "mlp", "-", p["mlp"], h)
@@ -96,5 +93,25 @@ class DenseLM:
 
         x, new_blocks = jax.lax.scan(step, x, (params["blocks"], cache["blocks"]))
         x = cm.rmsnorm(tape, "lnf", x, params["lnf"], path="lnf")
-        logits = L.dense(tape, "head", x, params["head"]["w"], param_path="head")
-        return logits[:, 0], {"blocks": new_blocks}
+        return x, {"blocks": new_blocks}
+
+    def decode_step(self, params, cache, tokens, pos):
+        """One-token decode: tokens (B,1) -> (logits (B,V), new cache).
+        ``pos`` is a scalar (lockstep batch) or a (B,) vector of per-slot
+        positions (continuous batching — see repro.serve)."""
+        x, new_cache = self._decode_core(params, cache, tokens, pos, None)
+        logits = L.dense(Tape(), "head", x, params["head"]["w"],
+                         param_path="head")
+        return logits[:, 0], new_cache
+
+    def prefill_step(self, params, cache, tokens, pos, n_tok):
+        """Chunked prefill: consume tokens (B,C) at per-slot offsets pos
+        (B,), row i taking its first n_tok[i] tokens (0..C — chunk-tail
+        tokens past n_tok leave the cache untouched).  Returns (logits at
+        each row's LAST consumed token (B,V), new cache)."""
+        x, new_cache = self._decode_core(params, cache, tokens, pos,
+                                         cm.chunk_valid(tokens, n_tok))
+        xl = cm.gather_last(x, n_tok)
+        logits = L.dense(Tape(), "head", xl, params["head"]["w"],
+                         param_path="head")
+        return logits[:, 0], new_cache

@@ -134,7 +134,7 @@ class VisionLM:
                         a, (self.n_super, self.self_per) + a.shape), sc),
                 "cross": cross}
 
-    def decode_step(self, params, cache, tokens, pos):
+    def _decode_core(self, params, cache, tokens, pos, valid):
         cfg = self.cfg
         x = jnp.take(params["emb"]["w"], tokens, axis=0).astype(cfg.act_dtype)
 
@@ -143,7 +143,7 @@ class VisionLM:
             t = Tape()
             h = cm.rmsnorm(t, "ln1", carry, p["ln1"], path="-")
             a, nc = cm.attention(t, "attn", "-", p["attn"], h, self.acfg,
-                                 cache=c, pos=pos)
+                                 cache=c, pos=pos, valid=valid)
             carry = carry + a
             h = cm.rmsnorm(Tape(), "ln2", carry, p["ln2"], path="-")
             carry = carry + cm.swiglu(Tape(), "mlp", "-", p["mlp"], h)
@@ -165,5 +165,18 @@ class VisionLM:
         x, nself = jax.lax.scan(super_step, x,
                                 (params["supers"], cache["self"], cache["cross"]))
         x = cm.rmsnorm(Tape(), "lnf", x, params["lnf"], path="-")
+        return x, {"self": nself, "cross": cache["cross"]}
+
+    def decode_step(self, params, cache, tokens, pos):
+        x, new_cache = self._decode_core(params, cache, tokens, pos, None)
         logits = x @ params["head"]["w"].astype(x.dtype)
-        return logits[:, 0], {"self": nself, "cross": cache["cross"]}
+        return logits[:, 0], new_cache
+
+    def prefill_step(self, params, cache, tokens, pos, n_tok):
+        """Chunked prefill (cross-attention against the precomputed image KV
+        is already chunk-shaped); see DenseLM.prefill_step."""
+        x, new_cache = self._decode_core(params, cache, tokens, pos,
+                                         cm.chunk_valid(tokens, n_tok))
+        xl = cm.gather_last(x, n_tok)
+        logits = xl @ params["head"]["w"].astype(x.dtype)
+        return logits[:, 0], new_cache

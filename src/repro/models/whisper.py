@@ -142,18 +142,19 @@ class WhisperLM:
                     lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape), sc),
                 "cross": cross}
 
-    def decode_step(self, params, cache, tokens, pos):
+    def _decode_core(self, params, cache, tokens, pos, valid):
         cfg = self.cfg
         x = jnp.take(params["emb"]["w"], tokens, axis=0).astype(cfg.act_dtype)
         posb = cm.decode_positions(pos, tokens.shape[0])
-        x = x + sinusoid(posb[:, None], cfg.d_model).astype(x.dtype)
+        tok_pos = posb[:, None] + jnp.arange(tokens.shape[1], dtype=jnp.int32)
+        x = x + sinusoid(tok_pos, cfg.d_model).astype(x.dtype)
 
         def step(carry, xs):
             p, sc, cc = xs
             t = Tape()
             h = cm.layernorm(t, "ln1", carry, p["ln1"], path="-")
             a, nsc = cm.attention(t, "attn", "-", p["attn"], h, self.acfg,
-                                  cache=sc, pos=pos)
+                                  cache=sc, pos=pos, valid=valid)
             carry = carry + a
             t2 = Tape()
             h = cm.layernorm(t2, "lnx", carry, p["lnx"], path="-")
@@ -168,5 +169,19 @@ class WhisperLM:
         x, nself = jax.lax.scan(step, x, (params["dec_blocks"], cache["self"],
                                           cache["cross"]))
         x = cm.layernorm(Tape(), "dec_lnf", x, params["dec_lnf"], path="-")
+        return x, {"self": nself, "cross": cache["cross"]}
+
+    def decode_step(self, params, cache, tokens, pos):
+        x, new_cache = self._decode_core(params, cache, tokens, pos, None)
         logits = x @ params["head"]["w"].astype(x.dtype)
-        return logits[:, 0], {"self": nself, "cross": cache["cross"]}
+        return logits[:, 0], new_cache
+
+    def prefill_step(self, params, cache, tokens, pos, n_tok):
+        """Chunked prefill through the decoder (cross-attention against the
+        precomputed encoder KV is already chunk-shaped); see
+        DenseLM.prefill_step."""
+        x, new_cache = self._decode_core(params, cache, tokens, pos,
+                                         cm.chunk_valid(tokens, n_tok))
+        xl = cm.gather_last(x, n_tok)
+        logits = xl @ params["head"]["w"].astype(x.dtype)
+        return logits[:, 0], new_cache

@@ -119,7 +119,7 @@ class Zamba2LM:
                 lambda a: jnp.broadcast_to(a, (self.tail,) + a.shape), mc)
         return cache
 
-    def decode_step(self, params, cache, tokens, pos):
+    def _decode_core(self, params, cache, tokens, pos, valid):
         cfg = self.cfg
         x = jnp.take(params["emb"]["w"], tokens, axis=0).astype(cfg.act_dtype)
         sp = params["shared"]
@@ -128,14 +128,14 @@ class Zamba2LM:
         def mamba_step(carry, xs):
             p, c = xs
             h = cm.rmsnorm(Tape(), "ln", carry, p["ln"], path="-")
-            o, nc = mamba_decode(p["mamba"], h, cfg, c)
+            o, nc = mamba_decode(p["mamba"], h, cfg, c, valid=valid)
             return carry + o, nc
 
         def super_step(carry, xs):
             p, ac, mcs = xs
             h = cm.rmsnorm(Tape(), "ln1", carry, sp["ln1"], path="-")
             a, nac = cm.attention(Tape(), "attn", "-", sp["attn"], h, self.acfg,
-                                  cache=ac, pos=pos)
+                                  cache=ac, pos=pos, valid=valid)
             carry = carry + a
             h = cm.rmsnorm(Tape(), "ln2", carry, sp["ln2"], path="-")
             carry = carry + cm.swiglu(Tape(), "mlp", "-", sp["mlp"], h)
@@ -150,5 +150,19 @@ class Zamba2LM:
                                     (params["tailb"], cache["tailb"]))
             new_cache["tailb"] = ntail
         x = cm.rmsnorm(t, "lnf", x, params["lnf"], path="lnf")
+        return x, new_cache
+
+    def decode_step(self, params, cache, tokens, pos):
+        x, new_cache = self._decode_core(params, cache, tokens, pos, None)
         logits = x @ params["head"]["w"].astype(x.dtype)
+        return logits[:, 0], new_cache
+
+    def prefill_step(self, params, cache, tokens, pos, n_tok):
+        """Chunked prefill through the hybrid stack: KV writes dropped and
+        SSM updates masked for unconsumed chunk-tail tokens (see
+        DenseLM.prefill_step)."""
+        x, new_cache = self._decode_core(params, cache, tokens, pos,
+                                         cm.chunk_valid(tokens, n_tok))
+        xl = cm.gather_last(x, n_tok)
+        logits = xl @ params["head"]["w"].astype(x.dtype)
         return logits[:, 0], new_cache

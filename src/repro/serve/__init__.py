@@ -6,22 +6,27 @@ The ROADMAP's "heavy traffic" north star needs more than a one-shot batched
 
   * :mod:`~repro.serve.request`    — Request / SamplingParams / RequestState
   * :mod:`~repro.serve.cache_pool` — one (max_slots, max_len) cache, per-slot
-                                     insert/evict/reset, [B] position vector
+                                     insert/evict/reset, [B] position vector,
+                                     PrefixIndex prompt-prefix sharing with
+                                     device-side row copies
   * :mod:`~repro.serve.sampling`   — fused per-request greedy/temperature/
                                      top-k token selection
   * :mod:`~repro.serve.scheduler`  — Orca-style iteration-level continuous
-                                     batching with mid-flight admission and
-                                     retirement
+                                     batching with mid-flight admission,
+                                     retirement, chunked prefill under a
+                                     per-iteration token budget
   * :mod:`~repro.serve.engine`     — ServeEngine.from_session: the pool +
                                      scheduler wired through the executor
                                      (local or mesh)
 """
-from .cache_pool import CachePool
-from .engine import ServeEngine, latency_percentiles
+from .cache_pool import CachePool, PrefixIndex
+from .engine import (ServeEngine, latency_percentiles, percentiles,
+                     ttft_percentiles)
 from .request import Request, RequestState, SamplingParams
 from .sampling import sample_tokens
 from .scheduler import Scheduler
 
-__all__ = ["CachePool", "ServeEngine", "Request", "RequestState",
-           "SamplingParams", "Scheduler", "latency_percentiles",
-           "sample_tokens"]
+__all__ = ["CachePool", "PrefixIndex", "ServeEngine", "Request",
+           "RequestState", "SamplingParams", "Scheduler",
+           "latency_percentiles", "percentiles", "sample_tokens",
+           "ttft_percentiles"]

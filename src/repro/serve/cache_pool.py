@@ -64,22 +64,81 @@ def detect_batch_axes(model, params, max_len: int, dtype, extras: Dict):
     return axes
 
 
-def detect_reset_leaves(model, params, max_len: int, dtype, extras: Dict):
-    """Which cache leaves need a template restore on slot reuse.
-
-    Position-indexed KV leaves — detected structurally: their shape changes
-    with ``max_len`` — do NOT: decode writes position ``pos`` and attention
-    masks reads to ``<= pos``, so every visible entry was written by the
-    slot's current occupant and stale rows are dead by construction.
-    Everything else (SSM state and conv tails, which accumulate; ring
-    buffers and cross-KV, whose size is max_len-independent) is restored.
-    Returns a flat bool list aligned with ``jax.tree.leaves`` order.
-    """
+def detect_pos_axes(model, params, max_len: int, dtype, extras: Dict):
+    """Per-leaf cache-position axis, or None for leaves that are not
+    position-indexed (SSM state/conv, ring buffers, cross-KV — their shape
+    does not change with ``max_len``).  Found by probing init_cache at two
+    max_len values and diffing the shapes; flat list in ``jax.tree.leaves``
+    order."""
     sa = jax.tree.leaves(_probe_cache_shapes(model, params, 2, max_len,
                                              dtype, extras))
     sb = jax.tree.leaves(_probe_cache_shapes(model, params, 2, max_len + 1,
                                              dtype, extras))
-    return [a.shape == b.shape for a, b in zip(sa, sb)]
+    axes: List[Optional[int]] = []
+    for a, b in zip(sa, sb):
+        diff = [i for i, (x, y) in enumerate(zip(a.shape, b.shape)) if x != y]
+        axes.append(diff[0] if len(diff) == 1 else None)
+    return axes
+
+
+class PrefixIndex:
+    """Hash-trie over the prompt token prefixes of RESIDENT slots.
+
+    Each trie node is keyed by a token id and records which slots' prompts
+    pass through it.  ``lookup`` walks a new prompt down the trie and
+    returns the deepest (slot, depth) whose resident occupant has already
+    WRITTEN at least ``depth`` cache rows (the ``valid_depth`` callable —
+    rows beyond a resident's current position don't exist yet, and rows
+    beyond its prompt hold generated tokens, which are not part of any
+    prompt prefix).
+    """
+
+    def __init__(self):
+        self._root: Dict = {}               # token -> [slots_set, children]
+        self._tokens: Dict[int, tuple] = {}  # slot -> registered prompt
+
+    def register(self, slot: int, tokens) -> None:
+        tokens = tuple(int(t) for t in tokens)
+        if slot in self._tokens:
+            self.unregister(slot)
+        self._tokens[slot] = tokens
+        node = self._root
+        for t in tokens:
+            entry = node.setdefault(t, [set(), {}])
+            entry[0].add(slot)
+            node = entry[1]
+
+    def unregister(self, slot: int) -> None:
+        tokens = self._tokens.pop(slot, None)
+        if tokens is None:
+            return
+        node = self._root
+        for t in tokens:
+            entry = node.get(t)
+            if entry is None:
+                return
+            entry[0].discard(slot)
+            nxt = entry[1]
+            if not entry[0]:
+                del node[t]         # prune: no slot passes through anymore
+                return
+            node = nxt
+
+    def lookup(self, tokens, valid_depth, exclude=()) -> tuple:
+        """Longest (slot, depth) prefix match among registered slots with
+        ``valid_depth(slot) >= depth``; (None, 0) when nothing matches."""
+        best_slot, best_depth = None, 0
+        node = self._root
+        for d, t in enumerate(tokens):
+            entry = node.get(int(t))
+            if entry is None:
+                break
+            cands = [s for s in entry[0]
+                     if s not in exclude and valid_depth(s) >= d + 1]
+            if cands:
+                best_slot, best_depth = min(cands), d + 1
+            node = entry[1]
+        return best_slot, best_depth
 
 
 class CachePool:
@@ -101,8 +160,15 @@ class CachePool:
                     f"frontends are not supported yet)")
         self._batch_axes = detect_batch_axes(model, params, max_len, dtype,
                                              self.extras)
-        self._needs_reset = detect_reset_leaves(model, params, max_len,
-                                                dtype, self.extras)
+        self._pos_axes = detect_pos_axes(model, params, max_len, dtype,
+                                         self.extras)
+        # leaves WITHOUT a position axis need a template restore on slot
+        # reuse (SSM state/conv accumulate; ring buffers and cross-KV are
+        # max_len-independent); position-indexed KV leaves do not — decode
+        # writes position pos and attention masks reads to <= pos, so every
+        # visible entry was written by the slot's current occupant and
+        # stale rows are dead by construction
+        self._needs_reset = [ax is None for ax in self._pos_axes]
         cache = model.init_cache(params, self.max_slots, self.max_len,
                                  dtype=dtype, **self.extras)
         # the template holds each slot's pristine row (zeros for SSM state,
@@ -120,6 +186,17 @@ class CachePool:
         self.positions = np.zeros(self.max_slots, np.int32)
         self._free: List[int] = list(range(self.max_slots))
         self._reset_jit = jax.jit(self._reset_fn)
+        # prefix sharing: only position-masked-KV pools can share — an
+        # accumulating leaf (SSM state, ring buffer, cross-KV) at a
+        # resident's CURRENT depth is not the state at the prefix depth, so
+        # copying it would be wrong; such pools refuse to share (index None)
+        self.supports_prefix_sharing = all(
+            ax is not None for ax in self._pos_axes)
+        self.prefix_index = (PrefixIndex() if self.supports_prefix_sharing
+                             else None)
+        self._share_jit = jax.jit(self._share_fn)
+        self._refcount = np.zeros(self.max_slots, np.int64)
+        self._pending_free: set = set()
 
     # -- slot lifecycle -----------------------------------------------------
 
@@ -139,11 +216,91 @@ class CachePool:
 
     def evict(self, slot: int) -> None:
         """Return a slot to the free list (its stale rows are cleared by the
-        reset that precedes the next insert)."""
-        if slot in self._free:
+        reset that precedes the next insert).  A slot pinned as the source
+        of an in-flight prefix copy is parked instead, and freed when the
+        last pin drops — evict never frees rows still being copied from."""
+        if slot in self._free or slot in self._pending_free:
             raise ValueError(f"slot {slot} is already free")
-        self._free.append(slot)
+        if self.prefix_index is not None:
+            self.prefix_index.unregister(slot)
         self.positions[slot] = 0
+        if self._refcount[slot] > 0:
+            self._pending_free.add(slot)
+        else:
+            self._free.append(slot)
+
+    def pin(self, slot: int) -> None:
+        """Hold ``slot``'s rows live across an evict (prefix-copy source).
+
+        In the current single-threaded scheduler the pin window is the
+        synchronous ``share_prefix`` call itself, so evict can only observe
+        a pin if a caller holds one across iterations — the refcount is the
+        contract an async/overlapped copy path (or a second scheduler
+        thread) builds on, not something the present flow can trip."""
+        self._refcount[slot] += 1
+
+    def unpin(self, slot: int) -> None:
+        self._refcount[slot] -= 1
+        if self._refcount[slot] < 0:
+            raise ValueError(f"slot {slot} unpinned more than pinned")
+        if self._refcount[slot] == 0 and slot in self._pending_free:
+            self._pending_free.discard(slot)
+            self._free.append(slot)
+
+    # -- prefix sharing ------------------------------------------------------
+
+    def share_prefix(self, slot: int, tokens) -> int:
+        """On admission into ``slot``: copy the longest matching resident
+        prompt prefix's KV rows into ``slot`` (device-side dynamic
+        slice/scatter — one jitted program for every (src, dst, depth)) and
+        register ``tokens`` so later admissions can match against this slot.
+        Returns the shared depth (0 = no match / sharing unsupported); the
+        new occupant starts decoding at that depth."""
+        if self.prefix_index is None:
+            return 0
+        tokens = [int(t) for t in tokens]
+
+        def valid_depth(s):
+            # rows a resident has WRITTEN, capped at its prompt length
+            # (rows past the prompt hold generated tokens)
+            return min(int(self.positions[s]),
+                       len(self.prefix_index._tokens.get(s, ())))
+
+        # cap at len-1: the new request must consume >= 1 token to produce
+        # the logits its first generated token is sampled from
+        src, depth = self.prefix_index.lookup(tokens[:-1], valid_depth,
+                                              exclude=(slot,))
+        if src is not None and depth > 0:
+            self.pin(src)
+            try:
+                self.cache = self._share_jit(
+                    self.cache, jnp.int32(src), jnp.int32(slot),
+                    jnp.int32(depth))
+            finally:
+                self.unpin(src)
+        self.prefix_index.register(slot, tokens)
+        self.positions[slot] = depth if src is not None else 0
+        return depth if src is not None else 0
+
+    def _share_fn(self, cache, src, dst, depth):
+        """Copy rows [0:depth) of every leaf from slot ``src`` to ``dst``
+        along each leaf's (batch, position) axes — src/dst/depth are traced
+        scalars, so every share hits the same compiled program."""
+        leaves, treedef = jax.tree.flatten(cache)
+        out = []
+        for leaf, bax, pax in zip(leaves, self._batch_axes, self._pos_axes):
+            srow = jax.lax.dynamic_index_in_dim(leaf, src, axis=bax,
+                                                keepdims=False)
+            drow = jax.lax.dynamic_index_in_dim(leaf, dst, axis=bax,
+                                                keepdims=False)
+            pax_r = pax - (1 if bax < pax else 0)   # pos axis after b-squeeze
+            shape = [1] * srow.ndim
+            shape[pax_r] = leaf.shape[pax]
+            m = (jnp.arange(leaf.shape[pax]) < depth).reshape(shape)
+            row = jnp.where(m, srow, drow)
+            out.append(jax.lax.dynamic_update_index_in_dim(leaf, row, dst,
+                                                           axis=bax))
+        return jax.tree.unflatten(treedef, out)
 
     def reset(self, slots: Sequence[int]) -> None:
         """Make ``slots`` safe for a new occupant, batched across all newly
@@ -151,7 +308,7 @@ class CachePool:
         runtime argument).  Leaves that accumulate (SSM state/conv, ring
         buffers, cross-KV) are restored to the template; position-masked KV
         rows are left as-is — their stale entries are unreachable (see
-        :func:`detect_reset_leaves`), so a pure-KV arch resets for free."""
+        :func:`detect_pos_axes`), so a pure-KV arch resets for free."""
         if not len(slots):
             return
         for s in slots:

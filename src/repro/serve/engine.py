@@ -32,17 +32,28 @@ from .sampling import sample_tokens
 from .scheduler import Scheduler
 
 
-def latency_percentiles(results) -> tuple:
-    """(p50, p95) request latency in seconds over ``engine.run()`` results,
-    by the nearest-rank method (ceil(q*n)-1)."""
-    lats = sorted(r["latency_s"] for r in results)
-    if not lats:
+def percentiles(values) -> tuple:
+    """(p50, p95) over ``values`` by the nearest-rank method (ceil(q*n)-1);
+    None entries (e.g. TTFT of a request that never produced a token) are
+    dropped."""
+    vals = sorted(v for v in values if v is not None)
+    if not vals:
         return 0.0, 0.0
 
     def rank(q):
-        return lats[max(math.ceil(q * len(lats)) - 1, 0)]
+        return vals[max(math.ceil(q * len(vals)) - 1, 0)]
 
     return round(rank(0.5), 4), round(rank(0.95), 4)
+
+
+def latency_percentiles(results) -> tuple:
+    """(p50, p95) request latency in seconds over ``engine.run()`` results."""
+    return percentiles([r["latency_s"] for r in results])
+
+
+def ttft_percentiles(results) -> tuple:
+    """(p50, p95) time-to-first-token over ``engine.run()`` results."""
+    return percentiles([r.get("ttft_s") for r in results])
 
 
 class ServeEngine:
@@ -52,7 +63,9 @@ class ServeEngine:
                  max_slots: int = 4, max_len: int = 64,
                  cache_dtype=jnp.float32, extras: Dict = None,
                  engine_name: str = "nonprivate",
-                 admission: str = "continuous"):
+                 admission: str = "continuous",
+                 prefill_chunk: int = 1, token_budget: int = None,
+                 prefix_sharing: bool = True):
         if not hasattr(model, "decode_step"):
             raise ValueError(f"{getattr(model_cfg, 'name', model)} has no "
                              f"decode path (encoder-only)")
@@ -65,6 +78,29 @@ class ServeEngine:
         self.executor = executor
         self.max_slots = int(max_slots)
         self.max_len = int(max_len)
+        self.prefill_chunk = int(prefill_chunk)
+        if self.prefill_chunk < 1:
+            raise ValueError(f"prefill_chunk must be >= 1, "
+                             f"got {prefill_chunk}")
+        if self.prefill_chunk > 1 and not hasattr(model, "prefill_step"):
+            raise ValueError(
+                f"{getattr(model_cfg, 'name', model)} has no prefill_step; "
+                f"chunked prefill needs the chunk-shaped decode entry point")
+        if self.prefill_chunk > 1 and getattr(model_cfg, "sliding_window", 0):
+            # ring caches cannot take a single-scatter chunk once positions
+            # wrap the window (see models.common.attention) — fail at
+            # construction rather than at the first chunked trace
+            raise ValueError(
+                f"chunked prefill is unsupported on sliding-window archs "
+                f"({getattr(model_cfg, 'name', '?')} has window="
+                f"{model_cfg.sliding_window}); use prefill_chunk=1")
+        if token_budget is not None and self.prefill_chunk < 2:
+            # throttling can stall a slot to 0 tokens, which only the
+            # chunked entry point's valid mask can express — the plain
+            # decode step unconditionally consumes 1 token per slot
+            raise ValueError("token_budget requires prefill_chunk > 1 "
+                             "(prefill-by-decode already consumes the "
+                             "minimum 1 token per slot per iteration)")
         self._engine_name = engine_name
         self._cache_dtype = cache_dtype
         # decode shapes never sequence-shard activations (T=1); installed
@@ -72,6 +108,10 @@ class ServeEngine:
         # process-wide and a training step may reinstall its own
         self._configure()
         self.decode_fn = executor.jit_decode(model.decode_step)
+        # chunked prefill: one fused call consumes (B, C) prompt tokens at
+        # per-slot offsets; compiled only when the chunk is actually used
+        self.prefill_fn = (executor.jit_prefill_step(model.prefill_step)
+                           if self.prefill_chunk > 1 else None)
         self.sample_fn = jax.jit(sample_tokens)
         # all-greedy iterations skip the sampler's sort + per-row PRNG (the
         # scheduler picks host-side: temperatures are host values)
@@ -80,20 +120,30 @@ class ServeEngine:
         self.pool = CachePool(model, params, self.max_slots, self.max_len,
                               executor=executor, dtype=cache_dtype,
                               extras=extras)
+        # prefix sharing only on pools whose every leaf is position-masked
+        # KV: an accumulating leaf (SSM state, ring buffer, cross-KV) at the
+        # resident's depth is NOT the prefix-depth state, so such archs
+        # refuse to share rather than serve wrong tokens
+        self.prefix_sharing = bool(prefix_sharing
+                                   and self.pool.supports_prefix_sharing)
         # admission="static" gates admission on an EMPTY pool (the old
         # fixed-batch generate() discipline) — the benchmark baseline
-        self.scheduler = Scheduler(self, admission=admission)
+        self.scheduler = Scheduler(self, admission=admission,
+                                   token_budget=token_budget)
 
     @classmethod
     def from_session(cls, session, *, max_slots: int = 4, max_len: int = 64,
-                     cache_dtype=jnp.float32, extras: Dict = None
-                     ) -> "ServeEngine":
+                     cache_dtype=jnp.float32, extras: Dict = None,
+                     prefill_chunk: int = 1, token_budget: int = None,
+                     prefix_sharing: bool = True) -> "ServeEngine":
         """An engine serving the session's current parameters through the
         session's executor (local or mesh — same LaunchConfig semantics)."""
         return cls(session.model, session.model_cfg, session.state.params,
                    executor=session.executor, max_slots=max_slots,
                    max_len=max_len, cache_dtype=cache_dtype, extras=extras,
-                   engine_name=session.dp.engine)
+                   engine_name=session.dp.engine,
+                   prefill_chunk=prefill_chunk, token_budget=token_budget,
+                   prefix_sharing=prefix_sharing)
 
     def _configure(self) -> None:
         self.executor.configure_model(self.model_cfg, "decode", self.max_len,
@@ -146,15 +196,21 @@ class ServeEngine:
         for r in (requests or ()):
             self.submit(r)
         self._configure()
-        it0, ast0 = self.scheduler.iterations, self.scheduler.active_slot_steps
+        sch = self.scheduler
+        it0, ast0 = sch.iterations, sch.active_slot_steps
+        hits0, shared0 = sch.prefix_hits, sch.prefix_tokens_shared
+        prompt0 = sch.prompt_tokens_admitted
         t0 = time.time()
-        finished = self.scheduler.run()
+        finished = sch.run()
         dt = max(time.time() - t0, 1e-9)
-        iters = self.scheduler.iterations - it0
-        slot_steps = self.scheduler.active_slot_steps - ast0
+        iters = sch.iterations - it0
+        slot_steps = sch.active_slot_steps - ast0
+        prompt_tokens = sch.prompt_tokens_admitted - prompt0
+        shared = sch.prefix_tokens_shared - shared0
         results = [s.to_dict() for s in finished]
         gen_tokens = sum(len(s.generated) for s in finished)
-        self.scheduler.finished = []        # drained; next run starts fresh
+        ttft50, ttft95 = ttft_percentiles(results)
+        sch.finished = []                   # drained; next run starts fresh
         return {
             "results": results,
             "iterations": iters,
@@ -162,5 +218,11 @@ class ServeEngine:
             "generated_tokens": gen_tokens,
             "tokens_per_s": round(gen_tokens / dt, 1),
             "occupancy": round(slot_steps / max(iters * self.max_slots, 1), 3),
+            "ttft_p50_s": ttft50,
+            "ttft_p95_s": ttft95,
+            "prefix_hits": sch.prefix_hits - hits0,
+            "prefix_tokens_shared": shared,
+            # fraction of admitted prompt tokens served from a shared prefix
+            "prefix_hit_rate": round(shared / max(prompt_tokens, 1), 3),
             "launch": self.executor.describe(),
         }

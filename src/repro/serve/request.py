@@ -100,12 +100,6 @@ class RequestState:
     def prompt_len(self) -> int:
         return len(self.prompt)
 
-    def next_input_token(self) -> int:
-        """The token this request feeds into the NEXT decode step."""
-        if self.pos < self.prompt_len:
-            return int(self.prompt[self.pos])
-        return self.generated[-1]
-
     def wants_sample_at(self, pos: int) -> bool:
         """Does the step consuming position ``pos`` produce a sampled token?
         (Logits at the last prompt position onward are sampled; earlier
@@ -124,8 +118,17 @@ class RequestState:
             return None
         return self.finished_at - self.submitted_at
 
+    def ttft(self) -> Optional[float]:
+        """Time to first token: submit -> first sampled token (includes
+        queue wait and prefill — the latency chunked prefill and prefix
+        sharing attack)."""
+        if self.first_token_at is None:
+            return None
+        return self.first_token_at - self.submitted_at
+
     def to_dict(self) -> dict:
         return {"rid": self.rid, "prompt_len": self.prompt_len,
                 "generated": list(self.generated),
                 "finish_reason": self.finish_reason,
-                "latency_s": self.latency()}
+                "latency_s": self.latency(),
+                "ttft_s": self.ttft()}

@@ -1,25 +1,34 @@
 """Continuous-batching scheduler (Orca-style iteration-level scheduling).
 
-One scheduler iteration = one fused ``decode_step`` over ALL pool slots:
+One scheduler iteration = one fused step over ALL pool slots:
 
   1. **admit** — queued requests claim free slots; their rows are reset in
-     one batched select (no retrace, no reallocation),
-  2. **decode** — build the ``[B]`` token / position vectors (prefilling
-     requests feed their next prompt token, decoding requests feed the token
-     they sampled last step; free slots feed a dummy token at position 0)
-     and run the jitted decode step once for the whole pool,
-  3. **select** — one fused sampling call picks every row's next token;
-     rows past their last prompt position append it to their output,
+     one batched select (no retrace, no reallocation).  On pools that
+     support it, a new request's prompt is matched against RESIDENT slots'
+     prompts through the :class:`~repro.serve.cache_pool.PrefixIndex`: the
+     longest shared prefix's KV rows are copied device-side and the request
+     starts at the shared depth (skipping that much prefill),
+  2. **consume** — build per-slot token/position vectors: decoding slots
+     feed the token they sampled last step (1 token); prefilling slots feed
+     their next ``prefill_chunk`` prompt tokens, throttled by the
+     per-iteration ``token_budget``.  One fused ``prefill_step`` (chunked)
+     or ``decode_step`` (all slots exactly one token) runs for the whole
+     pool,
+  3. **select** — one fused sampling call picks every row's next token from
+     the logits at its LAST consumed position; rows that consumed their
+     final prompt position append it to their output,
   4. **retire** — requests that hit ``max_new_tokens`` (or the cache
      capacity) finish MID-FLIGHT: their slot frees immediately and a queued
      request can be admitted next iteration while the rest of the batch
      keeps decoding.
 
-Prefill is run through the same fused step, one token per iteration
-(prefill-by-decode — exactly what ``session.generate`` always did), so a
-request admitted into a running batch simply teacher-forces its prompt while
-its neighbours decode.  Each request's tokens depend only on its own prompt,
-sampling params and positions — never on batch composition — which is the
+With ``prefill_chunk == 1`` (the default) prefill runs through the same
+fused decode step, one token per iteration — exactly the PR 3 discipline.
+With a larger chunk, a long prompt admitted into a running batch catches up
+``C`` tokens per iteration while its neighbours decode, instead of stalling
+them for ``prompt_len`` iterations.  Either way each request's tokens
+depend only on its own prompt, sampling params and positions — never on
+batch composition, chunking or admission time — which is the
 decode-equivalence property tests/test_serve.py pins down.
 """
 from __future__ import annotations
@@ -36,19 +45,30 @@ from .request import (DECODE, FINISH_LENGTH, FINISH_MAX_LEN, PREFILL,
 
 class Scheduler:
     """Iteration-level scheduler over a :class:`~repro.serve.ServeEngine`'s
-    cache pool and jitted decode/sample steps."""
+    cache pool and jitted decode/prefill/sample steps."""
 
-    def __init__(self, engine, admission: str = "continuous"):
+    def __init__(self, engine, admission: str = "continuous",
+                 token_budget: Optional[int] = None):
         if admission not in ("continuous", "static"):
             raise ValueError(f"admission must be 'continuous' or 'static', "
                              f"got {admission!r}")
+        if token_budget is not None and token_budget < 1:
+            raise ValueError(f"token_budget must be >= 1, got {token_budget}")
         self.engine = engine
         self.admission = admission
+        # max tokens consumed per iteration; decoding slots always get their
+        # 1 token (stalling a decoder gains nothing — its slot stays busy),
+        # the remainder is split over prefilling slots in slot order
+        self.token_budget = token_budget
         self.queue: deque = deque()
         self.active: Dict[int, RequestState] = {}   # slot -> state
         self.finished: List[RequestState] = []
         self.iterations = 0
         self.active_slot_steps = 0      # occupancy numerator
+        self.tokens_consumed = 0
+        self.prefix_hits = 0            # admissions that matched a prefix
+        self.prefix_tokens_shared = 0   # prompt tokens skipped via sharing
+        self.prompt_tokens_admitted = 0
         self._next_rid = 0
 
     # -- submission ---------------------------------------------------------
@@ -74,17 +94,39 @@ class Scheduler:
 
     def _admit(self) -> None:
         pool = self.engine.pool
+        if not self.queue:
+            return      # steady state: nothing to admit, skip the sync
         if self.admission == "static" and self.active:
             return      # static batching: drain the whole group first
+        share = self.engine.prefix_sharing
+        if share:
+            # sync resident write depths so the prefix lookup sees the rows
+            # that exist NOW, not last iteration's
+            for slot, st in self.active.items():
+                pool.positions[slot] = st.pos
         newly: List[int] = []
-        while self.queue and pool.n_free:
+        for _ in range(len(self.queue)):
+            if not pool.n_free:
+                break
             state = self.queue.popleft()
             slot = pool.insert()
             state.slot = slot
-            state.status = PREFILL
+            self.prompt_tokens_admitted += state.prompt_len
+            depth = pool.share_prefix(slot, state.prompt) if share else 0
+            if depth:
+                self.prefix_hits += 1
+                self.prefix_tokens_shared += depth
+            state.pos = depth
+            state.status = PREFILL if state.pos < state.prompt_len else DECODE
             self.active[slot] = state
             newly.append(slot)
         pool.reset(newly)
+        if share:
+            # reset() zeroes positions; restore the shared depths (the step
+            # loop re-syncs from RequestState.pos anyway — this keeps the
+            # pool's vector coherent for same-iteration lookups)
+            for slot in newly:
+                pool.positions[slot] = self.active[slot].pos
 
     def step(self) -> bool:
         """Run one scheduler iteration; False when there is nothing to do."""
@@ -93,15 +135,48 @@ class Scheduler:
             return False
         pool = self.engine.pool
         B = pool.max_slots
+        C = max(1, int(self.engine.prefill_chunk))
 
-        tok = np.zeros((B, 1), np.int32)
+        # -- per-slot consume counts for this iteration ---------------------
+        n_tok = np.zeros(B, np.int32)
+        prefilling: List[int] = []
+        n_decode = 0
+        for slot, st in self.active.items():
+            if st.pos < st.prompt_len:
+                prefilling.append(slot)
+            else:
+                n_tok[slot] = 1
+                n_decode += 1
+        budget_left = (None if self.token_budget is None
+                       else max(self.token_budget - n_decode, 0))
+        for slot in sorted(prefilling):
+            st = self.active[slot]
+            want = min(C, st.prompt_len - st.pos)
+            if budget_left is not None:
+                want = min(want, budget_left)
+                budget_left -= want
+            n_tok[slot] = want
+        # progress is guaranteed: decoders always consume 1, and with no
+        # decoders budget_left starts at token_budget >= 1, so the first
+        # prefilling slot gets at least one token
+
+        use_chunk = C > 1 and any(int(n_tok[s]) != 1 for s in self.active)
+        width = C if use_chunk else 1
+
+        tok = np.zeros((B, width), np.int32)
         temps = np.zeros(B, np.float32)
         topks = np.zeros(B, np.int32)
         seeds = np.zeros(B, np.int32)
         pos = np.zeros(B, np.int32)
+        last_pos = np.zeros(B, np.int32)
         for slot, st in self.active.items():
-            tok[slot, 0] = st.next_input_token()
+            n = int(n_tok[slot])
             pos[slot] = st.pos
+            if st.pos < st.prompt_len:
+                tok[slot, :n] = st.prompt[st.pos:st.pos + n]
+            elif n:
+                tok[slot, 0] = st.generated[-1]
+            last_pos[slot] = st.pos + max(n, 1) - 1
             sp = st.request.sampling
             temps[slot] = sp.temperature
             topks[slot] = sp.top_k
@@ -110,25 +185,33 @@ class Scheduler:
         # vector is synced here, the one place it is consumed
         pool.positions[:] = pos
 
-        logits, pool.cache = self.engine.decode_fn(
-            self.engine.params, pool.cache, tok, pos)
+        if use_chunk:
+            logits, pool.cache = self.engine.prefill_fn(
+                self.engine.params, pool.cache, tok, pos, n_tok)
+        else:
+            logits, pool.cache = self.engine.decode_fn(
+                self.engine.params, pool.cache, tok, pos)
         if temps.any():
             next_tok = np.asarray(self.engine.sample_fn(
-                logits, pos, seeds, temps, topks))
+                logits, last_pos, seeds, temps, topks))
         else:
             next_tok = np.asarray(self.engine.greedy_fn(logits))
 
         self.iterations += 1
-        self.active_slot_steps += len(self.active)
+        self.active_slot_steps += int((n_tok > 0).sum())
+        self.tokens_consumed += int(n_tok.sum())
 
         now = time.time()
         for slot, st in list(self.active.items()):
-            consumed = st.pos                          # position just decoded
+            n = int(n_tok[slot])
+            if not n:
+                continue                    # stalled under the token budget
+            consumed = st.pos + n - 1       # last position just consumed
             if st.wants_sample_at(consumed):
                 st.generated.append(int(next_tok[slot]))
                 if st.first_token_at is None:
                     st.first_token_at = now
-            st.pos += 1
+            st.pos += n
             st.status = PREFILL if st.pos < st.prompt_len else DECODE
             if len(st.generated) >= st.request.max_new_tokens:
                 st.finish(FINISH_LENGTH)

@@ -162,6 +162,242 @@ def test_cached_engine_refreshes_cross_kv_template():
     assert g1["generated"] != g2["generated"]   # params really changed
 
 
+# -- chunked prefill ---------------------------------------------------------
+
+@pytest.mark.parametrize("chunk", [1, 2, 3, 5])
+def test_chunked_prefill_matches_solo(qwen, qwen_solo, chunk):
+    """Chunked prefill consumes C prompt tokens per fused step at per-slot
+    offsets; every request — greedy AND seeded sampling, admitted into a
+    RUNNING batch — still matches its solo one-token-at-a-time run exactly.
+    C=1 is the degenerate case (must ride the plain decode path)."""
+    vocab = qwen.model_cfg.vocab
+    engine = ServeEngine.from_session(qwen, max_slots=3, max_len=MAX_LEN,
+                                      prefill_chunk=chunk)
+    early = [Request(prompt=p, max_new_tokens=nt)
+             for p, nt in zip(_prompts(vocab, [9, 4], seed=7), [6, 8])]
+    for r in early:
+        engine.submit(r)
+    for _ in range(3):          # early requests are mid-prefill/decode
+        assert engine.step()
+    late = [Request(prompt=_prompts(vocab, [11], seed=8)[0],
+                    max_new_tokens=5),
+            Request(prompt=_prompts(vocab, [6], seed=9)[0],
+                    max_new_tokens=7,
+                    sampling=SamplingParams(temperature=0.9, top_k=4,
+                                            seed=13))]
+    for r in late:
+        engine.submit(r)
+    out = engine.run()
+    gen = _by_rid(out)
+    for i, r in enumerate(early + late):
+        assert gen[i] == _solo_tokens(qwen_solo, r), \
+            f"request {i} diverged at chunk={chunk}"
+    if chunk > 1:
+        # long prompts really were consumed multiple tokens per iteration
+        total = sum(r.prompt_len + r.max_new_tokens - 1
+                    for r in early + late)
+        assert out["iterations"] < total
+
+
+def test_chunked_prefill_matches_solo_ssm(mamba):
+    """The SSM arch: chunked prefill advances state/conv only over consumed
+    tokens (identity updates for the chunk tail), bit-identical to
+    prefill-by-decode — pinned against both the solo engine and the same
+    engine with chunking off."""
+    vocab = mamba.model_cfg.vocab
+    reqs = lambda: [Request(prompt=p, max_new_tokens=nt)  # noqa: E731
+                    for p, nt in zip(_prompts(vocab, [8, 3, 10], seed=10),
+                                     [5, 7, 4])]
+    solo = ServeEngine.from_session(mamba, max_slots=1, max_len=MAX_LEN)
+    plain = ServeEngine.from_session(mamba, max_slots=2, max_len=MAX_LEN)
+    chunked = ServeEngine.from_session(mamba, max_slots=2, max_len=MAX_LEN,
+                                       prefill_chunk=3)
+    gp = _by_rid(plain.run(reqs()))
+    gc = _by_rid(chunked.run(reqs()))
+    assert gc == gp, "chunked SSM prefill diverged from prefill-by-decode"
+    for i, r in enumerate(reqs()):
+        assert gc[i] == _solo_tokens(solo, r), f"request {i} diverged"
+
+
+def test_chunked_prefill_refused_on_sliding_window():
+    """Ring caches cannot take a single-scatter chunk (once positions wrap
+    the window, in-chunk writes land on rows earlier chunk tokens still
+    read) — the engine must refuse at construction, not serve wrong
+    tokens."""
+    import dataclasses
+    import jax
+    from repro.models import build, get_config
+    cfg = dataclasses.replace(get_config("qwen3-1.7b").reduced(),
+                              sliding_window=8)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="sliding-window"):
+        ServeEngine(model, cfg, params, max_slots=2, max_len=16,
+                    prefill_chunk=2)
+    # prefill_chunk=1 (prefill-by-decode) stays available
+    eng = ServeEngine(model, cfg, params, max_slots=2, max_len=16)
+    out = eng.run([Request(prompt=[1, 2, 3], max_new_tokens=2)])
+    assert len(out["results"][0]["generated"]) == 2
+
+
+def test_midflight_admission_under_token_budget(qwen, qwen_solo):
+    """A per-iteration token budget throttles prefill (decoding slots keep
+    their 1 token) without changing any request's tokens — even for a long
+    prompt admitted mid-flight that takes several iterations to catch up."""
+    vocab = qwen.model_cfg.vocab
+    with pytest.raises(ValueError, match="token_budget requires"):
+        ServeEngine.from_session(qwen, max_slots=2, token_budget=4)
+    with pytest.raises(ValueError, match="token_budget must be"):
+        ServeEngine.from_session(qwen, max_slots=2, prefill_chunk=2,
+                                 token_budget=0)
+    engine = ServeEngine.from_session(qwen, max_slots=3, max_len=MAX_LEN,
+                                      prefill_chunk=4, token_budget=5)
+    early = [Request(prompt=p, max_new_tokens=10)
+             for p in _prompts(vocab, [5, 4], seed=11)]
+    for r in early:
+        engine.submit(r)
+    for _ in range(4):
+        assert engine.step()
+    late = Request(prompt=_prompts(vocab, [14], seed=12)[0],
+                   max_new_tokens=4)
+    engine.submit(late)
+    out = engine.run()
+    gen = _by_rid(out)
+    for i, r in enumerate(early + [late]):
+        assert gen[i] == _solo_tokens(qwen_solo, r), f"request {i} diverged"
+    # the budget really throttled: with two decoders holding 2 tokens, the
+    # late prompt got at most 3/iteration, so catching up took >= 5 steps
+    assert out["iterations"] + 4 > late.prompt_len // 3
+
+
+# -- prefix-cache sharing ----------------------------------------------------
+
+def test_prefix_sharing_matches_solo(qwen, qwen_solo):
+    """An admission whose prompt shares a prefix with a RESIDENT request
+    copies those KV rows device-side and skips that much prefill — tokens
+    must still match solo exactly, and the hit must actually happen."""
+    vocab = qwen.model_cfg.vocab
+    engine = ServeEngine.from_session(qwen, max_slots=2, max_len=MAX_LEN,
+                                      prefill_chunk=2)
+    assert engine.prefix_sharing
+    base = _prompts(vocab, [10], seed=14)[0]
+    r1 = Request(prompt=base, max_new_tokens=12)
+    engine.submit(r1)
+    for _ in range(12):         # r1 fully prefillled, now decoding
+        assert engine.step()
+    # same 7-token prefix, different tail; admitted while r1 is resident
+    r2 = Request(prompt=base[:7] + _prompts(vocab, [3], seed=15)[0],
+                 max_new_tokens=6)
+    r3 = Request(prompt=base[:4] + _prompts(vocab, [2], seed=16)[0],
+                 max_new_tokens=5,
+                 sampling=SamplingParams(temperature=0.7, top_k=3, seed=21))
+    engine.submit(r2)
+    engine.submit(r3)
+    out = engine.run()
+    gen = _by_rid(out)
+    for i, r in enumerate([r1, r2, r3]):
+        assert gen[i] == _solo_tokens(qwen_solo, r), f"request {i} diverged"
+    assert out["prefix_hits"] >= 2, out
+    assert out["prefix_tokens_shared"] >= 7 + 4
+    assert out["prefix_hit_rate"] > 0
+
+
+def test_prefix_sharing_refused_on_accumulating_caches(mamba):
+    """SSM state at a resident's depth is NOT the state at the prefix depth
+    — pools with accumulating leaves must refuse to share (hits stay 0) and
+    still serve correct tokens."""
+    vocab = mamba.model_cfg.vocab
+    engine = ServeEngine.from_session(mamba, max_slots=2, max_len=MAX_LEN,
+                                      prefix_sharing=True)
+    assert not engine.prefix_sharing          # requested, refused
+    assert not engine.pool.supports_prefix_sharing
+    assert engine.pool.prefix_index is None
+    solo = ServeEngine.from_session(mamba, max_slots=1, max_len=MAX_LEN)
+    base = _prompts(vocab, [8], seed=17)[0]
+    r1 = Request(prompt=base, max_new_tokens=10)
+    engine.submit(r1)
+    for _ in range(9):
+        engine.step()
+    r2 = Request(prompt=base[:6] + _prompts(vocab, [2], seed=18)[0],
+                 max_new_tokens=5)
+    engine.submit(r2)
+    out = engine.run()
+    gen = _by_rid(out)
+    assert out["prefix_hits"] == 0 and out["prefix_hit_rate"] == 0
+    for i, r in enumerate([r1, r2]):
+        assert gen[i] == _solo_tokens(solo, r), f"request {i} diverged"
+
+
+def test_prefix_index_trie_and_pinning(qwen):
+    """PrefixIndex unit behaviour + the evict/refcount contract: a slot
+    pinned as a copy source is parked by evict and only freed when the last
+    pin drops."""
+    from repro.serve import CachePool, PrefixIndex
+    idx = PrefixIndex()
+    idx.register(0, [5, 6, 7, 8])
+    idx.register(1, [5, 6, 9])
+    depths = {0: 4, 1: 3}
+    # deepest resident match wins; valid_depth caps what a source can offer
+    assert idx.lookup([5, 6, 7, 8, 1], depths.get) == (0, 4)
+    assert idx.lookup([5, 6, 9, 2], depths.get) == (1, 3)
+    assert idx.lookup([5, 6, 1], depths.get)[1] == 2
+    assert idx.lookup([9, 9], depths.get) == (None, 0)
+    # a source that has only written 1 row can only share 1 token
+    assert idx.lookup([5, 6, 7], {0: 1, 1: 0}.get) == (0, 1)
+    # exclusion (a slot never matches itself) and unregister pruning
+    assert idx.lookup([5, 6, 9], depths.get, exclude=(1,)) == (0, 2)
+    idx.unregister(0)
+    assert idx.lookup([5, 6, 7, 8], depths.get) == (1, 2)
+
+    pool = CachePool(qwen.model, qwen.state.params, 2, 16)
+    assert pool.supports_prefix_sharing
+    s0 = pool.insert()
+    pool.pin(s0)
+    pool.evict(s0)                       # parked, NOT freed
+    assert pool.n_free == 1 and s0 in pool._pending_free
+    with pytest.raises(ValueError):
+        pool.evict(s0)                   # double evict still rejected
+    pool.unpin(s0)                       # last pin drops -> freed
+    assert pool.n_free == 2 and not pool._pending_free
+
+
+def test_share_prefix_copies_rows_device_side(qwen):
+    """pool.share_prefix really copies rows [0:depth) from the source slot
+    (and nothing past depth), via the jitted dynamic-slice program."""
+    import jax
+    import jax.numpy as jnp
+    from repro.serve import CachePool
+    pool = CachePool(qwen.model, qwen.state.params, 2, 8)
+    s0 = pool.insert()
+    # pretend slot 0 decoded 5 positions of prompt [1,2,3,4,5,6]: fill its
+    # batch row of every leaf with a recognisable ramp
+    leaves, treedef = jax.tree.flatten(pool.cache)
+    filled = []
+    for leaf, bax in zip(leaves, pool._batch_axes):
+        row = jnp.take(leaf, s0, axis=bax)
+        ramp = (jnp.arange(row.size, dtype=jnp.float32)
+                .reshape(row.shape).astype(leaf.dtype) + 1.0)
+        filled.append(jnp.moveaxis(
+            jnp.moveaxis(leaf, bax, 0).at[s0].set(ramp), 0, bax))
+    pool.cache = jax.tree.unflatten(treedef, filled)
+    pool.prefix_index.register(s0, [1, 2, 3, 4, 5, 6])
+    pool.positions[s0] = 5
+    s1 = pool.insert()
+    depth = pool.share_prefix(s1, [1, 2, 3, 4, 9])
+    assert depth == 4                    # lcp=4, < both prompt lens
+    assert pool.positions[s1] == 4
+    for leaf, bax, pax in zip(jax.tree.leaves(pool.cache),
+                              pool._batch_axes, pool._pos_axes):
+        src = jnp.take(leaf, s0, axis=bax)
+        dst = jnp.take(leaf, s1, axis=bax)
+        pax_r = pax - (1 if bax < pax else 0)
+        copied = jnp.take(dst, jnp.arange(4), axis=pax_r)
+        expect = jnp.take(src, jnp.arange(4), axis=pax_r)
+        assert jnp.array_equal(copied, expect)
+        beyond = jnp.take(dst, jnp.arange(4, dst.shape[pax_r]), axis=pax_r)
+        assert not jnp.any(beyond)       # rows past depth untouched (zeros)
+
+
 # -- cache pool unit behaviour ----------------------------------------------
 
 def test_cache_pool_insert_evict_positions(qwen):
@@ -207,13 +443,62 @@ def test_pool_rejects_oversized_prompt(qwen):
         engine.submit(Request(prompt=list(range(8)), max_new_tokens=2))
 
 
+def test_pool_evict_then_insert_same_iteration(qwen):
+    """Evict-then-insert in the same scheduler iteration reuses the slot
+    with a clean position — no leak from the previous occupant."""
+    pool = CachePool(qwen.model, qwen.state.params, 2, 16)
+    a, b = pool.insert(), pool.insert()
+    pool.positions[:] = [7, 3]          # mid-flight positions
+    pool.evict(a)
+    c = pool.insert()                   # same iteration: lowest free slot
+    assert c == a
+    assert pool.positions[c] == 0       # position not leaked
+    assert pool.positions[b] == 3       # neighbour untouched
+    pool.reset([c])
+    assert pool.positions.tolist() == [0, 3]
+
+
+def test_full_pool_static_admission_queues(qwen):
+    """More submissions than slots under admission="static" queue (drain by
+    group) rather than raise — every request still finishes."""
+    engine = ServeEngine.from_session(qwen, max_slots=2, max_len=MAX_LEN)
+    engine.scheduler.admission = "static"
+    try:
+        vocab = qwen.model_cfg.vocab
+        reqs = [Request(prompt=p, max_new_tokens=3)
+                for p in _prompts(vocab, [3, 4, 2, 5, 3], seed=19)]
+        for r in reqs:
+            engine.submit(r)            # 5 requests into 2 slots: queues
+        assert len(engine.scheduler.queue) == 5
+        out = engine.run()
+    finally:
+        engine.scheduler.admission = "continuous"
+    assert len(out["results"]) == 5
+    assert all(r["finish_reason"] == "length" for r in out["results"])
+
+
+def test_detect_batch_axes_ambiguous_leaf_error(qwen):
+    """A cache leaf whose shape changes along TWO axes with the batch size
+    has no unique batch axis — the structural probe must say so, not pick
+    one arbitrarily."""
+    from repro.serve.cache_pool import detect_batch_axes
+
+    class BadModel:
+        def init_cache(self, params, B, S, dtype=None, **extras):
+            import jax.numpy as jnp
+            return {"kv": jnp.zeros((B, B, S, 4))}     # B appears twice
+
+    with pytest.raises(ValueError, match="no unique batch axis"):
+        detect_batch_axes(BadModel(), {}, 16, None, {})
+
+
 # -- sharded path ------------------------------------------------------------
 
 @pytest.mark.slow
 def test_engine_runs_on_mesh():
     """The engine through MeshExecutor on a 2x2 CPU mesh: continuous
-    batching (with mid-flight admission) matches solo runs ON THE MESH,
-    and the pool/decode really execute sharded."""
+    batching — WITH chunked prefill and prefix sharing — matches solo runs
+    ON THE MESH, and the pool/decode/prefill really execute sharded."""
     out = _run_sub(r"""
 import json
 import numpy as np
@@ -225,15 +510,20 @@ session = PrivacySession.from_config(
     TrainConfig(seed=0, smoke=True), launch=LaunchConfig(mesh="test"))
 rng = np.random.RandomState(0)
 vocab = session.model_cfg.vocab
-reqs = [Request(prompt=rng.randint(0, vocab, size=s).tolist(),
-                max_new_tokens=nt)
-        for s, nt in [(3, 8), (6, 3), (2, 5)]]
+base = rng.randint(0, vocab, size=9).tolist()
+reqs = [Request(prompt=base, max_new_tokens=8),
+        Request(prompt=rng.randint(0, vocab, size=6).tolist(),
+                max_new_tokens=3),
+        # shares base's first 6 tokens with the resident request 0
+        Request(prompt=base[:6] + rng.randint(0, vocab, size=2).tolist(),
+                max_new_tokens=5)]
 
-engine = ServeEngine.from_session(session, max_slots=2, max_len=32)
+engine = ServeEngine.from_session(session, max_slots=2, max_len=32,
+                                  prefill_chunk=3)
 engine.submit(reqs[0]); engine.submit(reqs[1])
-for _ in range(3):
+for _ in range(4):
     engine.step()
-engine.submit(reqs[2])            # admitted mid-flight, on the mesh
+engine.submit(reqs[2])            # admitted mid-flight, prefix resident
 out = engine.run()
 gen = {r["rid"]: r["generated"] for r in out["results"]}
 
@@ -242,11 +532,12 @@ match = all(
     gen[i] == solo.run([reqs[i]])["results"][0]["generated"]
     for i in range(3))
 print(json.dumps({"match": match, "launch": out["launch"],
-                  "n": len(gen)}))
+                  "n": len(gen), "hits": out["prefix_hits"]}))
 """)
     import json
     rec = json.loads(out.strip().splitlines()[-1])
     assert rec["match"], rec
     assert rec["n"] == 3
+    assert rec["hits"] >= 1, rec
     assert rec["launch"] == {"executor": "mesh",
                              "mesh": {"data": 2, "model": 2}, "layout": "dp"}
