@@ -1,0 +1,63 @@
+"""Static analysis of the DP training programs — "without shortcuts" as a
+checked property, not a convention.
+
+Two layers:
+
+* **Taint verifier** (:mod:`.taint`, :mod:`.rules`, :mod:`.verify`): an
+  abstract interpreter over the ClosedJaxpr of the *real* jitted train step
+  (obtained through the executor's AOT seam, the same construction
+  ``lower_train`` lowers).  It propagates per-tensor labels — ``per_example``
+  (which dims carry the batch axis), ``sensitive``, ``clipped``, ``noised``,
+  rng key identity — through every eqn, sub-jaxpr included, and checks the DP
+  dataflow invariants:
+
+  (a) nothing sensitive reaches the accumulator / params / optimizer state
+      except through a recognized clip site (:func:`mark`-ed by the engines);
+  (b) the sigma·C Gaussian noise is applied exactly once, to the clipped
+      aggregate (never to a per-example tensor), at the accountant's scale;
+  (c) no PRNG key material is consumed twice (key reuse), and no consumed
+      key escapes as program state;
+  (d) no per-example-tainted tensor is materialized in the program outputs.
+
+* **Repo lint** (:mod:`.lint`): AST rules over ``src/`` — constant
+  ``PRNGKey(0)`` seeds outside tests/shape-only code, host RNG inside traced
+  functions, engine registrations missing cost-model entries,
+  ``donate_argnums`` drift between executor entry points.
+
+CLI::
+
+    python -m repro.analysis verify --arch qwen2-0.5b --engine masked_pe \
+        [--layout dp --mesh test]
+    python -m repro.analysis verify --matrix [--layouts local,dp]
+    python -m repro.analysis lint [paths...]
+
+``launch.dryrun --verify`` runs the taint pass on exactly the step the
+dry-run lowers.
+"""
+from __future__ import annotations
+
+from .marks import mark, mark_tree  # noqa: F401  (dependency-light, eager)
+
+__all__ = [
+    "mark", "mark_tree",
+    "Violation", "VerifyReport",
+    "verify_jaxpr", "verify_session", "verify_arch", "verify_matrix",
+    "lint_paths",
+]
+
+_LAZY = {
+    "Violation": "rules", "VerifyReport": "rules",
+    "verify_jaxpr": "verify", "verify_session": "verify",
+    "verify_arch": "verify", "verify_matrix": "verify",
+    "lint_paths": "lint",
+}
+
+
+def __getattr__(name: str):
+    # core.clipping imports .marks at import time; the verifier drivers
+    # import core.session — loading them lazily keeps the package acyclic
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+    return getattr(importlib.import_module(f".{mod}", __name__), name)

@@ -1,0 +1,93 @@
+import os
+# mesh layouts need host devices BEFORE jax initialises; preserve user flags
+# (same discipline as launch.dryrun, but only the 8 the "test"/small meshes
+# need — the full 512-device mesh is dryrun's business)
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8"
+                               ).strip()
+
+"""CLI for the privacy dataflow verifier and the repo lint.
+
+Usage:
+  PYTHONPATH=src python -m repro.analysis verify --arch qwen2-0.5b \
+      --engine masked_pe [--layout dp_sp --mesh test] [--microbatches 2]
+  PYTHONPATH=src python -m repro.analysis verify --matrix \
+      [--arch A --arch B] [--engine E ...] [--layout local ...]
+  PYTHONPATH=src python -m repro.analysis lint [paths ...] [--no-semantic]
+
+``verify`` exits non-zero iff any report FAILs; ``lint`` iff any finding.
+"""
+import argparse
+import sys
+
+
+def _cmd_verify(args) -> int:
+    from .verify import verify_arch, verify_matrix
+
+    if args.matrix:
+        from ..models.registry import ARCH_IDS
+        archs = args.arch or ARCH_IDS
+        engines = args.engine or None
+        layouts = args.layout or ["local"]
+        failed = 0
+        for rep in verify_matrix(archs, engines, layouts):
+            print(rep if not rep.ok else f"PASS {rep.target}")
+            failed += not rep.ok
+        print(f"verify matrix: {failed} failure(s)")
+        return 1 if failed else 0
+
+    if not (args.arch and args.engine):
+        print("verify: --arch and --engine required (or --matrix)",
+              file=sys.stderr)
+        return 2
+    rep = verify_arch(args.arch[0], args.engine[0],
+                      layout=(args.layout or ["local"])[0], mesh=args.mesh,
+                      optimizer=args.optimizer,
+                      microbatches=args.microbatches)
+    print(rep)
+    return 0 if rep.ok else 1
+
+
+def _cmd_lint(args) -> int:
+    from .lint import lint_paths
+
+    paths = args.paths or [os.path.join(os.path.dirname(__file__), "..")]
+    findings = lint_paths(paths, semantic=not args.no_semantic)
+    for f in findings:
+        print(f)
+    print(f"lint: {len(findings)} finding(s)")
+    return 1 if findings else 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    v = sub.add_parser("verify", help="taint-check the traced train step")
+    v.add_argument("--arch", action="append",
+                   help="arch id (repeatable with --matrix)")
+    v.add_argument("--engine", action="append",
+                   help="clipping engine (repeatable with --matrix)")
+    v.add_argument("--layout", action="append",
+                   choices=["local", "dp", "dp_sp", "2d"],
+                   help="executor layout (repeatable with --matrix)")
+    v.add_argument("--mesh", default=None,
+                   help="mesh name for non-local layouts (default: test)")
+    v.add_argument("--optimizer", default="sgd")
+    v.add_argument("--microbatches", type=int, default=1)
+    v.add_argument("--matrix", action="store_true",
+                   help="sweep archs x engines x layouts")
+
+    li = sub.add_parser("lint", help="AST lint for host-side privacy smells")
+    li.add_argument("paths", nargs="*",
+                    help="files/dirs to lint (default: the repro package)")
+    li.add_argument("--no-semantic", action="store_true",
+                    help="skip the registry/donation cross-checks (L003/L004)")
+
+    args = ap.parse_args(argv)
+    return {"verify": _cmd_verify, "lint": _cmd_lint}[args.cmd](args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,241 @@
+"""AST-level repo lint: the privacy smells the jaxpr verifier can't see.
+
+The taint pass (:mod:`repro.analysis.taint`) checks the ONE traced train
+step; these checks sweep the whole source tree for host-side habits that
+undermine DP before a jaxpr ever exists:
+
+  L001  constant ``jax.random.PRNGKey(<literal>)`` outside tests.  A baked
+        seed means every run draws the SAME noise — the Gaussian mechanism
+        silently degrades to a fixed offset.  Shape-only uses (eval_shape
+        / abstract init) are annotated ``# lint: allow-const-key``.
+  L002  host-side legacy RNG (``np.random.RandomState``, the ``np.random.*``
+        global generator, stdlib ``random``) in src: invisible to the
+        key-discipline analysis and unreproducible across processes.
+  L003  clipping-engine registry vs costmodel drift: every registered
+        engine needs roofline multipliers (and no stale costmodel entries),
+        or dry-run cost reports silently lie for new engines.
+  L004  buffer-donation drift between the interactive jits and the AOT
+        lowerings of the same program (``jit_step``/``jit_update`` vs
+        ``lower_train``; decode/prefill likewise): mismatched
+        ``donate_argnums`` makes the verified/benchmarked memory behaviour
+        differ from what sessions actually run.
+
+``lint_paths`` is pure AST for L001/L002 (no imports of the linted code);
+L003 imports the two registries and compares them; L004 parses
+``launch/executor.py``.  The CLI front-end lives in
+``python -m repro.analysis lint``.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+from typing import Iterable, List, Optional, Sequence, Tuple
+
+ALLOW_CONST_KEY = "lint: allow-const-key"
+
+# np.random attributes that use the legacy global/stateful host RNG
+_NP_LEGACY = {
+    "RandomState", "seed", "rand", "randn", "randint", "random",
+    "random_sample", "choice", "permutation", "shuffle", "uniform", "normal",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    code: str          # L001..L004
+    path: str
+    line: int
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: {self.code} {self.message}"
+
+
+def _dotted(node: ast.AST) -> str:
+    """Best-effort dotted name of an attribute chain ('jax.random.PRNGKey')."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def _line_allows(lines: Sequence[str], lineno: int, marker: str) -> bool:
+    """marker on the flagged line or the line directly above suppresses."""
+    for ln in (lineno, lineno - 1):
+        if 1 <= ln <= len(lines) and marker in lines[ln - 1]:
+            return True
+    return False
+
+
+def _check_const_keys(path: str, tree: ast.AST,
+                      lines: Sequence[str]) -> List[Finding]:
+    out = []
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call) and node.args):
+            continue
+        name = _dotted(node.func)
+        if not name.endswith((".PRNGKey", ".key")) or ".random" not in name:
+            continue
+        arg = node.args[0]
+        if not (isinstance(arg, ast.Constant) and isinstance(arg.value, int)):
+            continue
+        if _line_allows(lines, node.lineno, ALLOW_CONST_KEY):
+            continue
+        out.append(Finding(
+            "L001", path, node.lineno,
+            f"constant {name}({arg.value}): a literal seed fixes the DP "
+            f"noise stream; thread a key in (or annotate shape-only uses "
+            f"with `# {ALLOW_CONST_KEY}`)"))
+    return out
+
+
+def _check_host_rng(path: str, tree: ast.AST,
+                    lines: Sequence[str]) -> List[Finding]:
+    out = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Attribute):
+            name = _dotted(node)
+            head, _, attr = name.rpartition(".")
+            if head in ("np.random", "numpy.random") and attr in _NP_LEGACY:
+                out.append(Finding(
+                    "L002", path, node.lineno,
+                    f"legacy host RNG {name}: use np.random.default_rng "
+                    f"(or a jax key) so runs are reproducible and the key "
+                    f"discipline stays checkable"))
+        elif isinstance(node, (ast.Import,)):
+            for alias in node.names:
+                if alias.name == "random":
+                    out.append(Finding(
+                        "L002", path, node.lineno,
+                        "stdlib `random` imported: host RNG invisible to "
+                        "the key analysis; use np.random.default_rng or "
+                        "jax.random"))
+    return out
+
+
+def check_engine_costmodel() -> List[Finding]:
+    """L003: registered engines and roofline multiplier tables must agree."""
+    from ..core.clipping import available_engines
+    from ..launch import costmodel
+
+    registered = set(available_engines()) | {"nonprivate"}
+    out = []
+    cm_path = costmodel.__file__
+    for table in ("ENGINE_MM_MULT", "ENGINE_ATTN_MULT"):
+        keys = set(getattr(costmodel, table))
+        for name in sorted(registered - keys):
+            out.append(Finding(
+                "L003", cm_path, 0,
+                f"engine {name!r} is registered but missing from "
+                f"costmodel.{table}: dry-run rooflines would KeyError "
+                f"(or lie) for it"))
+        for name in sorted(keys - registered):
+            out.append(Finding(
+                "L003", cm_path, 0,
+                f"costmodel.{table} has {name!r} which is not a registered "
+                f"clipping engine: stale entry"))
+    return out
+
+
+# (interactive jit method, AOT lowering method) pairs that must donate the
+# same argument positions
+_DONATE_PAIRS = (
+    ("jit_step", "lower_train"),
+    ("jit_update", "lower_train"),
+    ("jit_decode", "lower_decode"),
+    ("jit_prefill_step", "lower_prefill_step"),
+)
+
+
+def _donated_argnums(fn: ast.FunctionDef) -> Optional[Tuple[int, ...]]:
+    """The tuple literal handed to donate_argnums inside ``fn`` (unwrapping
+    a ``self._donate((...))`` guard), or None when no jit call donates."""
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        for kw in node.keywords:
+            if kw.arg != "donate_argnums":
+                continue
+            val = kw.value
+            if (isinstance(val, ast.Call)
+                    and _dotted(val.func).endswith("_donate") and val.args):
+                val = val.args[0]
+            if isinstance(val, ast.Tuple):
+                elts = []
+                for e in val.elts:
+                    if not (isinstance(e, ast.Constant)
+                            and isinstance(e.value, int)):
+                        return None              # non-literal: can't compare
+                    elts.append(e.value)
+                return tuple(elts)
+    return None
+
+
+def check_donation_consistency(executor_path: Optional[str] = None
+                               ) -> List[Finding]:
+    """L004: jit_* and lower_* donation of the same program must match."""
+    if executor_path is None:
+        from ..launch import executor as _ex
+        executor_path = _ex.__file__
+    with open(executor_path) as f:
+        tree = ast.parse(f.read(), executor_path)
+
+    out = []
+    for cls in [n for n in ast.walk(tree) if isinstance(n, ast.ClassDef)]:
+        methods = {n.name: n for n in cls.body
+                   if isinstance(n, ast.FunctionDef)}
+        for jit_name, lower_name in _DONATE_PAIRS:
+            if jit_name not in methods or lower_name not in methods:
+                continue
+            j = _donated_argnums(methods[jit_name])
+            lo = _donated_argnums(methods[lower_name])
+            if j is None or lo is None or j == lo:
+                continue
+            out.append(Finding(
+                "L004", executor_path, methods[jit_name].lineno,
+                f"{cls.name}.{jit_name} donates {j} but "
+                f"{cls.name}.{lower_name} donates {lo}: the AOT-verified "
+                f"memory plan differs from the one sessions execute"))
+    return out
+
+
+def _iter_py(paths: Iterable[str]) -> List[str]:
+    files = []
+    for p in paths:
+        if os.path.isfile(p):
+            files.append(p)
+            continue
+        for root, _dirs, names in os.walk(p):
+            files.extend(os.path.join(root, n) for n in names
+                         if n.endswith(".py"))
+    return sorted(set(files))
+
+
+def lint_paths(paths: Iterable[str], *, semantic: bool = True
+               ) -> List[Finding]:
+    """Run every check over ``paths`` (files or directories).
+
+    ``semantic=False`` skips L003/L004 (which import/locate repro modules) —
+    the pure-AST subset for linting arbitrary files.
+    """
+    findings: List[Finding] = []
+    for path in _iter_py(paths):
+        with open(path) as f:
+            src = f.read()
+        try:
+            tree = ast.parse(src, path)
+        except SyntaxError as e:
+            findings.append(Finding("L000", path, e.lineno or 0,
+                                    f"syntax error: {e.msg}"))
+            continue
+        lines = src.splitlines()
+        findings.extend(_check_const_keys(path, tree, lines))
+        findings.extend(_check_host_rng(path, tree, lines))
+    if semantic:
+        findings.extend(check_engine_costmodel())
+        findings.extend(check_donation_consistency())
+    return findings

@@ -1,0 +1,96 @@
+"""The ``dp_mark`` annotation primitive — how engines declare DP sites.
+
+Clipping engines, the fused kernels and the update builders call
+:func:`mark` on the values where a DP-relevant event happens::
+
+    coef   = mark("clip", coef)                       # a recognized clip site
+    z      = mark("noise", z, scale=sigma_c)          # THE calibrated draw
+    params = mark_tree("release", params)             # the released output
+
+At runtime a mark is a perfect no-op: the primitive lowers to its operand
+(identity — XLA never sees it), is linear under differentiation (tangents and
+cotangents pass through unmarked, so a mark is never duplicated by autodiff)
+and commutes with vmap.  Its only purpose is to survive tracing as a named
+eqn (``dp_mark[kind=clip]``) in the ClosedJaxpr, where the taint verifier
+(:mod:`repro.analysis.taint` / :mod:`repro.analysis.rules`) uses it as a
+trusted declaration: *this value passed through clipping*, *this is the one
+sigma·C Gaussian draw*, *this value is being released*.
+
+The marks are trusted, the dataflow around them is not: the verifier proves
+that nothing reaches the accumulator except through a clip mark, that the
+noise mark joins the gradient only after aggregation, at the accountant's
+scale, exactly once — so a mark placed on the wrong value still fails the
+surrounding invariants.
+
+This module depends only on jax so that :mod:`repro.core` can import it
+without cycles.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.extend.core import Primitive
+from jax.interpreters import ad, batching, mlir
+
+MARK_KINDS = ("clip", "noise", "release")
+
+dp_mark_p = Primitive("dp_mark")
+
+
+@dp_mark_p.def_impl
+def _mark_impl(x, *, kind: str, scale: Optional[float], aggregated: bool):
+    return x
+
+
+@dp_mark_p.def_abstract_eval
+def _mark_abstract(x, *, kind: str, scale: Optional[float], aggregated: bool):
+    return x
+
+
+def _mark_lowering(ctx, x, *, kind, scale, aggregated):
+    return [x]          # identity: the compiled program contains nothing
+
+
+mlir.register_lowering(dp_mark_p, _mark_lowering)
+
+
+def _mark_batch(args, dims, **params):
+    return dp_mark_p.bind(args[0], **params), dims[0]
+
+
+batching.primitive_batchers[dp_mark_p] = _mark_batch
+
+# Linear under autodiff, and deliberately NOT re-marked on the tangent or
+# cotangent: a "noise" mark must appear exactly once in the final jaxpr, and
+# transposing through an identity must not mint a second declaration.
+ad.defjvp(dp_mark_p, lambda g, x, **params: g)
+ad.primitive_transposes[dp_mark_p] = lambda ct, x, **params: [ct]
+
+
+def mark(kind: str, x, *, scale: Optional[float] = None,
+         aggregated: bool = False):
+    """Tag ``x`` with a DP dataflow declaration (identity at runtime).
+
+    kind:
+      ``"clip"``    — ``x`` passed through a recognized clip site (the
+                      clip-coefficient, or a clipped value).  With
+                      ``aggregated=True`` the site also performed the
+                      batch-axis reduction (the Pallas clip+accumulate
+                      kernel), so the per-example axis is discharged here.
+      ``"noise"``   — ``x`` is the calibrated Gaussian noise; ``scale`` must
+                      be the static sigma·C the accountant assumes.
+      ``"release"`` — ``x`` leaves the DP boundary (updated parameters).
+    """
+    if kind not in MARK_KINDS:
+        raise ValueError(f"mark kind {kind!r} not in {MARK_KINDS}")
+    if scale is not None:
+        scale = float(scale)
+    return dp_mark_p.bind(x, kind=kind, scale=scale, aggregated=aggregated)
+
+
+def mark_tree(kind: str, tree: Any, *, scale: Optional[float] = None,
+              aggregated: bool = False):
+    """:func:`mark` applied to every array leaf of a pytree."""
+    return jax.tree.map(
+        lambda x: mark(kind, x, scale=scale, aggregated=aggregated), tree)

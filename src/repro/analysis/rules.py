@@ -1,0 +1,223 @@
+"""DP invariant rules over a :class:`~repro.analysis.taint.TaintResult`.
+
+The interpreter collects; this module judges.  Rules (private programs):
+
+``R1  unclipped-aggregation``   a batch axis of sensitive data was summed away
+                                with no clip site on any side of the
+                                contraction, and the result reaches protected
+                                state (params / grad_acc / opt_state).
+``R1b per-example-state``       a tensor still carrying example identity
+                                reaches protected state.
+``R2  missing-noise ..``        the sigma·C Gaussian is absent, duplicated
+                                (a released leaf sees two draws), mis-scaled
+                                against the accountant, or joined to
+                                per-example / unclipped material.
+``R3  unnoised-release``        a released sensitive leaf carries no noise.
+``R4  key-reuse ..``            one PRNG key identity consumed twice, a
+                                loop-invariant key sampled inside scan/while,
+                                or a consumed key escaping as program state.
+``R5  per-example-output``      any program output still batch-tainted.
+
+Every violation names the offending jaxpr eqn (``prim -> aval @ file:line``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .taint import TaintResult
+
+_SCALE_RTOL = 1e-6
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    rule: str
+    message: str
+    eqn: str = ""
+
+    def __str__(self) -> str:
+        loc = f"\n      at {self.eqn}" if self.eqn else ""
+        return f"[{self.rule}] {self.message}{loc}"
+
+
+@dataclasses.dataclass
+class VerifyReport:
+    target: str
+    private: bool
+    violations: List[Violation]
+    stats: Dict[str, object] = dataclasses.field(default_factory=dict)
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    def __str__(self) -> str:
+        head = ("PASS" if self.ok else "FAIL") + f"  {self.target}"
+        lines = [head]
+        for v in self.violations:
+            lines.append("  " + str(v).replace("\n", "\n  "))
+        if self.stats:
+            kv = ", ".join(f"{k}={v}" for k, v in sorted(self.stats.items()))
+            lines.append(f"  ({kv})")
+        return "\n".join(lines)
+
+
+def check(
+    result: TaintResult,
+    out_paths: Sequence[str],
+    *,
+    private: bool,
+    sigma_c: Optional[float],
+    expect_noise: bool = True,
+    protected_prefixes: Tuple[str, ...] = (
+        "state.params", "state.grad_acc", "state.opt_state"),
+    rng_out_path: str = "state.rng",
+    target: str = "",
+) -> VerifyReport:
+    outs = result.out_taints
+    if len(out_paths) != len(outs):
+        raise ValueError(
+            f"{len(out_paths)} out paths for {len(outs)} program outputs")
+    v: List[Violation] = []
+
+    def protected(path: str) -> bool:
+        return any(path == p or path.startswith(p + ".")
+                   for p in protected_prefixes)
+
+    # -- R1 / R1b: protected state --------------------------------------
+    if private:
+        for path, t in zip(out_paths, outs):
+            if not protected(path):
+                continue
+            if t.batch_dims and t.sensitive:
+                v.append(Violation(
+                    "per-example-state",
+                    f"{path} still carries the example axis "
+                    f"(dims {sorted(t.batch_dims)})", t.src))
+            for eid in sorted(t.agg_unclipped):
+                ev = result.agg_events[eid]
+                v.append(Violation(
+                    "unclipped-aggregation",
+                    f"{path} contains a batch-axis reduction of sensitive "
+                    f"data with no clip site on the contraction", ev.src))
+
+    # -- R2: the noise ---------------------------------------------------
+    if private and expect_noise:
+        if not result.noise_marks:
+            v.append(Violation(
+                "missing-noise",
+                "no dp_mark[kind=noise] eqn in the program — the sigma*C "
+                "Gaussian is never drawn"))
+        for m in result.noise_marks:
+            if m.scale is None:
+                v.append(Violation(
+                    "noise-scale",
+                    "noise mark carries no static scale declaration", m.src))
+            elif sigma_c is not None:
+                tol = _SCALE_RTOL * max(abs(sigma_c), 1.0)
+                if abs(m.scale - sigma_c) > tol:
+                    v.append(Violation(
+                        "noise-scale",
+                        f"declared noise scale {m.scale:g} != accountant "
+                        f"sigma*C {sigma_c:g}", m.src))
+            if m.in_taint.batch_dims:
+                v.append(Violation(
+                    "noise-on-per-example",
+                    f"noise drawn over a per-example tensor "
+                    f"(dims {sorted(m.in_taint.batch_dims)})", m.src))
+        for j in result.join_events:
+            if j.other.batch_dims:
+                v.append(Violation(
+                    "noise-joins-per-example",
+                    "calibrated noise is applied to a tensor that still "
+                    f"carries the example axis (dims {sorted(j.other.batch_dims)})",
+                    j.src))
+            elif not j.other.clipped:
+                v.append(Violation(
+                    "noise-joins-unclipped",
+                    "calibrated noise is applied to sensitive material that "
+                    "never passed a clip site", j.src))
+            elif j.other.agg_unclipped:
+                eid = min(j.other.agg_unclipped)
+                v.append(Violation(
+                    "noise-joins-unclipped",
+                    "calibrated noise is applied to an aggregate containing "
+                    "unclipped contributions "
+                    f"(aggregated at {result.agg_events[eid].src})", j.src))
+    elif result.noise_marks and not private:
+        for m in result.noise_marks:
+            v.append(Violation(
+                "unexpected-noise",
+                "noise mark in a non-private program", m.src))
+
+    # -- R3: the release -------------------------------------------------
+    if private:
+        for r in result.release_marks:
+            t = r.in_taint
+            if t.sensitive and not t.clipped:
+                v.append(Violation(
+                    "unclipped-release",
+                    "released value derives from sensitive data with no "
+                    "clip site upstream", r.src))
+            if t.batch_dims:
+                v.append(Violation(
+                    "per-example-release",
+                    f"released value still carries the example axis "
+                    f"(dims {sorted(t.batch_dims)})", r.src))
+            if expect_noise and t.sensitive:
+                if not t.noise_ids:
+                    v.append(Violation(
+                        "unnoised-release",
+                        "released sensitive value carries no calibrated "
+                        "noise", r.src))
+                elif len(t.noise_ids) > 1:
+                    v.append(Violation(
+                        "double-noise",
+                        f"released value mixes {len(t.noise_ids)} distinct "
+                        "noise draws — sigma*C applied more than once", r.src))
+
+    # -- R4: rng hygiene (checked even for non-private programs) ---------
+    by_key: Dict[object, list] = {}
+    for ev in result.rng_events:
+        by_key.setdefault(ev.key_id, []).append(ev)
+    for events in by_key.values():
+        if len(events) > 1:
+            sites = "; ".join(e.src for e in events)
+            v.append(Violation(
+                "key-reuse",
+                f"PRNG key consumed {len(events)} times without an "
+                f"intervening split/fold_in: {sites}", events[0].src))
+    for ev in result.rng_events:
+        if ev.loop_const:
+            v.append(Violation(
+                "key-reuse-in-loop",
+                "loop-invariant PRNG key sampled inside a scan/while body — "
+                "every iteration draws the same randomness", ev.src))
+    consumed = set(by_key)
+    for path, t in zip(out_paths, outs):
+        if path == rng_out_path and t.rng is not None and t.rng in consumed:
+            v.append(Violation(
+                "consumed-key-escape",
+                f"{path} returns a key that was already consumed by a "
+                "sampling eqn", t.src))
+
+    # -- R5: outputs -----------------------------------------------------
+    for path, t in zip(out_paths, outs):
+        if t.batch_dims and t.sensitive and not protected(path):
+            v.append(Violation(
+                "per-example-output",
+                f"program output {path} materializes a per-example tensor "
+                f"(dims {sorted(t.batch_dims)})", t.src))
+
+    stats = {
+        "clip_sites": len(result.clip_sites),
+        "noise_marks": len(result.noise_marks),
+        "release_marks": len(result.release_marks),
+        "rng_events": len(result.rng_events),
+        "outputs": len(outs),
+    }
+    if result.unknown_prims:
+        stats["opaque_prims"] = ",".join(sorted(result.unknown_prims))
+    return VerifyReport(target=target, private=private, violations=v,
+                        stats=stats)

@@ -1,0 +1,174 @@
+"""Drivers: trace the real train step, taint it, check the rules.
+
+The program verified is exactly the one that executes: the session's fused
+step traced through the executor's ``trace_train`` AOT seam (the same jit +
+sharding construction ``lower_train`` lowers and ``fit()`` runs).
+"""
+from __future__ import annotations
+
+from typing import Iterable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.tree_util as jtu
+
+from . import rules
+from .rules import VerifyReport
+from .taint import CLEAN, Taint, interpret
+
+VERIFY_TRAIN = dict(steps=1, n_data=32, seq_len=8, physical_batch=8, q=0.25,
+                    smoke=True)
+
+
+# ---------------------------------------------------------------------------
+# pytree path -> role mapping
+# ---------------------------------------------------------------------------
+
+def _key_str(entry) -> str:
+    for attr in ("name", "key", "idx"):
+        v = getattr(entry, attr, None)
+        if v is not None:
+            return str(v)
+    return str(entry)
+
+
+def _paths_of(tree, prefix: str) -> List[str]:
+    leaves = jtu.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, _leaf in leaves:
+        parts = [prefix] + [_key_str(k) for k in path]
+        out.append(".".join(parts))
+    return out
+
+
+def _state_paths(state_shape, prefix: str = "state") -> List[str]:
+    # TrainState is a NamedTuple; name its fields instead of tuple indices
+    out: List[str] = []
+    for field, sub in state_shape._asdict().items():
+        out.extend(_paths_of(sub, f"{prefix}.{field}"))
+    return out
+
+
+def _input_taint(path: str) -> Taint:
+    if path.startswith("batch.") or path == "mask":
+        return Taint(batch_dims=frozenset([0]), sensitive=True,
+                     src=f"input {path}")
+    if path == "state.rng":
+        return Taint(rng=f"input:{path}", src=f"input {path}")
+    if path == "state.grad_acc" or path.startswith("state.grad_acc."):
+        # accumulated clipped sums from previous physical batches
+        return Taint(sensitive=True, clipped=True, src=f"input {path}")
+    if path.startswith("state.opt_state."):
+        if path.rsplit(".", 1)[-1] == "count":
+            return CLEAN
+        # momentum / adam moments: noised clipped aggregates of past steps
+        return Taint(sensitive=True, clipped=True, src=f"input {path}")
+    if path == "state.seen":
+        return Taint(sensitive=True, src=f"input {path}")
+    return CLEAN          # params, step
+
+
+def _out_paths(out_info) -> List[str]:
+    state_info, metrics_info = out_info
+    return _state_paths(state_info) + _paths_of(metrics_info, "metrics")
+
+
+# ---------------------------------------------------------------------------
+# jaxpr-level entry
+# ---------------------------------------------------------------------------
+
+def verify_jaxpr(closed, in_paths: Sequence[str], out_paths: Sequence[str], *,
+                 private: bool, sigma_c: Optional[float],
+                 expect_noise: bool = True, target: str = "") -> VerifyReport:
+    """Taint-interpret a closed jaxpr whose invars/outvars are described by
+    role paths (``state.params...``, ``batch.tokens``, ``mask``, ...)."""
+    in_taints = [_input_taint(p) for p in in_paths]
+    result = interpret(closed, in_taints)
+    return rules.check(result, out_paths, private=private, sigma_c=sigma_c,
+                       expect_noise=expect_noise, target=target)
+
+
+def verify_trace(closed, out_info, state_shape, batch_specs, *,
+                 private: bool, sigma_c: Optional[float],
+                 expect_noise: bool = True, target: str = "") -> VerifyReport:
+    """Verify an already-traced train step (``Executor.trace_train`` output)
+    against its state/batch shape structures — the seam ``dryrun --verify``
+    uses on exactly the program it lowers."""
+    in_paths = (_state_paths(state_shape) + _paths_of(batch_specs, "batch")
+                + ["mask"])
+    return verify_jaxpr(closed, in_paths, _out_paths(out_info),
+                        private=private, sigma_c=sigma_c,
+                        expect_noise=expect_noise, target=target)
+
+
+# ---------------------------------------------------------------------------
+# session-level entry
+# ---------------------------------------------------------------------------
+
+def _batch_specs(session):
+    import numpy as np
+    from ..data.synthetic import dataset_for_config
+    tc = session.train_cfg
+    ds = dataset_for_config(session.model_cfg, tc.n_data, tc.seq_len,
+                            seed=tc.seed)
+    batch = ds.fetch(np.arange(min(tc.physical_batch, tc.n_data)))
+    specs = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), dict(batch))
+    mask = jax.ShapeDtypeStruct((tc.physical_batch,), jax.numpy.float32)
+    return specs, mask
+
+
+def verify_session(session, *, expect_noise: bool = True,
+                   target: str = "") -> VerifyReport:
+    """Verify the session's REAL fused train step (the one fit() runs)."""
+    batch_specs, mask_spec = _batch_specs(session)
+    state_shape = jax.eval_shape(lambda: session.state)
+    session._configure_train()
+    closed, out_info = session.executor.trace_train(
+        session.step_fn, state_shape, batch_specs, mask_spec)
+
+    dp = session.dp
+    if not target:
+        arch = getattr(session.model_cfg, "name", "?")
+        layout = session.executor.describe().get("layout", "local")
+        target = f"{arch} x {dp.engine} x {layout}"
+    return verify_trace(
+        closed, out_info, state_shape, batch_specs,
+        private=dp.private,
+        sigma_c=dp.noise_multiplier * dp.clip_norm,
+        expect_noise=expect_noise, target=target)
+
+
+def verify_arch(arch: str, engine: str, *, layout: str = "local",
+                mesh: Optional[str] = None, optimizer: str = "sgd",
+                microbatches: int = 1, **train_overrides) -> VerifyReport:
+    """Build a smoke-sized session for (arch, engine, layout) and verify its
+    traced step.  Mesh layouts need enough jax devices (see launch.dryrun)."""
+    from ..core.engine import DPConfig
+    from ..core.session import PrivacySession, TrainConfig
+    from ..launch.executor import LaunchConfig
+
+    if layout in (None, "local"):
+        launch = LaunchConfig()
+    else:
+        launch = LaunchConfig(mesh=mesh or "test", layout=layout)
+    tc = TrainConfig(optimizer=optimizer, **{**VERIFY_TRAIN, **train_overrides})
+    dp = DPConfig(engine=engine, microbatches=microbatches)
+    session = PrivacySession.from_config(arch, dp, tc, launch=launch)
+    return verify_session(session)
+
+
+def verify_matrix(archs: Optional[Sequence[str]] = None,
+                  engines: Optional[Sequence[str]] = None,
+                  layouts: Sequence[str] = ("local",),
+                  **kw) -> Iterable[VerifyReport]:
+    """Generator of reports over archs x engines x layouts."""
+    from ..models.registry import ARCH_IDS
+    if archs is None:
+        archs = ARCH_IDS
+    if engines is None:
+        engines = ("masked_pe", "masked_fused", "masked_ghost", "masked_bk",
+                   "nonprivate")
+    for arch in archs:
+        for engine in engines:
+            for layout in layouts:
+                yield verify_arch(arch, engine, layout=layout, **kw)

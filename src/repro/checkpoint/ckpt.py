@@ -41,7 +41,7 @@ def _flatten_state(tree, prefix=""):
 
 
 def save(path: str, params: Any, opt_state: Any = None, step: int = 0,
-         meta: dict = None) -> None:
+         meta: Optional[dict] = None) -> None:
     """Atomic write: serialise to `.tmp` siblings, then os.replace — a crash
     mid-write (incl. the AsyncCheckpointer's background thread dying with
     the process) can never corrupt the previous good checkpoint at `path`."""
@@ -106,7 +106,7 @@ class AsyncCheckpointer:
             lambda x: x.copy() if isinstance(x, jax.Array) else x, tree)
 
     def save(self, path: str, params: Any, opt_state: Any = None,
-             step: int = 0, meta: dict = None) -> None:
+             step: int = 0, meta: Optional[dict] = None) -> None:
         """Enqueue a checkpoint write; blocks only on a still-running
         previous write.  ``step``/``meta`` must be host values."""
         self.wait()

@@ -34,6 +34,7 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..analysis.marks import mark as dp_mark
 from ..utils.params import grads_into_tree, missing_paths
 from . import layers
 from .tape import Tape
@@ -134,9 +135,16 @@ def available_engines() -> Tuple[str, ...]:
 
 
 def clip_coef(sq_norms, mask, clip_norm):
-    """Opacus clip factor min(1, C/||g||), times the Poisson mask."""
+    """Opacus clip factor min(1, C/||g||), times the Poisson mask.
+
+    The coefficient is ``dp_mark``-ed as THE recognized clip site: every
+    engine that clips by multiplying (pe, ghost's reweighted backward, BK's
+    tape recombination) inherits the ``clipped`` taint from this one value,
+    so the static verifier (:mod:`repro.analysis`) accepts an aggregation
+    only if this coefficient participates in it."""
     norms = jnp.sqrt(jnp.maximum(sq_norms, 1e-24))
-    return mask * jnp.minimum(1.0, clip_norm / norms), norms
+    coef = dp_mark("clip", mask * jnp.minimum(1.0, clip_norm / norms))
+    return coef, norms
 
 
 # ---------------------------------------------------------------------------
@@ -144,7 +152,7 @@ def clip_coef(sq_norms, mask, clip_norm):
 # ---------------------------------------------------------------------------
 
 def per_example_grads_and_sq(loss_fn: Callable, params, batch,
-                             constraints: ShardingConstraints = None):
+                             constraints: Optional[ShardingConstraints] = None):
     """vmapped per-example grads (pe_dtype cast + pe_grad pin applied) and
     their per-example squared norms — shared by every pe-style engine so
     dtype/constraint semantics cannot diverge between them."""
@@ -167,7 +175,7 @@ def per_example_grads_and_sq(loss_fn: Callable, params, batch,
 @register_engine("pe", "masked_pe", materializes_pe=True)
 def per_example_clipped_grads(loss_fn: Callable, params, batch, mask,
                               clip_norm: float, *,
-                              constraints: ShardingConstraints = None
+                              constraints: Optional[ShardingConstraints] = None
                               ) -> Tuple[dict, Aux]:
     grads, sq = per_example_grads_and_sq(loss_fn, params, batch, constraints)
     coef, norms = clip_coef(sq, mask, clip_norm)
@@ -238,7 +246,7 @@ def ghost_norms(loss_fn, params, batch):
 @register_engine("masked_ghost", record_based=True)
 def ghost_clipped_grads(loss_fn: Callable, params, batch, mask,
                         clip_norm: float, *,
-                        constraints: ShardingConstraints = None
+                        constraints: Optional[ShardingConstraints] = None
                         ) -> Tuple[dict, Aux]:
     """Ghost clipping: norm pass + reweighted second backward."""
     sq, _ = ghost_norms(loss_fn, params, batch)
@@ -257,7 +265,7 @@ def ghost_clipped_grads(loss_fn: Callable, params, batch, mask,
 @register_engine("masked_bk", record_based=True)
 def bk_clipped_grads(loss_fn: Callable, params, batch, mask,
                      clip_norm: float, check_coverage: bool = False, *,
-                     constraints: ShardingConstraints = None
+                     constraints: Optional[ShardingConstraints] = None
                      ) -> Tuple[dict, Aux]:
     """Book-Keeping: one backward pass; clipped grads rebuilt from the tape."""
     dEps, records, specs, losses = _eps_backward(loss_fn, params, batch)

@@ -32,6 +32,7 @@ from typing import Any, Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from ..analysis.marks import mark as dp_mark, mark_tree as dp_mark_tree
 from ..kernels import tree_noisy_update
 from ..optim import Optimizer
 from ..utils.params import FlatGradView
@@ -136,7 +137,7 @@ def _microbatched_clipped_sum(loss_fn, params, batch, mask, cfg: DPConfig,
 
 
 def build_accumulate_fn(loss_fn: Callable, cfg: DPConfig, *,
-                        constraints: ShardingConstraints = None):
+                        constraints: Optional[ShardingConstraints] = None):
     """accumulate(state, batch, mask) -> (state, metrics). Jit-stable shapes."""
 
     def accumulate(state: TrainState, batch, mask):
@@ -209,7 +210,8 @@ def build_update_fn(optimizer: Optimizer, cfg: DPConfig, *, fuse: bool = True):
             # noise — the SAME stream the fused path draws, so both paths
             # produce identical updates for identical keys)
             if cfg.private:
-                g_flat = (state.grad_acc + sigma_c * view.noise(nkey)) \
+                z = dp_mark("noise", view.noise(nkey), scale=sigma_c)
+                g_flat = (state.grad_acc + sigma_c * z) \
                     / cfg.expected_batch_size
             else:
                 g_flat = state.grad_acc / jnp.maximum(state.seen, 1.0)
@@ -226,6 +228,9 @@ def build_update_fn(optimizer: Optimizer, cfg: DPConfig, *, fuse: bool = True):
                 opt_state = dict(opt_state, mom=view.flatten(opt_state["mom"]))
             params = jax.tree.map(lambda p, u: (p + u).astype(p.dtype),
                                   state.params, updates)
+        # the updated params are what leaves the DP boundary — declare the
+        # release so the verifier checks clipped+noised-exactly-once HERE
+        params = dp_mark_tree("release", params)
         return TrainState(params, opt_state, view.zeros(), rng,
                           state.step + 1, jnp.zeros((), jnp.float32))
 
@@ -233,7 +238,7 @@ def build_update_fn(optimizer: Optimizer, cfg: DPConfig, *, fuse: bool = True):
 
 
 def build_fused_step(loss_fn: Callable, optimizer: Optimizer, cfg: DPConfig, *,
-                     constraints: ShardingConstraints = None):
+                     constraints: Optional[ShardingConstraints] = None):
     """One logical batch == one call: clip+accumulate then noise+update.
     This is the function lowered in the dry-run."""
     accumulate = build_accumulate_fn(loss_fn, cfg, constraints=constraints)

@@ -17,7 +17,7 @@ testable (and parity with ``masked_pe`` is asserted) everywhere.
 """
 from __future__ import annotations
 
-from typing import Callable, Tuple
+from typing import Callable, Optional, Tuple
 
 import jax
 
@@ -35,7 +35,7 @@ def _interpret() -> bool:
 @register_engine("masked_fused", materializes_pe=True)
 def fused_clipped_grads(loss_fn: Callable, params, batch, mask,
                         clip_norm: float, *,
-                        constraints: ShardingConstraints = None
+                        constraints: Optional[ShardingConstraints] = None
                         ) -> Tuple[dict, Aux]:
     grads, sq = per_example_grads_and_sq(loss_fn, params, batch, constraints)
     # kernel recomputes mask * min(1, C/norm) internally; coef here is aux

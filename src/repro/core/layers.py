@@ -105,7 +105,7 @@ def dense_stacked_pair(tape: Tape, name: str, x, w1, w3, *,
     return y1, y2
 
 
-def resolve_record(records, name: str, spec: LayerSpec, scope_name: str = None):
+def resolve_record(records, name: str, spec: LayerSpec, scope_name: Optional[str] = None):
     """Return the record for ``name``, following a ``record_of`` alias within
     the same scope (the alias is scope-relative; prefix with this record's
     scope path)."""

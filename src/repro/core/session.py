@@ -112,11 +112,11 @@ class PrivacySession:
     """
 
     def __init__(self, model, model_cfg, dp: DPConfig, train: TrainConfig, *,
-                 optimizer: Optimizer = None,
-                 constraints: ShardingConstraints = None,
-                 accountant: PrivacyAccountant = None,
-                 loss_fn: Callable = None,
-                 launch: LaunchConfig = None):
+                 optimizer: Optional[Optimizer] = None,
+                 constraints: Optional[ShardingConstraints] = None,
+                 accountant: Optional[PrivacyAccountant] = None,
+                 loss_fn: Optional[Callable] = None,
+                 launch: Optional[LaunchConfig] = None):
         dp.validate()                       # fail fast, listing the registry
         self.model = model
         self.model_cfg = model_cfg
@@ -146,11 +146,11 @@ class PrivacySession:
     # -- construction -------------------------------------------------------
 
     @classmethod
-    def from_config(cls, model_cfg, dp_cfg: DPConfig = None,
-                    train_cfg: TrainConfig = None, *,
-                    constraints: ShardingConstraints = None,
-                    optimizer: Optimizer = None,
-                    launch: LaunchConfig = None) -> "PrivacySession":
+    def from_config(cls, model_cfg, dp_cfg: Optional[DPConfig] = None,
+                    train_cfg: Optional[TrainConfig] = None, *,
+                    constraints: Optional[ShardingConstraints] = None,
+                    optimizer: Optional[Optimizer] = None,
+                    launch: Optional[LaunchConfig] = None) -> "PrivacySession":
         """Build a session from (arch name | ArchConfig, DPConfig, TrainConfig).
 
         When ``train_cfg.target_eps`` is set and the engine is private, σ is
@@ -186,8 +186,8 @@ class PrivacySession:
                    launch=launch)
 
     @classmethod
-    def restore(cls, path: str, model_cfg, dp_cfg: DPConfig = None,
-                train_cfg: TrainConfig = None, **kw) -> "PrivacySession":
+    def restore(cls, path: str, model_cfg, dp_cfg: Optional[DPConfig] = None,
+                train_cfg: Optional[TrainConfig] = None, **kw) -> "PrivacySession":
         """from_config + load params (and step/eps/accountant metadata)."""
         from ..checkpoint import restore_into
         session = cls.from_config(model_cfg, dp_cfg, train_cfg, **kw)
@@ -290,7 +290,7 @@ class PrivacySession:
         batch, mask = self.executor.place(batch, mask)
         return float(self._jitted("evaluate")(self.state.params, batch, mask))
 
-    def fit(self, dataset=None, steps: int = None, *, ckpt: str = None,
+    def fit(self, dataset=None, steps: Optional[int] = None, *, ckpt: Optional[str] = None,
             ckpt_every: int = 0) -> dict:
         """Run the full loop: PoissonSampler -> BatchMemoryManager ->
         accumulate/update -> accountant (-> checkpoint).  Returns the same
@@ -401,7 +401,7 @@ class PrivacySession:
                 # composition instead of assuming constant (q, sigma)
                 "accountant": self.accountant.state_dict()}
 
-    def checkpoint_async(self, path: str, *, step: int = None) -> None:
+    def checkpoint_async(self, path: str, *, step: Optional[int] = None) -> None:
         """Enqueue a checkpoint on the background writer and return — the
         step loop keeps running while d2h + npz write happen off-thread.
         Blocks only if a previous write is still in flight.  Pass ``step``
@@ -460,8 +460,8 @@ class PrivacySession:
     # -- serving ------------------------------------------------------------
 
     def serve_engine(self, *, max_slots: int = 4, max_len: int = 64,
-                     extras: dict = None, prefill_chunk: int = 1,
-                     token_budget: int = None, prefix_sharing: bool = True):
+                     extras: Optional[dict] = None, prefill_chunk: int = 1,
+                     token_budget: Optional[int] = None, prefix_sharing: bool = True):
         """A :class:`~repro.serve.ServeEngine` over the session's CURRENT
         parameters and executor, cached per (max_slots, max_len,
         prefill_chunk, token_budget, prefix_sharing) so repeated

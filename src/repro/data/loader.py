@@ -9,7 +9,7 @@ masked clipped-gradient sum is exactly the sum over the true logical batch.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Iterator, Tuple
+from typing import Callable, Iterator, Optional, Tuple
 
 import numpy as np
 
@@ -36,7 +36,7 @@ class BatchMemoryManager:
     """
 
     def __init__(self, fetch: Callable[[np.ndarray], dict], physical: int,
-                 place: Callable = None):
+                 place: Optional[Callable] = None):
         self.fetch = fetch
         self.p = physical
         self.place = place

@@ -27,6 +27,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from ..analysis.marks import mark as dp_mark
 from ..utils.params import FlatGradView
 from .clip_accum import clip_accum
 from .ghost_norm import ghost_norm_dense  # re-export
@@ -49,6 +50,10 @@ def tree_clip_accum(per_example_grads, norms, mask, clip_norm, *,
     # VMEM tile, so no full f32 HBM copy is materialised here
     flat = jnp.concatenate([l.reshape(B, -1) for l in leaves], axis=1)
     summed = clip_accum(flat, norms, mask, clip_norm, interpret=interpret)
+    # the kernel clips AND sums over the example axis internally — declare
+    # both to the static verifier (aggregated=True discharges the batch axis
+    # the opaque pallas_call otherwise taints conservatively)
+    summed = dp_mark("clip", summed, aggregated=True)
     out, off = [], 0
     for l in leaves:
         sz = int(l.size) // B
@@ -80,9 +85,15 @@ def tree_noisy_update(params, grad_acc, key, sigma_c, expected_batch, lr, *,
     interpret = (not _on_tpu()) if interpret is None else interpret
     leaves = jax.tree.leaves(params)
 
+    # static sigma*C (the usual case: DPConfig floats) is declared on the
+    # noise mark so the verifier can check it against the accountant
+    scale = float(sigma_c) if isinstance(sigma_c, (int, float)) else None
+
     if use_kernel:
         in_kernel_rng = key is not None and not interpret
         z = (None if key is None or in_kernel_rng else view.noise(key))
+        if z is not None:
+            z = dp_mark("noise", z, scale=scale)
         if in_kernel_rng:
             kd = (key if jnp.issubdtype(key.dtype, jnp.unsignedinteger)
                   else jax.random.key_data(key))     # old- vs new-style keys
@@ -114,6 +125,10 @@ def tree_noisy_update(params, grad_acc, key, sigma_c, expected_batch, lr, *,
                     expected_batch, lr, momentum_buf=m_seg,
                     momentum=momentum, **kw)
                 newm_segs.append(newm)
+            if in_kernel_rng:
+                # the draw happens inside the kernel: declare it on the
+                # kernel's output, one mark per disjoint leaf segment
+                out = dp_mark("noise", out, scale=scale)
             newp.append(out.reshape(p.shape).astype(p.dtype))
         new_params = jax.tree.unflatten(jax.tree.structure(params), newp)
         if momentum_buf is None:
@@ -126,7 +141,8 @@ def tree_noisy_update(params, grad_acc, key, sigma_c, expected_batch, lr, *,
     # pure-XLA flat-fused path: one expression over the flat buffers; the
     # per-leaf static slices below are views XLA fuses into the update loop
     if key is not None:
-        g_flat = (grad_acc + sigma_c * view.noise(key)) * (1.0 / expected_batch)
+        z = dp_mark("noise", view.noise(key), scale=scale)
+        g_flat = (grad_acc + sigma_c * z) * (1.0 / expected_batch)
     else:
         g_flat = grad_acc * (1.0 / expected_batch)
     if momentum_buf is not None:

@@ -43,7 +43,8 @@ class Costs:
 def param_stats(model, cfg: ArchConfig):
     """Exact param counts from the tree (experts discounted by top_k/E for
     the active count)."""
-    shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    shapes = jax.eval_shape(                   # lint: allow-const-key
+        lambda: model.init(jax.random.PRNGKey(0)))
     flat = flatten_params(shapes)
     total = 0.0
     active = 0.0

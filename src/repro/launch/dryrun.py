@@ -30,6 +30,7 @@ import json
 import math
 import time
 import traceback
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -79,11 +80,12 @@ def applicable(arch: str, shape_name: str) -> bool:
 
 
 def lower_one(arch: str, shape_name: str, *, mesh: str = "production",
-              engine: str = None, microbatches: int = None,
+              engine: Optional[str] = None, microbatches: Optional[int] = None,
               unroll: bool = False, compile_: bool = True,
               layout: str = "2d", ce_chunk: int = 512,
               pe_bf16: bool = False, remat: bool = False,
-              smoke: bool = False, prefill_chunk: int = 0) -> dict:
+              smoke: bool = False, prefill_chunk: int = 0,
+              verify: bool = False) -> dict:
     cfg = _arch_config(arch, shape_name)
     if smoke:
         cfg = cfg.reduced()
@@ -121,6 +123,7 @@ def lower_one(arch: str, shape_name: str, *, mesh: str = "production",
 
     if shape.kind == "prefill":
         # inference prefill: full-sequence forward producing logits
+        # (shape-only: eval_shape never runs the init)  lint: allow-const-key
         params_shape = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
         specs = input_specs(cfg, shape)
 
@@ -152,18 +155,36 @@ def lower_one(arch: str, shape_name: str, *, mesh: str = "production",
                        expected_batch_size=shape.global_batch,
                        engine=engine, microbatches=mb)
         opt = sgd(1e-3, momentum=0.9)
-        state_shape = jax.eval_shape(
+        state_shape = jax.eval_shape(          # lint: allow-const-key
             lambda: init_state(model.init(jax.random.PRNGKey(0)), opt,
-                               jax.random.PRNGKey(1)))
+                               jax.random.PRNGKey(1)))  # lint: allow-const-key
         specs = input_specs(cfg, shape)
         step = build_fused_step(lambda p, b, t: model.loss(p, b, t), opt, dpc,
                                 constraints=constraints)
         lowered = executor.lower_train(step, state_shape, specs["batch"],
                                        specs["mask"])
+        if verify:
+            # taint-check EXACTLY the program lowered above: same step fn,
+            # shapes, shardings and donation, through the trace_train seam
+            from ..analysis.verify import verify_trace
+            closed, out_info = executor.trace_train(
+                step, state_shape, specs["batch"], specs["mask"])
+            report = verify_trace(
+                closed, out_info, state_shape, specs["batch"],
+                private=dpc.private,
+                sigma_c=dpc.noise_multiplier * dpc.clip_norm,
+                target=f"{arch} x {engine} x {layout} ({shape_name})")
+            print(report)
+            rec["verify"] = {"ok": report.ok,
+                             "violations": [str(v) for v in
+                                            report.violations]}
+            if not report.ok:
+                raise SystemExit(
+                    f"privacy verification FAILED for {arch} {shape_name}")
         costs = costmodel.train_costs(model, cfg, shape, engine,
                                       dict(executor.mesh.shape))
     else:
-        params_shape = jax.eval_shape(
+        params_shape = jax.eval_shape(         # lint: allow-const-key
             lambda: model.init(jax.random.PRNGKey(0)))
         cache_shape = jax.eval_shape(
             lambda p: model.init_cache(p, shape.global_batch, shape.seq_len),
@@ -282,6 +303,10 @@ def main():
                          "prefill_step at this chunk size for decode shapes "
                          "(0 = skip)")
     ap.add_argument("--no-compile", action="store_true")
+    ap.add_argument("--verify", action="store_true",
+                    help="taint-check the DP invariants of each lowered "
+                         "train step (repro.analysis); fails the combo on "
+                         "any violation")
     ap.add_argument("--out", default=None, help="directory for JSON records")
     args = ap.parse_args()
     if args.mesh and args.multi_pod and args.mesh != "production-multipod":
@@ -309,7 +334,8 @@ def main():
                             layout=args.layout, ce_chunk=args.ce_chunk,
                             pe_bf16=args.pe_bf16, remat=args.remat,
                             smoke=args.smoke,
-                            prefill_chunk=args.prefill_chunk)
+                            prefill_chunk=args.prefill_chunk,
+                            verify=args.verify)
             rec["status"] = "ok"
             ok += 1
         except Exception as e:

@@ -216,6 +216,14 @@ class Executor:
         cm.set_act_sharding(None)
         cm.set_expert_sharding(None)
 
+    # -- AOT tracing (the static-verifier seam, sibling of lower_train) -----
+
+    def trace_train(self, step_fn, state_shape, batch_specs, mask_spec):
+        """(ClosedJaxpr, out_info) of the train step exactly as this executor
+        would jit it — consumed by :mod:`repro.analysis`."""
+        traced = jax.jit(step_fn).trace(state_shape, batch_specs, mask_spec)
+        return traced.jaxpr, traced.out_info
+
     def describe(self) -> dict:
         raise NotImplementedError
 
@@ -415,6 +423,21 @@ class MeshExecutor(Executor):
                 out_shardings=(sshard, None),
                 donate_argnums=(0,)).lower(state_shape, batch_specs,
                                            mask_spec)
+
+    def trace_train(self, step_fn, state_shape, batch_specs, mask_spec):
+        """Same jit construction as :meth:`lower_train` (shardings + donation),
+        stopped at the traced jaxpr — what the verifier interprets is the
+        program this mesh would run."""
+        sshard = self.state_sharding(state_shape)
+        bspec = self.batch_sharding(mask_spec.shape[0])
+        bshard = jax.tree.map(lambda _: bspec, batch_specs)
+        with self.mesh:
+            traced = jax.jit(
+                step_fn, in_shardings=(sshard, bshard, bspec),
+                out_shardings=(sshard, None),
+                donate_argnums=(0,)).trace(state_shape, batch_specs,
+                                           mask_spec)
+        return traced.jaxpr, traced.out_info
 
     def lower_prefill(self, fn, params_shape, batch_specs):
         pshard = params_shardings(params_shape, self.mesh)

@@ -65,19 +65,19 @@ def synthetic_trace(n: int, vocab: int, max_len: int, seed: int = 0,
     completion (the distribution static batching pads worst — the
     benchmark's trace)."""
     from ..serve import Request, SamplingParams
-    rng = np.random.RandomState(seed)
+    rng = np.random.default_rng(seed)
     reqs = []
     for i in range(n):
         if profile == "bimodal":
-            pl = int(rng.randint(2, 9))
-            nt = (int(rng.randint(3 * max_len // 4, max_len - pl))
-                  if i % 4 == 3 else int(rng.randint(2, 9)))
+            pl = int(rng.integers(2, 9))
+            nt = (int(rng.integers(3 * max_len // 4, max_len - pl))
+                  if i % 4 == 3 else int(rng.integers(2, 9)))
         else:
             lo = max(2, max_len // 16)
-            pl = int(rng.randint(lo, max(lo + 1, max_len // 3)))
-            nt = int(rng.randint(1, max(2, max_len - pl)))
+            pl = int(rng.integers(lo, max(lo + 1, max_len // 3)))
+            nt = int(rng.integers(1, max(2, max_len - pl)))
         reqs.append(Request(
-            prompt=rng.randint(0, vocab, size=pl).tolist(),
+            prompt=rng.integers(0, vocab, size=pl).tolist(),
             max_new_tokens=nt,
             sampling=SamplingParams(temperature=temperature, top_k=top_k,
                                     seed=seed + i)))

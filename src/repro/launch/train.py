@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import argparse
 import json
+from typing import Optional
 
 from ..core import DPConfig
 from ..core.session import PrivacySession, TrainConfig
@@ -28,11 +29,11 @@ def make_dataset(cfg, n, seq_len, seed=0):
 def make_session(arch: str, *, smoke: bool = True, steps: int = 4,
                  n_data: int = 512, seq_len: int = 16, physical: int = 8,
                  q: float = 0.25, engine: str = "masked_pe",
-                 target_eps: float = 8.0, delta: float = None,
+                 target_eps: float = 8.0, delta: Optional[float] = None,
                  clip_norm: float = 1.0, lr: float = 1e-3,
                  optimizer: str = "sgd", seed: int = 0,
                  microbatches: int = 1, log_every: int = 1,
-                 mesh: str = None, layout: str = "dp") -> PrivacySession:
+                 mesh: Optional[str] = None, layout: str = "dp") -> PrivacySession:
     """The one place the training CLI wires configs into a PrivacySession.
 
     ``mesh`` (a LaunchConfig preset: "test", "production", ...) runs the same
@@ -52,10 +53,10 @@ def make_session(arch: str, *, smoke: bool = True, steps: int = 4,
 def train(arch: str, *, smoke: bool = True, steps: int = 4, n_data: int = 512,
           seq_len: int = 16, physical: int = 8, q: float = 0.25,
           engine: str = "masked_pe", target_eps: float = 8.0,
-          delta: float = None, clip_norm: float = 1.0, lr: float = 1e-3,
-          optimizer: str = "sgd", seed: int = 0, ckpt: str = None,
+          delta: Optional[float] = None, clip_norm: float = 1.0, lr: float = 1e-3,
+          optimizer: str = "sgd", seed: int = 0, ckpt: Optional[str] = None,
           log_every: int = 1, describe: bool = False,
-          mesh: str = None, layout: str = "dp") -> dict:
+          mesh: Optional[str] = None, layout: str = "dp") -> dict:
     session = make_session(arch, smoke=smoke, steps=steps, n_data=n_data,
                            seq_len=seq_len, physical=physical, q=q,
                            engine=engine, target_eps=target_eps, delta=delta,

@@ -8,7 +8,7 @@ Poisson-subsampled with rate q, so this accounting is valid — the paper's
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -19,7 +19,7 @@ from . import rdp
 class PrivacyAccountant:
     delta: float
     alphas: Sequence[float] = rdp.DEFAULT_ALPHAS
-    _rdp: np.ndarray = dataclasses.field(default=None)  # type: ignore
+    _rdp: Optional[np.ndarray] = None   # filled in __post_init__
     history: List[Tuple[float, float, int]] = dataclasses.field(default_factory=list)
 
     def __post_init__(self):

@@ -145,7 +145,7 @@ class CachePool:
     """A fixed pool of ``max_slots`` independent decode-cache rows."""
 
     def __init__(self, model, params, max_slots: int, max_len: int, *,
-                 executor=None, dtype=jnp.float32, extras: Dict = None):
+                 executor=None, dtype=jnp.float32, extras: Optional[Dict] = None):
         if executor is None:
             from ..launch.executor import build_executor
             executor = build_executor(None)

@@ -61,10 +61,10 @@ class ServeEngine:
 
     def __init__(self, model, model_cfg, params, *, executor=None,
                  max_slots: int = 4, max_len: int = 64,
-                 cache_dtype=jnp.float32, extras: Dict = None,
+                 cache_dtype=jnp.float32, extras: Optional[Dict] = None,
                  engine_name: str = "nonprivate",
                  admission: str = "continuous",
-                 prefill_chunk: int = 1, token_budget: int = None,
+                 prefill_chunk: int = 1, token_budget: Optional[int] = None,
                  prefix_sharing: bool = True):
         if not hasattr(model, "decode_step"):
             raise ValueError(f"{getattr(model_cfg, 'name', model)} has no "
@@ -133,8 +133,8 @@ class ServeEngine:
 
     @classmethod
     def from_session(cls, session, *, max_slots: int = 4, max_len: int = 64,
-                     cache_dtype=jnp.float32, extras: Dict = None,
-                     prefill_chunk: int = 1, token_budget: int = None,
+                     cache_dtype=jnp.float32, extras: Optional[Dict] = None,
+                     prefill_chunk: int = 1, token_budget: Optional[int] = None,
                      prefix_sharing: bool = True) -> "ServeEngine":
         """An engine serving the session's current parameters through the
         session's executor (local or mesh — same LaunchConfig semantics)."""
@@ -149,7 +149,7 @@ class ServeEngine:
         self.executor.configure_model(self.model_cfg, "decode", self.max_len,
                                       self.max_slots, self._engine_name)
 
-    def refresh(self, params, extras: Dict = None) -> None:
+    def refresh(self, params, extras: Optional[Dict] = None) -> None:
         """Serve new parameters (and optionally new frontends) with the
         ALREADY-COMPILED decode/sample steps.  The cache pool is rebuilt —
         its template is a function of params/extras for encoder-decoder

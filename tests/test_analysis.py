@@ -1,0 +1,254 @@
+"""The static privacy verifier (repro.analysis) catches real DP-SGD bugs.
+
+Three layers of pinning:
+  (a) mutation fixtures — a minimal hand-written DP-SGD step with one
+      deliberate privacy bug per case (missing clip, missing/double noise,
+      wrong sigma, noise on per-example grads, key reuse, per-example
+      leak); the verifier must FLAG each one with the right rule and pass
+      the unmutated step clean.
+  (b) the real engines — every registered engine's actual jitted train
+      step (the exact jaxpr ``trace_train`` lowers) verifies clean on a
+      smoke arch, including the MoE archs whose batched gather/scatter
+      used to false-positive; the full arch x engine matrix runs slow.
+  (c) retracing guards — the jit caches behind PrivacySession.fit and
+      ServeEngine.run stay at ONE entry across steps, so the verified
+      jaxpr is THE program that runs (a shape-triggered retrace would
+      silently verify a program nobody executes).
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import mark as dp_mark
+from repro.analysis.lint import lint_paths
+from repro.analysis.verify import verify_arch, verify_jaxpr
+from repro.core import DPConfig, PrivacySession, TrainConfig
+from repro.models import ARCH_IDS
+from repro.serve import Request, ServeEngine
+
+from conftest import run_multidevice_sub as _run_sub  # noqa: E402
+
+D = 4
+SIGMA_C = 2.0
+
+
+# ---------------------------------------------------------------------------
+# (a) mutation fixtures: a linear-model DP-SGD step, one bug per scenario
+# ---------------------------------------------------------------------------
+
+def _make_step(mutation):
+    """Linear-model DP-SGD step with one deliberate privacy bug injected."""
+
+    def step(state, batch, mask):
+        params, grad_acc, rng = state
+
+        def one_loss(p, x):
+            return 0.5 * jnp.sum((x @ p) ** 2)
+
+        grads = jax.vmap(jax.grad(one_loss), in_axes=(None, 0))(params,
+                                                                batch["x"])
+        sq = jnp.sum(grads.reshape(grads.shape[0], -1) ** 2, -1)
+        norms = jnp.sqrt(jnp.maximum(sq, 1e-24))
+        coef = mask * jnp.minimum(1.0, 1.0 / norms)
+        if mutation != "no_clip":
+            coef = dp_mark("clip", coef)
+        acc = grad_acc + jnp.sum(grads * coef[:, None], axis=0)
+
+        rng, nkey = jax.random.split(rng)
+        z = jax.random.normal(nkey, acc.shape)
+        if mutation == "key_reuse":
+            z = z + jax.random.normal(nkey, acc.shape)
+        scale = 1.0 if mutation == "wrong_scale" else SIGMA_C
+        if mutation == "no_noise":
+            g = acc / 8.0
+        elif mutation == "noise_on_pe":
+            zb = dp_mark("noise", jax.random.normal(nkey, grads.shape),
+                         scale=SIGMA_C)
+            g = jnp.sum((grads + SIGMA_C * zb) * coef[:, None], axis=0) / 8.0
+        else:
+            z = dp_mark("noise", z, scale=scale)
+            g = (acc + SIGMA_C * z) / 8.0
+            if mutation == "double_noise":
+                z2 = dp_mark("noise", jax.random.normal(nkey, acc.shape),
+                             scale=SIGMA_C)
+                g = g + SIGMA_C * z2
+        new_params = dp_mark("release", params - 0.1 * g)
+        aux = grads.sum(-1) if mutation == "pe_leak" else jnp.sum(new_params)
+        return (new_params, jnp.zeros_like(grad_acc), rng), aux
+
+    return step
+
+
+def _verify_mutation(mutation):
+    traced = jax.jit(_make_step(mutation)).trace(
+        (jnp.zeros((D,)), jnp.zeros((D,)), jax.random.PRNGKey(0)),
+        {"x": jnp.zeros((8, D))}, jnp.zeros((8,)))
+    return verify_jaxpr(
+        traced.jaxpr,
+        ["state.params", "state.grad_acc", "state.rng", "batch.x", "mask"],
+        ["state.params", "state.grad_acc", "state.rng", "metrics.aux"],
+        private=True, sigma_c=SIGMA_C, target=mutation)
+
+
+def test_unmutated_step_verifies_clean():
+    report = _verify_mutation("good")
+    assert report.ok, str(report)
+    assert report.stats["clip_sites"] == 1
+    assert report.stats["noise_marks"] == 1
+
+
+@pytest.mark.parametrize("mutation,rule", [
+    ("no_clip", "unclipped-aggregation"),
+    ("no_noise", "missing-noise"),
+    ("double_noise", "double-noise"),
+    ("wrong_scale", "noise-scale"),
+    ("noise_on_pe", "noise-joins-per-example"),
+    ("key_reuse", "key-reuse"),
+    ("pe_leak", "per-example-output"),
+])
+def test_mutation_is_caught(mutation, rule):
+    report = _verify_mutation(mutation)
+    assert not report.ok, f"{mutation}: verifier passed a buggy step"
+    rules = {v.rule for v in report.violations}
+    assert rule in rules, f"{mutation}: wanted {rule}, got {sorted(rules)}"
+    # the report must point AT code, not just name a rule (missing-noise is
+    # the one absence-of-an-eqn rule, so there is nothing to anchor to)
+    offender = next(v for v in report.violations if v.rule == rule)
+    if rule != "missing-noise":
+        assert offender.eqn, str(report)
+
+
+def test_report_is_readable():
+    report = _verify_mutation("no_noise")
+    text = str(report)
+    assert "FAIL" in text and "missing-noise" in text
+    assert "no_noise" in text            # target named
+
+
+# ---------------------------------------------------------------------------
+# (b) the real engines: the jaxpr trace_train lowers verifies clean
+# ---------------------------------------------------------------------------
+
+ENGINES = ("masked_pe", "masked_fused", "masked_ghost", "masked_bk",
+           "nonprivate")
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_engine_verifies_clean(engine):
+    report = verify_arch("qwen2-0.5b", engine)
+    assert report.ok, str(report)
+    if engine != "nonprivate":
+        assert report.stats["noise_marks"] >= 1
+        assert report.stats["clip_sites"] >= 1
+    else:
+        assert report.stats["noise_marks"] == 0
+
+
+@pytest.mark.parametrize("engine", ("masked_pe", "masked_fused"))
+def test_moe_batched_gather_scatter_no_false_positive(engine):
+    """Regression: vmapped take_along_axis / .at[].add in the MoE dispatch
+    carry operand_batching_dims the taint rules must map precisely — the
+    old offset-dim mapping leaked the example axis into feature dims and
+    flagged phantom unclipped aggregations."""
+    report = verify_arch("olmoe-1b-7b", engine)
+    assert report.ok, str(report)
+
+
+def test_microbatched_step_verifies_clean():
+    """The lax.scan microbatch accumulation path (carry fixpoint) is clean."""
+    report = verify_arch("qwen2-0.5b", "masked_pe", microbatches=2)
+    assert report.ok, str(report)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("engine", ENGINES)
+def test_full_matrix(arch, engine):
+    report = verify_arch(arch, engine)
+    assert report.ok, str(report)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("layout", ("dp", "dp_sp", "2d"))
+def test_mesh_layouts_verify_clean(layout):
+    """The sharded train step (MeshExecutor.trace_train, donated state,
+    GSPMD constraints inside) satisfies the same invariants."""
+    _run_sub(f"""
+from repro.analysis.verify import verify_arch
+for engine in ("masked_pe", "masked_ghost"):
+    rep = verify_arch("qwen2-0.5b", engine, layout={layout!r}, mesh="test")
+    assert rep.ok, str(rep)
+print("ok")
+""")
+
+
+# ---------------------------------------------------------------------------
+# the AST lint layer
+# ---------------------------------------------------------------------------
+
+def test_lint_src_tree_is_clean():
+    """The shipped source passes its own lint, including the semantic
+    registry/donation cross-checks (L003/L004)."""
+    src = os.path.join(os.path.dirname(__file__), "..", "src", "repro")
+    findings = lint_paths([src])
+    assert not findings, "\n".join(str(f) for f in findings)
+
+
+def test_lint_catches_const_key_and_host_rng(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text(
+        "import random\n"
+        "import jax\n"
+        "import numpy as np\n"
+        "k = jax.random.PRNGKey(42)\n"
+        "r = np.random.RandomState(0)\n")
+    findings = lint_paths([str(bad)], semantic=False)
+    assert {f.code for f in findings} == {"L001", "L002"}
+    assert any("PRNGKey(42)" in f.message for f in findings)
+
+
+def test_lint_const_key_suppression(tmp_path):
+    ok = tmp_path / "ok.py"
+    ok.write_text(
+        "import jax\n"
+        "k = jax.random.PRNGKey(0)  # lint: allow-const-key\n"
+        "# lint: allow-const-key\n"
+        "k2 = jax.random.PRNGKey(1)\n")
+    assert lint_paths([str(ok)], semantic=False) == []
+
+
+# ---------------------------------------------------------------------------
+# (c) retracing guards: the verified program is the program that runs
+# ---------------------------------------------------------------------------
+
+def test_fit_does_not_retrace():
+    dp = DPConfig(clip_norm=0.1, noise_multiplier=0.7, engine="masked_pe")
+    tc = TrainConfig(steps=3, n_data=32, q=0.25, seq_len=8, physical_batch=4,
+                     seed=0, lr=0.1, optimizer="sgd", momentum=0.0)
+    session = PrivacySession.from_config("qwen2-0.5b", dp, tc)
+    session.fit()
+    for name in ("accumulate", "update"):
+        fn = session._jit_cache.get(name)
+        if fn is not None and hasattr(fn, "_cache_size"):
+            assert fn._cache_size() == 1, \
+                f"{name} retraced: cache size {fn._cache_size()}"
+
+
+def test_serve_run_does_not_retrace():
+    session = PrivacySession.from_config(
+        "qwen2-0.5b", DPConfig(engine="nonprivate"), TrainConfig(seed=0,
+                                                                 smoke=True))
+    eng = ServeEngine.from_session(session, max_slots=2, max_len=24)
+    rng = np.random.default_rng(0)
+    vocab = session.model_cfg.vocab
+    reqs = [Request(prompt=rng.integers(0, vocab, size=n).tolist(),
+                    max_new_tokens=6) for n in (3, 5, 2, 4)]
+    eng.run(reqs)
+    for name in ("decode_fn", "sample_fn", "greedy_fn"):
+        fn = getattr(eng, name, None)
+        if fn is not None and hasattr(fn, "_cache_size"):
+            assert fn._cache_size() <= 1, \
+                f"{name} retraced: cache size {fn._cache_size()}"
