@@ -1,21 +1,59 @@
 """Paper Table 3 / Fig. 3: memory per engine -> max physical batch size.
 
 On CPU we can't OOM-probe a 40GB GPU, so we measure compiled
-memory_analysis() temp bytes as a function of physical batch size and report
-the largest batch fitting a 16 GB (v5e) budget per engine — the same
-per-example-gradient memory wall the paper's Table 3 shows (Opacus 35 vs
-non-private 268)."""
+memory_analysis() temp+argument bytes as a function of physical batch size
+and report the largest batch fitting a 16 GB (v5e) budget per engine — the
+same per-example-gradient memory wall the paper's Table 3 shows (Opacus 35
+vs non-private 268).
+
+Two numbers per engine:
+
+  * ``bytes_per_example``  — the slope of the linear fit over B: what each
+    additional example costs.  The streaming engine's claim is exactly
+    here: tiles of m examples are consumed as they are produced, so the
+    slope collapses to ~the nonprivate one instead of the O(params)
+    per-example-gradient slope of the resident engines.
+  * ``peak_live_bytes``    — the absolute peak at the largest measured B.
+
+The engine list is DERIVED from the registry (plus "nonprivate"), with a
+completeness assertion against the costmodel tables mirroring the L003
+lint — a new engine that isn't priced or isn't measured fails here, it
+cannot silently drift.
+"""
 import jax
 import jax.numpy as jnp
 
 from .common import csv_row, emit_json, make_lm_batch, make_session
 
 BUDGET = 16 * 2 ** 30
-ENGINES = ["nonprivate", "masked_pe", "masked_ghost", "masked_bk"]
+# streaming rows are measured at a small explicit tile so the fit exercises
+# the m << B regime (the costmodel default would pick m=B at these sizes)
+STREAM_TILE = 2
 
 
-def temp_bytes(engine, B, T=16):
-    session = make_session("vit-base", engine, B)
+def engine_list():
+    """Canonical registry names (+ nonprivate), alias-deduped; asserts the
+    costmodel prices exactly this set (the L003 invariant, enforced at
+    bench time so BENCH_memory.json can never miss an engine)."""
+    from repro.core.clipping import ENGINES as _REGISTRY, available_engines
+    from repro.launch.costmodel import ENGINE_ATTN_MULT, ENGINE_MM_MULT
+
+    canon = {}
+    for name in sorted(available_engines()):
+        canon.setdefault(id(dict.__getitem__(_REGISTRY, name)), name)
+    names = ["nonprivate"] + sorted(canon.values())
+    priced = set(ENGINE_MM_MULT) | set(ENGINE_ATTN_MULT)
+    measured = set(available_engines()) | {"nonprivate"}
+    missing = measured - priced
+    extra = priced - measured
+    assert not missing and not extra, (
+        f"engine registry vs costmodel drift: unpriced={sorted(missing)}, "
+        f"stale={sorted(extra)}")
+    return names
+
+
+def temp_bytes(engine, B, T=16, stream_tile=None):
+    session = make_session("vit-base", engine, B, stream_tile=stream_tile)
     state_shape = jax.tree.map(
         lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), session.state)
     batch = jax.tree.map(
@@ -27,24 +65,37 @@ def temp_bytes(engine, B, T=16):
     return ma.temp_size_in_bytes + ma.argument_size_in_bytes
 
 
-def main():
+def main(smoke=False):
+    engines = (["nonprivate", "masked_pe", "masked_fused_stream"]
+               if smoke else engine_list())
+    sizes = (4, 8) if smoke else (4, 16)
+    b_lo, b_hi = sizes
     rows = {}
-    for eng in ENGINES:
-        per_b = {}
-        for B in (4, 16):
-            per_b[B] = temp_bytes(eng, B)
+    for eng in engines:
+        tile = STREAM_TILE if eng == "masked_fused_stream" else None
+        per_b = {B: temp_bytes(eng, B, stream_tile=tile) for B in sizes}
         # linear model: bytes ~= fixed + slope*B -> max B under budget
-        slope = (per_b[16] - per_b[4]) / 12
-        fixed = per_b[4] - 4 * slope
+        slope = (per_b[b_hi] - per_b[b_lo]) / (b_hi - b_lo)
+        fixed = per_b[b_lo] - b_lo * slope
         max_b = int((BUDGET - fixed) / max(slope, 1)) if slope > 0 else -1
-        csv_row(f"memory/vit-base/{eng}", per_b[16] / 1e3,
-                f"bytes_at_b16={per_b[16]};bytes_per_example={slope:.0f};"
+        csv_row(f"memory/vit-base/{eng}", per_b[b_hi] / 1e3,
+                f"peak_live_bytes={per_b[b_hi]};bytes_per_example={slope:.0f};"
                 f"max_physical_batch_16GB={max_b}")
-        rows[eng] = {"bytes_at_b16": int(per_b[16]),
+        rows[eng] = {"peak_live_bytes": int(per_b[b_hi]),
                      "bytes_per_example": int(slope),
                      "max_physical_batch_16GB": max_b}
-    emit_json("BENCH_memory.json", {"bench": "memory", "arch": "vit-base",
-                                    "budget_bytes": BUDGET, "engines": rows})
+    if not smoke:
+        # the tentpole's acceptance bar: streaming within ~1.2x of the
+        # nonprivate slope, every resident DP engine far above it
+        np_slope = rows["nonprivate"]["bytes_per_example"]
+        st_slope = rows["masked_fused_stream"]["bytes_per_example"]
+        assert st_slope <= 1.2 * np_slope, (
+            f"streaming bytes_per_example {st_slope} exceeds "
+            f"1.2x nonprivate ({np_slope})")
+        emit_json("BENCH_memory.json",
+                  {"bench": "memory", "arch": "vit-base",
+                   "budget_bytes": BUDGET,
+                   "stream_tile": STREAM_TILE, "engines": rows})
 
 
 if __name__ == "__main__":

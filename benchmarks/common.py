@@ -20,7 +20,7 @@ from repro.models import build_by_name
 def make_session(arch, engine="masked_pe", B=8, *, clip_norm=1.0,
                  noise_multiplier=1.0, microbatches=1, lr=1e-3,
                  momentum=0.0, optimizer="sgd", seed=0,
-                 model_cfg=None) -> PrivacySession:
+                 model_cfg=None, stream_tile=None) -> PrivacySession:
     """A benchmark session: expected logical batch pinned to the physical
     batch B (benchmarks time fixed-size steps, not Poisson draws)."""
     if model_cfg is not None:
@@ -30,7 +30,7 @@ def make_session(arch, engine="masked_pe", B=8, *, clip_norm=1.0,
         model, cfg = build_by_name(arch, smoke=True)
     dp = DPConfig(clip_norm=clip_norm, noise_multiplier=noise_multiplier,
                   expected_batch_size=float(B), engine=engine,
-                  microbatches=microbatches)
+                  microbatches=microbatches, stream_tile=stream_tile)
     tc = TrainConfig(physical_batch=B, lr=lr, optimizer=optimizer,
                      momentum=momentum, seed=seed)
     return PrivacySession(model, cfg, dp, tc)

@@ -15,10 +15,11 @@ trajectory is those files' git history).
   bench_serving     -> (beyond the paper) static vs continuous vs chunked
                        prefill vs prefix sharing on a shared-prefix trace
 
-``--smoke`` runs the CI subset (bench_step + bench_breakdown +
-bench_serving on a reduced trace) — fast enough for the 8-device job, still
-exercising the session/engine bench plumbing, the one-pass assertions and
-the serving token-identity assert so the benches can't bit-rot.
+``--smoke`` runs the CI subset (bench_step + bench_memory + bench_breakdown
++ bench_serving on reduced configs) — fast enough for the 8-device job,
+still exercising the session/engine bench plumbing, the one-pass and
+streaming-traffic assertions and the serving token-identity assert so the
+benches can't bit-rot.
 """
 import argparse
 import inspect
@@ -44,15 +45,15 @@ def _modules():
     all_mods = (bench_throughput, bench_memory, bench_recompile,
                 bench_precision, bench_breakdown, bench_step, bench_scaling,
                 bench_batchsize, bench_serving)
-    smoke_mods = (bench_step, bench_breakdown, bench_serving)
+    smoke_mods = (bench_step, bench_memory, bench_breakdown, bench_serving)
     return all_mods, smoke_mods
 
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
-                    help="CI subset: bench_step + bench_breakdown + "
-                         "bench_serving (reduced trace)")
+                    help="CI subset: bench_step + bench_memory + "
+                         "bench_breakdown + bench_serving (reduced)")
     ap.add_argument("--only", default=None,
                     help="run a single bench by name (e.g. bench_step)")
     args = ap.parse_args(argv)

@@ -22,12 +22,13 @@ from repro.core.session import PrivacySession, TrainConfig
 from repro.data import PoissonSampler, ShuffleSampler
 
 B, T = 8, 16
-ENGINES = ("masked_pe", "masked_ghost", "masked_bk")
+ENGINES = ("masked_pe", "masked_ghost", "masked_bk", "masked_fused_stream")
 
 sessions = {
     eng: PrivacySession.from_config(
         "qwen3-1.7b",
-        DPConfig(clip_norm=0.5, noise_multiplier=1.0, engine=eng),
+        DPConfig(clip_norm=0.5, noise_multiplier=1.0, engine=eng,
+                 stream_tile=2 if eng == "masked_fused_stream" else None),
         TrainConfig(steps=2, n_data=24, q=0.25, seed=0, lr=0.05,
                     optimizer="sgd", momentum=0.0))
     for eng in ENGINES
@@ -43,12 +44,16 @@ for eng, s in sessions.items():
     print(f"{eng:14s} eps spent after 2 steps: {s.privacy_spent()[0]:.3f}")
 
 ref = sessions["masked_pe"].params
-for eng in ("masked_ghost", "masked_bk"):
+for eng in ("masked_ghost", "masked_bk", "masked_fused_stream"):
     diff = max(float(jnp.abs(a - b).max())
                for a, b in zip(jax.tree.leaves(ref),
                                jax.tree.leaves(sessions[eng].params)))
     print(f"masked_pe vs {eng:14s} max param diff after 2 DP steps: {diff:.2e}")
     assert diff < 1e-4
+    if eng == "masked_fused_stream":
+        # same strict-fold reduction order + same flat noise stream — the
+        # streaming engine is not just tolerance-close but bit-identical
+        assert diff == 0.0, "streaming engine must match masked_pe bitwise"
 
 print("\nPoisson vs shuffle batch-size distributions (n=100, q/batch=0.25):")
 ps = [len(i) for i in PoissonSampler(100, 0.25, seed=0, steps=10)]

@@ -166,8 +166,8 @@ def verify_matrix(archs: Optional[Sequence[str]] = None,
     if archs is None:
         archs = ARCH_IDS
     if engines is None:
-        engines = ("masked_pe", "masked_fused", "masked_ghost", "masked_bk",
-                   "nonprivate")
+        engines = ("masked_pe", "masked_fused", "masked_fused_stream",
+                   "masked_ghost", "masked_bk", "nonprivate")
     for arch in archs:
         for engine in engines:
             for layout in layouts:

@@ -63,11 +63,17 @@ class ShardingConstraints:
                transposes.  Only the pe engines consume it.
     pe_dtype — storage dtype for per-example grads (e.g. jnp.bfloat16
                halves their HBM footprint).
+    tile_batch — applied to each microbatch tile (batch leaves + mask) a
+               streaming engine scans over; pins the tile's example axis to
+               the same data axes the full batch arrived on, so the scanned
+               backward stays data-parallel instead of degrading to the
+               GSPMD default.  Only streaming engines consume it.
     """
     grad: Optional[Callable] = None
     grad_flat: Optional[Callable] = None
     pe_grad: Optional[Callable] = None
     pe_dtype: Any = None
+    tile_batch: Optional[Callable] = None
 
 
 def _pe_hooks(constraints: Optional[ShardingConstraints]):
@@ -99,24 +105,33 @@ ENGINES: "EngineRegistry" = EngineRegistry()
 
 
 def register_engine(name: str, *aliases: str, materializes_pe: bool = False,
-                    record_based: bool = False):
+                    record_based: bool = False, streaming: bool = False):
     """Decorator: register a clipping engine under ``name`` (+ aliases).
 
     An engine is a callable
         fn(loss_fn, params, batch, mask, clip_norm, *, constraints=None)
         -> (summed clipped grads pytree, {"per_example_norms", "clip_coef"})
 
-    Traits (consumed by the executor layer when resolving shardings):
+    Traits (consumed by the executor layer when resolving shardings, and by
+    the step builders when dispatching):
       materializes_pe — the engine vmaps real (B x params) per-example
                         gradient buffers, so it needs the pe_grad layout pin
                         under sharded 2d layouts.
       record_based    — the engine's backward keeps per-layer (X, dY)
                         records (ghost/BK style), which sequence-parallel
                         activation sharding keeps T-sharded.
+      streaming       — the engine accumulates straight into the flat f32
+                        accumulator tile-by-tile instead of returning a
+                        summed gradient tree; ``build_accumulate_fn`` calls
+                        it with the extra keywords
+                        ``acc=<flat buffer>, view=<FlatGradView>,
+                        tile=<m or None>`` and receives
+                        ``(new flat accumulator, aux)`` back.
     """
     def deco(fn):
         fn.materializes_pe = materializes_pe
         fn.record_based = record_based
+        fn.streaming = streaming
         for key in (name,) + aliases:
             if key in ENGINES and dict.__getitem__(ENGINES, key) is not fn:
                 raise ValueError(f"clipping engine {key!r} already registered")
@@ -182,7 +197,15 @@ def per_example_clipped_grads(loss_fn: Callable, params, batch, mask,
 
     def wsum(g):
         c = coef.reshape((-1,) + (1,) * (g.ndim - 1)).astype(jnp.float32)
-        return jnp.sum(g.astype(jnp.float32) * c, axis=0)
+        w = g.astype(jnp.float32) * c
+        # strict left fold over the example axis, from a +0 init — the
+        # CANONICAL reduction order.  jnp.sum's reduce order is an XLA
+        # implementation detail and not tile-composable; the fold is, so the
+        # fused/streaming kernels can reproduce this oracle bitwise for any
+        # microbatch tiling (weights are materialised first: a bare
+        # multiply-add could FMA-contract differently across lowerings).
+        return jax.lax.scan(lambda a, r: (a + r, None),
+                            jnp.zeros(w.shape[1:], jnp.float32), w)[0]
 
     summed = jax.tree.map(wsum, grads)
     return summed, {"per_example_norms": norms, "clip_coef": coef}

@@ -46,8 +46,11 @@ class DPConfig:
     clip_norm: float = 1.0
     noise_multiplier: float = 1.0        # sigma
     expected_batch_size: float = 64.0    # L = q * N
-    engine: str = "masked_pe"            # pe|masked_pe|masked_fused|masked_ghost|masked_bk|nonprivate
+    engine: str = "masked_pe"            # pe|masked_pe|masked_fused|masked_fused_stream|masked_ghost|masked_bk|nonprivate
     microbatches: int = 1                # in-step grad accumulation (lax.scan)
+    stream_tile: Optional[int] = None    # streaming engines: examples per
+    #                                      scanned tile m; None = sized from
+    #                                      the memory budget (costmodel rule)
 
     @property
     def private(self) -> bool:
@@ -139,6 +142,14 @@ def _microbatched_clipped_sum(loss_fn, params, batch, mask, cfg: DPConfig,
 def build_accumulate_fn(loss_fn: Callable, cfg: DPConfig, *,
                         constraints: Optional[ShardingConstraints] = None):
     """accumulate(state, batch, mask) -> (state, metrics). Jit-stable shapes."""
+    streaming = (cfg.private and
+                 getattr(clipping.resolve_engine(cfg.engine), "streaming",
+                         False))
+    if streaming and cfg.microbatches > 1:
+        raise ValueError(
+            f"engine {cfg.engine!r} streams tile-by-tile into the flat "
+            f"accumulator; the stream_tile IS the in-step microbatch, so "
+            f"cfg.microbatches must stay 1 (got {cfg.microbatches})")
 
     def accumulate(state: TrainState, batch, mask):
         # seen handling is normalised to f32 HERE, once: integer Poisson
@@ -147,6 +158,21 @@ def build_accumulate_fn(loss_fn: Callable, cfg: DPConfig, *,
         mask = mask.astype(jnp.float32)
         view = FlatGradView.for_tree(state.params)
         grad_constraint = _grad_hook(constraints)
+        if streaming:
+            # the engine adds straight into the flat accumulator (aliased
+            # Pallas kernel inside a scan) — no summed gradient tree, no
+            # view.flatten scatter
+            fn = clipping.resolve_engine(cfg.engine)
+            acc, aux = fn(loss_fn, state.params, batch, mask, cfg.clip_norm,
+                          constraints=constraints, acc=state.grad_acc,
+                          view=view, tile=cfg.stream_tile)
+            if constraints is not None and constraints.grad_flat is not None:
+                acc = constraints.grad_flat(acc)
+            metrics = {"mean_grad_norm":
+                       (aux["per_example_norms"] * mask).sum()
+                       / jnp.maximum(mask.sum(), 1)}
+            return state._replace(grad_acc=acc,
+                                  seen=state.seen + mask.sum()), metrics
         if cfg.private:
             g, aux = _microbatched_clipped_sum(loss_fn, state.params, batch,
                                                mask, cfg, constraints)

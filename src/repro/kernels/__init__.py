@@ -1,6 +1,7 @@
-from .noisy_update import bits_to_normal
-from .ops import (clip_accum, ghost_norm_dense, noisy_sgd_update,
-                  tree_clip_accum, tree_noisy_update)
+from .noisy_update import bits_to_normal, threefry2x32
+from .ops import (clip_accum, flat_clip_accum, ghost_norm_dense,
+                  noisy_sgd_update, tree_clip_accum, tree_noisy_update)
 
-__all__ = ["bits_to_normal", "clip_accum", "ghost_norm_dense",
-           "noisy_sgd_update", "tree_clip_accum", "tree_noisy_update"]
+__all__ = ["bits_to_normal", "clip_accum", "flat_clip_accum",
+           "ghost_norm_dense", "noisy_sgd_update", "threefry2x32",
+           "tree_clip_accum", "tree_noisy_update"]

@@ -9,6 +9,19 @@ HBM exactly once, streamed through VMEM tiles.
     out[d] = Σ_b  mask[b] · min(1, C / norm[b]) · g[b, d]
 
 Grid: one program per D-tile; the B axis is reduced inside the kernel.
+
+Two entry points:
+
+  * :func:`clip_accum` — the resident form: all B per-example gradient rows
+    exist at once (the ``masked_fused`` engine).
+  * :func:`clip_accum_inplace` — the streaming form: an m-row tile of
+    per-example gradients is clipped and added into an existing flat f32
+    accumulator, which is passed as an ALIASED input/output operand
+    (``input_output_aliases``), so XLA updates the buffer in place — inside
+    a ``lax.scan`` over tiles the accumulator never duplicates across
+    iterations.  The caller guarantees the flat length divides the D-tile
+    (FlatGradView totals are 256-aligned); no padding copy may happen here,
+    it would break the aliasing.
 """
 from __future__ import annotations
 
@@ -21,7 +34,28 @@ from jax.experimental import pallas as pl
 TILE_D = 1024
 
 
-def _kernel(g_ref, norm_ref, mask_ref, c_ref, out_ref):
+def _opaque_count(n: int):
+    # the fold's trip count as a (1, 1) operand XLA cannot constant-fold:
+    # a literal count of 1 would re-unroll the loop and reintroduce the
+    # FMA contraction _fold_rows exists to avoid
+    return jax.lax.optimization_barrier(jnp.full((1, 1), n, jnp.int32))
+
+
+def _fold_rows(w, init, n):
+    # strict left fold over the example axis — the engines' CANONICAL
+    # reduction order (matches masked_pe's lax.scan fold bitwise, and
+    # composes across microbatch tiles, which jnp.sum's XLA-internal reduce
+    # order does not).  Two things are load-bearing for the bits: the
+    # sequential loop primitive (an unrolled python loop lets XLA
+    # FMA-contract the row multiply into the adds) AND the DATA-DEPENDENT
+    # trip count ``n`` (a static bound of 1 is constant-unrolled and
+    # contracted the same way — observed on XLA:CPU).
+    def body(b, a):
+        return a + jax.lax.dynamic_slice_in_dim(w, b, 1, axis=0)
+    return jax.lax.fori_loop(0, n, body, init)
+
+
+def _kernel(g_ref, norm_ref, mask_ref, c_ref, n_ref, out_ref):
     # per-example grads arrive in their storage dtype (f32 or bf16 under
     # pe_bf16) and are upcast per VMEM tile — no f32 HBM copy upstream
     g = g_ref[...].astype(jnp.float32)   # (B, TILE_D)
@@ -29,7 +63,9 @@ def _kernel(g_ref, norm_ref, mask_ref, c_ref, out_ref):
     mask = mask_ref[...]                 # (B, 1)
     c = c_ref[0, 0]
     coef = mask * jnp.minimum(1.0, c / jnp.maximum(norms, 1e-12))
-    out_ref[...] = jnp.sum(g * coef, axis=0, keepdims=True)
+    out_ref[...] = _fold_rows(g * coef,
+                              jnp.zeros((1, g.shape[1]), jnp.float32),
+                              n_ref[0, 0])
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "tile_d"))
@@ -49,6 +85,7 @@ def clip_accum(grads, norms, mask, clip_norm, *, interpret=True,
             pl.BlockSpec((B, 1), lambda i: (0, 0)),
             pl.BlockSpec((B, 1), lambda i: (0, 0)),
             pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
         ],
         out_specs=pl.BlockSpec((1, tile_d), lambda i: (0, i)),
         out_shape=jax.ShapeDtypeStruct((1, Dp), jnp.float32),
@@ -56,5 +93,77 @@ def clip_accum(grads, norms, mask, clip_norm, *, interpret=True,
     )(grads,
       norms.astype(jnp.float32).reshape(B, 1),
       mask.astype(jnp.float32).reshape(B, 1),
-      jnp.asarray(clip_norm, jnp.float32).reshape(1, 1))
+      jnp.asarray(clip_norm, jnp.float32).reshape(1, 1),
+      _opaque_count(B))
     return out[0, :D]
+
+
+def _kernel_acc(acc_ref, g_ref, norm_ref, mask_ref, c_ref, n_ref, out_ref):
+    # same clip+reduce as _kernel, with the running accumulator tile added —
+    # out aliases acc, so this is an in-place += on the flat buffer
+    g = g_ref[...].astype(jnp.float32)   # (m, TILE_D)
+    norms = norm_ref[...]                # (m, 1)
+    mask = mask_ref[...]                 # (m, 1)
+    c = c_ref[0, 0]
+    coef = mask * jnp.minimum(1.0, c / jnp.maximum(norms, 1e-12))
+    # folding FROM the carry (not carry + tile-sum) is what makes the total
+    # identical for every tile size m: the full scan is one long fold
+    out_ref[...] = _fold_rows(g * coef, acc_ref[...], n_ref[0, 0])
+
+
+def pick_tile_d(total: int, tile_d: int = TILE_D) -> int:
+    """Largest kernel D-tile in {tile_d, 512, 256} dividing ``total``
+    (FlatGradView totals are 256-aligned, so 256 always works there);
+    falls back to one whole-buffer program for odd test sizes."""
+    for t in (tile_d, 512, 256):
+        if total % t == 0:
+            return t
+    return total
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "tile_d"))
+def clip_accum_inplace(acc, grads, norms, mask, clip_norm, *, interpret=True,
+                       tile_d=None):
+    """acc (D,) f32 += Σ_b mask·min(1, C/norm)·grads[b]; acc is aliased.
+
+    ``grads`` is an (m, D) tile in its storage dtype; ``D`` must be a
+    multiple of the resolved ``tile_d`` — the caller pads ONCE outside any
+    scan (a pad here would copy and defeat ``input_output_aliases``).
+    """
+    m, D = grads.shape
+    if acc.shape != (D,):
+        raise ValueError(
+            f"acc shape {acc.shape} must match the padded grad row ({D},); "
+            f"pad the tile to the accumulator layout before the call")
+    if tile_d is None:
+        # interpret mode simulates the grid program-by-program with real
+        # per-program overhead and no VMEM limit to respect — one
+        # whole-buffer program keeps the scan-of-kernels cheap off-TPU
+        tile_d = D if interpret else pick_tile_d(D)
+    if D % tile_d:
+        raise ValueError(
+            f"flat length {D} must divide the kernel tile {tile_d} "
+            f"(FlatGradView totals are 256-aligned; pass tile_d=... for "
+            f"other layouts)")
+    out = pl.pallas_call(
+        _kernel_acc,
+        grid=(D // tile_d,),
+        in_specs=[
+            pl.BlockSpec((1, tile_d), lambda i: (0, i)),
+            pl.BlockSpec((m, tile_d), lambda i: (0, i)),
+            pl.BlockSpec((m, 1), lambda i: (0, 0)),
+            pl.BlockSpec((m, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tile_d), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, D), jnp.float32),
+        input_output_aliases={0: 0},
+        interpret=interpret,
+    )(acc.reshape(1, D),
+      grads,
+      norms.astype(jnp.float32).reshape(m, 1),
+      mask.astype(jnp.float32).reshape(m, 1),
+      jnp.asarray(clip_norm, jnp.float32).reshape(1, 1),
+      _opaque_count(m))
+    return out[0]

@@ -2,6 +2,10 @@
 
 These are the integration points the DP step builders swap in:
   * ``tree_clip_accum``    — replaces the clip+accumulate of the pe engines.
+  * ``flat_clip_accum``    — the streaming engine's tile accumulate: an
+                             m-row per-example tile clipped and added into
+                             the flat accumulator IN PLACE (aliased
+                             input/output), clip declared on the result.
   * ``tree_noisy_update``  — the fused noise + SGD(+momentum) apply over the
                              flat gradient accumulator (one read+write of
                              params/acc/momentum per step).
@@ -29,12 +33,12 @@ import jax.numpy as jnp
 
 from ..analysis.marks import mark as dp_mark
 from ..utils.params import FlatGradView
-from .clip_accum import clip_accum
+from .clip_accum import clip_accum, clip_accum_inplace
 from .ghost_norm import ghost_norm_dense  # re-export
 from .noisy_update import noisy_sgd_update
 
-__all__ = ["clip_accum", "ghost_norm_dense", "noisy_sgd_update",
-           "tree_clip_accum", "tree_noisy_update"]
+__all__ = ["clip_accum", "flat_clip_accum", "ghost_norm_dense",
+           "noisy_sgd_update", "tree_clip_accum", "tree_noisy_update"]
 
 
 def _on_tpu() -> bool:
@@ -62,11 +66,28 @@ def tree_clip_accum(per_example_grads, norms, mask, clip_norm, *,
     return jax.tree.unflatten(treedef, out)
 
 
+def flat_clip_accum(acc, tile_grads, norms, mask, clip_norm, *,
+                    interpret=True, tile_d=None):
+    """Streaming accumulate: ``acc (D,) += Σ_b coef_b · tile_grads[b]``.
+
+    ``tile_grads`` is an (m, D) per-example tile already in the flat
+    accumulator layout (zero over the alignment tail); ``acc`` is passed as
+    an aliased operand and updated in place.  The kernel clips AND sums over
+    the tile's example axis internally, so — exactly like
+    :func:`tree_clip_accum` — the result is declared a clip site with the
+    batch axis discharged (``aggregated=True``): the opaque pallas_call
+    would otherwise taint every output dim conservatively."""
+    out = clip_accum_inplace(acc, tile_grads, norms, mask, clip_norm,
+                             interpret=interpret, tile_d=tile_d)
+    return dp_mark("clip", out, aggregated=True)
+
+
 def tree_noisy_update(params, grad_acc, key, sigma_c, expected_batch, lr, *,
                       momentum_buf=None, momentum=0.0,
                       view: Optional[FlatGradView] = None,
                       use_kernel: Optional[bool] = None,
-                      interpret: Optional[bool] = None):
+                      interpret: Optional[bool] = None,
+                      in_kernel_rng: Optional[bool] = None):
     """Fused DP-SGD apply: params tree + flat accumulator -> new params tree.
 
     ``grad_acc`` is the flat f32 accumulator laid out by ``view`` (built from
@@ -76,6 +97,13 @@ def tree_noisy_update(params, grad_acc, key, sigma_c, expected_batch, lr, *,
     noise term entirely (``sigma_c`` is then ignored — the non-private fused
     step), in which case ``expected_batch`` may be a traced scalar (the seen
     count).
+
+    ``in_kernel_rng`` forces the noise source on the kernel path: ``True``
+    draws inside the kernel (hardware PRNG on TPU, the threefry fallback in
+    interpret mode), ``False`` precomputes the flat ``view.noise`` operand.
+    The default (``None``) keeps the historical choice — in-kernel on real
+    TPU, noise-operand everywhere else, so off-TPU callers keep sharing one
+    ``view.noise`` stream with the generic path.
     """
     if view is None:
         view = FlatGradView.for_tree(params)
@@ -90,7 +118,9 @@ def tree_noisy_update(params, grad_acc, key, sigma_c, expected_batch, lr, *,
     scale = float(sigma_c) if isinstance(sigma_c, (int, float)) else None
 
     if use_kernel:
-        in_kernel_rng = key is not None and not interpret
+        if in_kernel_rng is None:
+            in_kernel_rng = not interpret
+        in_kernel_rng = key is not None and in_kernel_rng
         z = (None if key is None or in_kernel_rng else view.noise(key))
         if z is not None:
             z = dp_mark("noise", z, scale=scale)

@@ -7,7 +7,24 @@ import jax.numpy as jnp
 def clip_accum_ref(grads, norms, mask, clip_norm):
     coef = (mask.astype(jnp.float32)
             * jnp.minimum(1.0, clip_norm / jnp.maximum(norms, 1e-12)))
-    return jnp.sum(grads.astype(jnp.float32) * coef[:, None], axis=0)
+    w = grads.astype(jnp.float32) * coef[:, None]
+    # strict left fold over examples from +0 — the kernels' canonical
+    # reduction order (see clip_accum._fold_rows), so oracle comparisons
+    # can be bitwise, not just allclose
+    out = jnp.zeros((w.shape[1],), jnp.float32)
+    for b in range(w.shape[0]):
+        out = out + w[b]
+    return out
+
+
+def clip_accum_inplace_ref(acc, grads, norms, mask, clip_norm):
+    coef = (mask.astype(jnp.float32)
+            * jnp.minimum(1.0, clip_norm / jnp.maximum(norms, 1e-12)))
+    w = grads.astype(jnp.float32) * coef[:, None]
+    out = acc.astype(jnp.float32)
+    for b in range(w.shape[0]):
+        out = out + w[b]
+    return out
 
 
 def ghost_norm_dense_ref(x, dy):

@@ -138,10 +138,35 @@ def _ghost_norm_flops(flat, cfg: ArchConfig, B: float, T: float) -> float:
 
 
 ENGINE_MM_MULT = {"nonprivate": 3.0, "pe": 3.0, "masked_pe": 3.0,
-                  "masked_fused": 3.0, "masked_ghost": 5.0, "masked_bk": 3.0}
+                  "masked_fused": 3.0, "masked_fused_stream": 3.0,
+                  "masked_ghost": 5.0, "masked_bk": 3.0}
 ENGINE_ATTN_MULT = {"nonprivate": 3.0, "pe": 3.0, "masked_pe": 3.0,
-                    "masked_fused": 3.0, "masked_ghost": 5.0,
-                    "masked_bk": 3.0}
+                    "masked_fused": 3.0, "masked_fused_stream": 3.0,
+                    "masked_ghost": 5.0, "masked_bk": 3.0}
+
+# streaming engine: live bytes the tile sizing must keep under budget beyond
+# the per-example slab — the flat f32 accumulator plus one params-sized f32
+# live buffer (the summed-tile output the aliased kernel writes through)
+STREAM_FIXED_F32_BUFFERS = 2
+
+
+def stream_tile_size(batch_size: int, n_params: int,
+                     budget_bytes: float = 16 * 2 ** 30,
+                     pe_dtype_bytes: int = 4) -> int:
+    """Largest streaming tile m ≤ batch whose live state fits the budget.
+
+    Peak live memory of the scanned clip-and-accumulate is
+    ``m · n_params · pe_dtype_bytes`` (the tile's vmapped per-example grads)
+    plus :data:`STREAM_FIXED_F32_BUFFERS` params-sized f32 buffers — the
+    O(m·params + params) the streaming engine exists for.  Pure arithmetic
+    (no jax), so sessions can size tiles at config time and dry-runs can
+    price meshes far larger than the host."""
+    fixed = STREAM_FIXED_F32_BUFFERS * 4.0 * n_params
+    free = budget_bytes - fixed
+    if free <= 0:
+        return 1
+    m = int(free // max(n_params * pe_dtype_bytes, 1))
+    return max(1, min(int(batch_size), m))
 
 
 def train_costs(model, cfg: ArchConfig, shape: InputShape, engine: str,
@@ -165,7 +190,8 @@ def train_costs(model, cfg: ArchConfig, shape: InputShape, engine: str,
     p_bytes = n * (2 * dtype_bytes + 4 * 4)
     # activations: ~6 tensors of (B,T,d) per layer (records for ghost/bk)
     act_coeff = {"nonprivate": 4, "pe": 6, "masked_pe": 6, "masked_fused": 6,
-                 "masked_ghost": 12, "masked_bk": 10}[engine]
+                 "masked_fused_stream": 6, "masked_ghost": 12,
+                 "masked_bk": 10}[engine]
     acts = act_coeff * tokens * cfg.d_model * max(cfg.n_layers, 1) * dtype_bytes
     # attention scores traffic (write+read of (B,H,T,Tk))
     Tk = T if not cfg.sliding_window else min(T, cfg.sliding_window)
@@ -177,16 +203,24 @@ def train_costs(model, cfg: ArchConfig, shape: InputShape, engine: str,
         scores = 0.0
     # per-example grads (the pe engines' memory wall): write + read of B·N
     # (masked_fused materialises them too — its kernel fuses only the
-    # clip+accumulate re-read, one of the two passes)
+    # clip+accumulate re-read, one of the two passes.  masked_fused_stream
+    # has the same TRAFFIC — every tile's grads are still written+read once,
+    # summing to 2·B·N over the scan — its win is peak LIVE memory, which
+    # stream_tile_size models, not bytes moved)
     pe_bytes = 2 * B * n * 4 \
-        if engine in ("pe", "masked_pe", "masked_fused") else 0.0
+        if engine in ("pe", "masked_pe", "masked_fused",
+                      "masked_fused_stream") else 0.0
     hbm = p_bytes + acts + scores + pe_bytes
 
     # ---- collective bytes (per device) ----
     # FSDP weight all-gathers: each device receives the full (TP-sharded)
-    # weight set once per pass; passes: fwd+bwd(+ghost 2nd pass)
+    # weight set once per pass; passes: fwd+bwd(+ghost 2nd pass).  The
+    # streaming engine re-gathers per scanned tile under FSDP (n_tiles·2);
+    # that is not modelled here — dp/dp_sp keep params replicated, and the
+    # table stays static per engine.
     passes = {"nonprivate": 2, "pe": 2, "masked_pe": 2, "masked_fused": 2,
-              "masked_ghost": 4, "masked_bk": 2}[engine]
+              "masked_fused_stream": 2, "masked_ghost": 4,
+              "masked_bk": 2}[engine]
     ag_w = passes * (n / mshard) * dtype_bytes * (dshard - 1) / dshard
     # grad all-reduce over data (ring: 2x per byte)
     ar_g = 2 * (n / mshard) * 4 * (dshard - 1) / dshard

@@ -295,13 +295,28 @@ class MeshExecutor(Executor):
             # dp/dp_sp fit()==local parity contract.  Under 2d that exact
             # parity was never on offer (params themselves reshard), so the
             # memory win is taken there.
-            return ShardingConstraints(pe_dtype=pe_dtype)
+            return ShardingConstraints(pe_dtype=pe_dtype,
+                                       tile_batch=self._tile_constraint())
         return ShardingConstraints(
             grad=grads_constraint(self.mesh),
             grad_flat=flat_grads_constraint(self.mesh),
             pe_grad=(pe_grads_constraint(self.mesh)
                      if _engine_traits(engine)[0] else None),
-            pe_dtype=pe_dtype)
+            pe_dtype=pe_dtype,
+            tile_batch=self._tile_constraint())
+
+    def _tile_constraint(self):
+        """Streaming-engine hook: pin each scanned microbatch tile (batch
+        leaves + mask) to the SAME data axes the incoming batch is sharded
+        over, so the per-tile backward shards like the full-batch one and no
+        per-iteration reshard creeps into the scan body.  ``batch_spec``
+        falls back to replication when the tile doesn't divide the axes."""
+        def apply(tree):
+            def one(x):
+                return jax.lax.with_sharding_constraint(
+                    x, NamedSharding(self.mesh, self.batch_spec(x.shape[0])))
+            return jax.tree.map(one, tree)
+        return apply
 
     def batch_spec(self, bsz: int) -> P:
         if self.layout in ("dp", "dp_sp"):

@@ -15,7 +15,7 @@ import argparse
 import json
 from typing import Optional
 
-from ..core import DPConfig
+from ..core import DPConfig, clipping
 from ..core.session import PrivacySession, TrainConfig
 from ..data.synthetic import dataset_for_config
 from .executor import LaunchConfig
@@ -82,8 +82,7 @@ def main():
     ap.add_argument("--physical", type=int, default=8)
     ap.add_argument("--q", type=float, default=0.25)
     ap.add_argument("--engine", default="masked_pe",
-                    choices=["nonprivate", "pe", "masked_pe", "masked_ghost",
-                             "masked_bk", "masked_fused"])
+                    choices=sorted([*clipping.ENGINES, "nonprivate"]))
     ap.add_argument("--mesh", default=None,
                     help="LaunchConfig mesh preset (e.g. test, production); "
                          "default: local, unsharded")

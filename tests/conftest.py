@@ -2,12 +2,27 @@ import subprocess
 import sys
 import os
 
+import pytest
+
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 sys.path.insert(0, SRC)
 
 import jax
 
 jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _drop_compiled_programs_between_modules():
+    """XLA:CPU JIT code is retained per compiled executable for the life of
+    the process; the full suite's compile volume can segfault a late
+    ``backend_compile`` (observed deterministically once the streaming-engine
+    tests joined the suite, while every file-level subset stays green).
+    Dropping compiled programs at module boundaries bounds the accumulation.
+    Bitwise assertions are unaffected: recompiling the same program
+    reproduces the same executable."""
+    yield
+    jax.clear_caches()
 
 
 def run_multidevice_sub(code: str, timeout: int = 900) -> str:

@@ -128,12 +128,74 @@ def test_report_is_readable():
     assert "no_noise" in text            # target named
 
 
+def _make_stream_step(mutation):
+    """Streaming-shaped DP-SGD step: tiles of m=2 clipped and folded into
+    the accumulator one at a time (a python loop stands in for the engine's
+    lax.scan so ONE tile can be individually mutated — the bug class the
+    streaming engine introduces is a tile that reaches the accumulator
+    without passing through a clip site)."""
+    M, TILES = 2, 4
+
+    def step(state, batch, mask):
+        params, grad_acc, rng = state
+
+        def one_loss(p, x):
+            return 0.5 * jnp.sum((x @ p) ** 2)
+
+        acc = grad_acc
+        for t in range(TILES):
+            xb = batch["x"][t * M:(t + 1) * M]
+            mk = mask[t * M:(t + 1) * M]
+            grads = jax.vmap(jax.grad(one_loss), in_axes=(None, 0))(params, xb)
+            sq = jnp.sum(grads.reshape(M, -1) ** 2, -1)
+            norms = jnp.sqrt(jnp.maximum(sq, 1e-24))
+            coef = mk * jnp.minimum(1.0, 1.0 / norms)
+            if not (mutation == "skip_tile_clip" and t == 0):
+                coef = dp_mark("clip", coef)
+            acc = acc + jnp.sum(grads * coef[:, None], axis=0)
+        rng, nkey = jax.random.split(rng)
+        z = dp_mark("noise", jax.random.normal(nkey, acc.shape),
+                    scale=SIGMA_C)
+        g = (acc + SIGMA_C * z) / 8.0
+        new_params = dp_mark("release", params - 0.1 * g)
+        return (new_params, jnp.zeros_like(grad_acc), rng), jnp.sum(new_params)
+
+    return step
+
+
+def _verify_stream_mutation(mutation):
+    traced = jax.jit(_make_stream_step(mutation)).trace(
+        (jnp.zeros((D,)), jnp.zeros((D,)), jax.random.PRNGKey(0)),
+        {"x": jnp.zeros((8, D))}, jnp.zeros((8,)))
+    return verify_jaxpr(
+        traced.jaxpr,
+        ["state.params", "state.grad_acc", "state.rng", "batch.x", "mask"],
+        ["state.params", "state.grad_acc", "state.rng", "metrics.aux"],
+        private=True, sigma_c=SIGMA_C, target=mutation)
+
+
+def test_streaming_shaped_step_verifies_clean():
+    report = _verify_stream_mutation("good")
+    assert report.ok, str(report)
+    assert report.stats["clip_sites"] == 4      # one per tile
+
+
+def test_streaming_skipped_tile_clip_is_caught():
+    """One tile of the stream bypassing its clip site taints the whole
+    accumulator — the verifier must flag it even though the other three
+    tiles clip correctly."""
+    report = _verify_stream_mutation("skip_tile_clip")
+    assert not report.ok, "verifier passed a stream with an unclipped tile"
+    rules = {v.rule for v in report.violations}
+    assert "unclipped-aggregation" in rules, sorted(rules)
+
+
 # ---------------------------------------------------------------------------
 # (b) the real engines: the jaxpr trace_train lowers verifies clean
 # ---------------------------------------------------------------------------
 
-ENGINES = ("masked_pe", "masked_fused", "masked_ghost", "masked_bk",
-           "nonprivate")
+ENGINES = ("masked_pe", "masked_fused", "masked_fused_stream",
+           "masked_ghost", "masked_bk", "nonprivate")
 
 
 @pytest.mark.parametrize("engine", ENGINES)

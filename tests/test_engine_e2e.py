@@ -298,6 +298,103 @@ def test_engine_parity_all_archs(arch):
                                rtol=5e-3)
 
 
+# ---------------------------------------------------------------------------
+# streaming engine: bitwise parity with masked_pe (same canonical fold, same
+# noise stream) at every tile size, without the O(B·params) tree
+# ---------------------------------------------------------------------------
+
+def _run_engine_jit(model, params, batch, mask, engine, stream_tile=None):
+    """Jitted full fused step.  Bitwise comparisons need BOTH sides compiled:
+    eager op-by-op dispatch rounds differently from the fused program."""
+    dpc = DPConfig(clip_norm=0.1, noise_multiplier=0.7,
+                   expected_batch_size=4.0, engine=engine,
+                   stream_tile=stream_tile)
+    opt = sgd(0.1)
+    step = jax.jit(build_fused_step(lambda p, b, t: model.loss(p, b, t),
+                                    opt, dpc))
+    state = init_state(params, opt, jax.random.PRNGKey(42))
+    state, _ = step(state, batch, mask)
+    return state.params
+
+
+def test_streaming_engine_bitwise_full_step(setup):
+    """masked_fused_stream == masked_pe BITWISE on the full jitted DP step,
+    for m < B dividing (1), m < B non-dividing (3, pads the batch), and
+    m = B (4, one tile): the strict left fold composes across any tiling."""
+    model, cfg, params, batch = setup
+    mask = jnp.array([1., 1., 0., 1.])
+    ref = _run_engine_jit(model, params, batch, mask, "masked_pe")
+    for m in (1, 3, 4):
+        got = _run_engine_jit(model, params, batch, mask,
+                              "masked_fused_stream", stream_tile=m)
+        for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(got)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_streaming_rejects_microbatching(setup):
+    """stream_tile IS the microbatching for the streaming engine — the outer
+    python microbatch loop would double-pad and double-count; the builder
+    refuses the combination up front."""
+    model, cfg, params, batch = setup
+    dpc = DPConfig(clip_norm=0.1, noise_multiplier=0.7,
+                   expected_batch_size=4.0, engine="masked_fused_stream",
+                   microbatches=2)
+    with pytest.raises(ValueError, match="microbatches"):
+        build_accumulate_fn(lambda p, b, t: model.loss(p, b, t), dpc)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_streaming_parity_all_archs(arch):
+    """For every registered arch: the standalone streaming engine's summed
+    tree AND per-example norms == masked_pe's, bitwise, at m in {1, 3, B}
+    (jitted on both sides — the bit claim is about compiled programs)."""
+    from repro.core import clipping as C
+    from test_models_smoke import make_batch
+    model, cfg = build_by_name(arch, smoke=True)
+    params = model.init(jax.random.PRNGKey(0))
+    B = 4
+    batch = make_batch(cfg, B=B, T=4)
+    loss_fn = lambda p, b, t: model.loss(p, b, t)
+    mask = jnp.array([1., 1., 0., 1.])
+
+    pe = jax.jit(lambda p, b, mk: C.per_example_clipped_grads(
+        loss_fn, p, b, mk, 0.05))
+    gpe, aux_pe = pe(params, batch, mask)
+    for m in (1, 3, B):
+        st = jax.jit(lambda p, b, mk, m=m: C.ENGINES["masked_fused_stream"](
+            loss_fn, p, b, mk, 0.05, tile=m))
+        gst, aux_st = st(params, batch, mask)
+        np.testing.assert_array_equal(np.asarray(aux_st["per_example_norms"]),
+                                      np.asarray(aux_pe["per_example_norms"]))
+        for a, b in zip(jax.tree.leaves(gpe), jax.tree.leaves(gst)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_streaming_ghost_norm_source(setup):
+    """The two-pass form (ghost norms first, then the tiled clip+accumulate
+    backward): never touches per-example grads in the norm pass, matches
+    masked_pe to ghost-norm tolerance like masked_ghost does."""
+    from repro.core import clipping as C
+    from repro.core.fused import set_stream_norm_source
+    model, cfg, params, batch = setup
+    mask = jnp.array([1., 1., 0., 1.])
+    loss_fn = lambda p, b, t: model.loss(p, b, t)
+    gpe, aux_pe = C.per_example_clipped_grads(loss_fn, params, batch, mask,
+                                              0.1)
+    prev = set_stream_norm_source("ghost")
+    try:
+        gst, aux_st = C.ENGINES["masked_fused_stream"](loss_fn, params, batch,
+                                                       mask, 0.1, tile=2)
+    finally:
+        set_stream_norm_source(prev)
+    np.testing.assert_allclose(np.asarray(aux_st["per_example_norms"]),
+                               np.asarray(aux_pe["per_example_norms"]),
+                               rtol=5e-3)
+    for a, b in zip(jax.tree.leaves(gpe), jax.tree.leaves(gst)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-3, atol=1e-6)
+
+
 def test_optimizers_match_reference():
     from repro.optim import adamw, sgd as mk_sgd
     p = {"w": jnp.array([1.0, -2.0])}

@@ -175,6 +175,47 @@ print(json.dumps({
 
 
 @pytest.mark.slow
+def test_mesh_fit_streaming_engine_matches_local():
+    """The streaming engine under the mesh: fit() on the 2x2 test mesh in
+    BOTH data layouts (dp, dp_sp) matches the unsharded streaming session —
+    eps bit-identical, params to reduction-order ULPs.  The scanned tile is
+    pinned to the batch axes via ShardingConstraints.tile_batch, so each
+    scan iteration's vmapped backward runs data-parallel; the flat
+    accumulator stays replicated (see MeshExecutor.constraints)."""
+    out = _run_sub(r"""
+import jax, json
+import jax.numpy as jnp
+from repro.core import DPConfig, LaunchConfig, PrivacySession, TrainConfig
+
+dp = DPConfig(clip_norm=0.1, noise_multiplier=0.7,
+              engine="masked_fused_stream", stream_tile=2)
+tc = TrainConfig(steps=2, n_data=16, q=0.25, seq_len=8, physical_batch=4,
+                 seed=0, lr=0.1, optimizer="sgd", momentum=0.0)
+local = PrivacySession.from_config("qwen2-0.5b", dp, tc)
+out_l = local.fit()
+rec = {"eps": float(out_l["final_eps"])}
+for layout in ("dp", "dp_sp"):
+    mesh = PrivacySession.from_config(
+        "qwen2-0.5b", dp, tc,
+        launch=LaunchConfig(mesh="test", layout=layout))
+    out_m = mesh.fit()
+    rec[layout] = {
+        "eps_equal": bool(out_l["final_eps"] == out_m["final_eps"]),
+        "max_param_diff": max(
+            float(jnp.abs(a - b).max()) for a, b in
+            zip(jax.tree.leaves(local.params),
+                jax.tree.leaves(mesh.params))),
+    }
+print(json.dumps(rec))
+""")
+    rec = json.loads(out.strip().splitlines()[-1])
+    assert rec["eps"] > 0
+    for layout in ("dp", "dp_sp"):
+        assert rec[layout]["eps_equal"], rec
+        assert rec[layout]["max_param_diff"] < 1e-6, rec
+
+
+@pytest.mark.slow
 def test_mesh_generate_runs_sharded():
     out = _run_sub(r"""
 import json

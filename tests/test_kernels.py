@@ -124,6 +124,137 @@ def test_tree_noisy_update_kernel_matches_xla():
                                    rtol=1e-5, atol=1e-6)
 
 
+def _inplace_case(m, D, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    acc = jax.random.normal(ks[0], (D,))
+    g = jax.random.normal(ks[1], (m, D))
+    norms = jnp.abs(jax.random.normal(ks[2], (m,))) * 2
+    mask = (jax.random.uniform(ks[3], (m,)) > 0.3).astype(jnp.float32)
+    return acc, g, norms, mask
+
+
+@pytest.mark.parametrize("m", [1, 2, 3, 8])
+def test_clip_accum_inplace_matches_ref(m):
+    """Aliased streaming kernel vs the strict-fold oracle — BITWISE, with a
+    multi-program grid (D=512, tile_d=256): the kernel's canonical reduction
+    order is the whole point, allclose would not pin it."""
+    from repro.kernels.clip_accum import clip_accum_inplace
+    acc, g, norms, mask = _inplace_case(m, 512)
+    out = clip_accum_inplace(acc, g, norms, mask, 0.7, tile_d=256)
+    expect = ref.clip_accum_inplace_ref(acc, g, norms, mask, 0.7)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+def test_clip_accum_inplace_tile_invariance():
+    """One m=4 call == two m=2 calls == four m=1 calls, bitwise: the kernel
+    folds FROM the carried accumulator, so any tiling of the example axis is
+    the same long strict fold.  m=1 specifically exercises the opaque
+    trip-count (a constant-unrolled length-1 fold would FMA-contract and
+    break this)."""
+    from repro.kernels.clip_accum import clip_accum_inplace
+    acc, g, norms, mask = _inplace_case(4, 256, seed=3)
+    whole = clip_accum_inplace(acc, g, norms, mask, 0.5)
+    two = acc
+    for i in (0, 2):
+        two = clip_accum_inplace(two, g[i:i + 2], norms[i:i + 2],
+                                 mask[i:i + 2], 0.5)
+    ones = acc
+    for i in range(4):
+        ones = clip_accum_inplace(ones, g[i:i + 1], norms[i:i + 1],
+                                  mask[i:i + 1], 0.5)
+    np.testing.assert_array_equal(np.asarray(whole), np.asarray(two))
+    np.testing.assert_array_equal(np.asarray(whole), np.asarray(ones))
+
+
+def test_clip_accum_inplace_padded_tail_stays_zero():
+    """FlatGradView accumulators carry an alignment tail past n_params.  The
+    streaming tile is zero over that tail, so accumulating must leave the
+    tail EXACTLY zero — any epsilon there would leak into the momentum
+    buffer's tail segment."""
+    from repro.kernels.clip_accum import clip_accum_inplace
+    D, n_params = 512, 456
+    acc = jnp.zeros((D,))
+    for seed in (0, 1):
+        _, g, norms, mask = _inplace_case(3, D, seed=seed)
+        g = g.at[:, n_params:].set(0.0)
+        acc = clip_accum_inplace(acc, g, norms, mask, 0.9)
+    out = np.asarray(acc)
+    assert np.all(out[n_params:] == 0.0)
+    assert np.any(out[:n_params] != 0.0)
+
+
+def test_clip_accum_inplace_shape_errors():
+    from repro.kernels.clip_accum import clip_accum_inplace
+    acc, g, norms, mask = _inplace_case(2, 300)
+    with pytest.raises(ValueError, match="must divide"):
+        clip_accum_inplace(acc, g, norms, mask, 1.0, tile_d=256)
+    with pytest.raises(ValueError, match="acc shape"):
+        clip_accum_inplace(acc[:256], g, norms, mask, 1.0)
+
+
+def _tf_stream(seed, total):
+    """The in-kernel interpret-mode noise stream, recomputed outside the
+    kernel: counter = global flat element index, c1 = 0."""
+    from repro.kernels import threefry2x32, bits_to_normal
+    b1, b2 = threefry2x32(seed[0], seed[1],
+                          jnp.arange(total, dtype=jnp.uint32),
+                          jnp.zeros((total,), jnp.uint32))
+    return bits_to_normal(b1, b2)
+
+
+@pytest.mark.parametrize("momentum", [0.0, 0.9])
+def test_noisy_update_in_kernel_threefry_parity(momentum):
+    """seed= (in-kernel threefry draw) vs noise= (the same stream computed
+    outside and fed as the flat operand): bitwise-identical parameters.
+    D=1000 with tile=512 makes the grid multi-program, so this also pins the
+    counter being the GLOBAL element index, not a per-tile restart."""
+    D, tile = 1000, 512
+    ks = jax.random.split(jax.random.PRNGKey(D), 4)
+    p = jax.random.normal(ks[0], (D,))
+    a = jax.random.normal(ks[1], (D,))
+    seed = jnp.array([1234, 5678], jnp.uint32)
+    z = _tf_stream(seed, D + (-D) % tile)[:D]
+    kw = {}
+    if momentum:
+        kw = dict(momentum_buf=jax.random.normal(ks[2], (D,)),
+                  momentum=momentum)
+    got = noisy_sgd_update(p, a, None, 1.5, 64.0, 0.01, seed=seed,
+                           tile=tile, **kw)
+    want = noisy_sgd_update(p, a, z, 1.5, 64.0, 0.01, tile=tile, **kw)
+    got = got if momentum else (got,)
+    want = want if momentum else (want,)
+    for gw, ww in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(gw), np.asarray(ww))
+
+
+def test_tree_noisy_update_in_kernel_rng_reproducible():
+    """Tree-level in_kernel_rng=True on the interpret path: every leaf's
+    update is reproducible outside the kernel from (key, leaf index) via the
+    documented counter scheme — and leaves get distinct streams."""
+    from repro.kernels.noisy_update import TILE
+    from repro.utils.params import FlatGradView
+    params = {"a": {"w": jax.random.normal(jax.random.PRNGKey(0), (9, 5))},
+              "b": jax.random.normal(jax.random.PRNGKey(1), (33,))}
+    view = FlatGradView.for_tree(params)
+    acc = jax.random.normal(jax.random.PRNGKey(2), (view.total,))
+    key = jax.random.PRNGKey(7)
+    newp, _ = ops.tree_noisy_update(params, acc, key, 1.3, 16.0, 0.05,
+                                    view=view, use_kernel=True,
+                                    interpret=True, in_kernel_rng=True)
+    kd = jax.random.key_data(key).astype(jnp.uint32).reshape(-1)[-2:]
+    zs = []
+    for i, (p, got) in enumerate(zip(jax.tree.leaves(params),
+                                     jax.tree.leaves(newp))):
+        o, n = view.offsets[i], view.sizes[i]
+        z = _tf_stream(kd + jnp.uint32(i), n + (-n) % TILE)[:n]
+        zs.append(np.asarray(z))
+        expect = noisy_sgd_update(p.reshape(-1), acc[o:o + n], z,
+                                  1.3, 16.0, 0.05)
+        np.testing.assert_array_equal(np.asarray(got).reshape(-1),
+                                      np.asarray(expect))
+    assert not np.array_equal(zs[0][:33], zs[1])
+
+
 def test_bits_to_normal_is_standard_normal():
     """The Box–Muller transform behind the in-kernel TPU noise path (the
     kernel itself needs pltpu.prng_*, which has no interpret lowering):
