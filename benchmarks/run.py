@@ -56,6 +56,10 @@ def main(argv=None) -> None:
                          "bench_breakdown + bench_serving (reduced)")
     ap.add_argument("--only", default=None,
                     help="run a single bench by name (e.g. bench_step)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="benches that support it run an instrumented pass "
+                         "and assert the observability overhead budget "
+                         "(bench_serving: sampled-vs-off elapsed <= 1.05x)")
     args = ap.parse_args(argv)
 
     all_mods, smoke_mods = _modules()
@@ -71,11 +75,14 @@ def main(argv=None) -> None:
     ok = True
     for mod in mods:
         try:
-            # benches with a smoke mode shrink their workload under --smoke
-            if args.smoke and "smoke" in inspect.signature(mod.main).parameters:
-                mod.main(smoke=True)
-            else:
-                mod.main()
+            # benches with a smoke/metrics mode take the flag as a kwarg
+            params = inspect.signature(mod.main).parameters
+            kwargs = {}
+            if args.smoke and "smoke" in params:
+                kwargs["smoke"] = True
+            if args.metrics and "metrics" in params:
+                kwargs["metrics"] = True
+            mod.main(**kwargs)
         except Exception:
             ok = False
             traceback.print_exc()

@@ -19,9 +19,17 @@ undermine DP before a jaxpr ever exists:
         ``lower_train``; decode/prefill likewise): mismatched
         ``donate_argnums`` makes the verified/benchmarked memory behaviour
         differ from what sessions actually run.
+  L005  metrics taps inside the DP boundary (``core/``, ``kernels/``)
+        recording unreleased values.  Telemetry must never become a
+        per-example side channel: a ``gauge``/``observe``/``inc``/``event``
+        call on an obs registry may only record literals or values that
+        pass through an aggregating/coercing call (``float``, ``sum``,
+        ``mean``, ``max`` ... — ``float()`` of a per-example array throws
+        at runtime, so the coercion itself enforces scalar-ness).  Known
+        released values are annotated ``# lint: dp-released``.
 
-``lint_paths`` is pure AST for L001/L002 (no imports of the linted code);
-L003 imports the two registries and compares them; L004 parses
+``lint_paths`` is pure AST for L001/L002/L005 (no imports of the linted
+code); L003 imports the two registries and compares them; L004 parses
 ``launch/executor.py``.  The CLI front-end lives in
 ``python -m repro.analysis lint``.
 """
@@ -33,12 +41,33 @@ import os
 from typing import Iterable, List, Optional, Sequence, Tuple
 
 ALLOW_CONST_KEY = "lint: allow-const-key"
+DP_RELEASED = "lint: dp-released"
 
 # np.random attributes that use the legacy global/stateful host RNG
 _NP_LEGACY = {
     "RandomState", "seed", "rand", "randn", "randint", "random",
     "random_sample", "choice", "permutation", "shuffle", "uniform", "normal",
 }
+
+# -- L005: metrics taps inside the DP boundary ------------------------------
+
+# a "tap" is a call to one of these methods on an obs-looking receiver
+_TAP_METHODS = {"gauge", "observe", "inc", "event"}
+# receiver (dotted head) must contain one of these tokens — so jax's
+# ``x.at[i].set(...)`` or a dict's ``d.get`` never match
+_OBS_TOKENS = ("obs", "metrics", "registry", "telemetry")
+# a recorded value is considered released when it flows through one of
+# these aggregating / scalar-coercing calls (last component of the dotted
+# callee).  float()/int() are principled, not a loophole: coercing a
+# per-example ARRAY to a python scalar raises at runtime, so anything that
+# survives is batch-aggregated by construction.
+_AGGREGATORS = {
+    "float", "int", "bool", "len", "round", "item",
+    "sum", "mean", "max", "min", "median", "quantile", "percentile",
+    "norm", "dp_mark", "mark", "privacy_spent",
+}
+# DP boundary: any path component in these dirs is clipping/noise territory
+_BOUNDARY_PARTS = {"core", "kernels"}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -114,6 +143,57 @@ def _check_host_rng(path: str, tree: ast.AST,
                         "stdlib `random` imported: host RNG invisible to "
                         "the key analysis; use np.random.default_rng or "
                         "jax.random"))
+    return out
+
+
+def _in_dp_boundary(path: str) -> bool:
+    parts = os.path.normpath(path).split(os.sep)
+    return any(p in _BOUNDARY_PARTS for p in parts)
+
+
+def _value_released(expr: ast.AST) -> bool:
+    """Is the recorded value provably released?  Literals are; so is any
+    expression that flows through an aggregating/coercing call."""
+    if isinstance(expr, (ast.Constant, ast.JoinedStr)):
+        return True
+    for node in ast.walk(expr):
+        if isinstance(node, ast.Call):
+            if _dotted(node.func).rpartition(".")[2] in _AGGREGATORS:
+                return True
+    return False
+
+
+def _check_obs_taps(path: str, tree: ast.AST,
+                    lines: Sequence[str]) -> List[Finding]:
+    """L005: inside the DP boundary, every metrics tap records only
+    released / batch-aggregated values (see module docstring)."""
+    if not _in_dp_boundary(path):
+        return []
+    out = []
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr in _TAP_METHODS):
+            continue
+        head = _dotted(node.func.value).lower()
+        if not head or not any(t in head for t in _OBS_TOKENS):
+            continue
+        if _line_allows(lines, node.lineno, DP_RELEASED):
+            continue
+        # args[0] is the metric name (a label, not data); every later
+        # positional and every kwarg is recorded data
+        values = list(node.args[1:]) + [kw.value for kw in node.keywords]
+        for v in values:
+            if _value_released(v):
+                continue
+            out.append(Finding(
+                "L005", path, v.lineno,
+                f"metrics tap {_dotted(node.func)}(...) inside the DP "
+                f"boundary records a value that is neither a literal nor "
+                f"aggregated/coerced ({', '.join(sorted(_AGGREGATORS))}): "
+                f"telemetry must not leak per-example state; wrap the "
+                f"value or annotate a known release with "
+                f"`# {DP_RELEASED}`"))
     return out
 
 
@@ -235,6 +315,7 @@ def lint_paths(paths: Iterable[str], *, semantic: bool = True
         lines = src.splitlines()
         findings.extend(_check_const_keys(path, tree, lines))
         findings.extend(_check_host_rng(path, tree, lines))
+        findings.extend(_check_obs_taps(path, tree, lines))
     if semantic:
         findings.extend(check_engine_costmodel())
         findings.extend(check_donation_consistency())

@@ -151,6 +151,21 @@ def build_accumulate_fn(loss_fn: Callable, cfg: DPConfig, *,
             f"accumulator; the stream_tile IS the in-step microbatch, so "
             f"cfg.microbatches must stay 1 (got {cfg.microbatches})")
 
+    def _dp_metrics(aux, mask):
+        """Batch-AGGREGATED step telemetry from the engine aux.  Every value
+        reduces over the example axis before it leaves the step (masked mean
+        / max / fraction), so the metrics outputs carry no per-example dim —
+        the invariant the taint verifier's per-example-output rule and the
+        L005 lint both enforce on observability taps."""
+        norms = aux["per_example_norms"]
+        seen = jnp.maximum(mask.sum(), 1)
+        return {
+            "mean_grad_norm": (norms * mask).sum() / seen,
+            "max_grad_norm": (norms * mask).max(),
+            # fraction of real (masked-in) examples whose grad was clipped
+            "clip_fraction": ((norms > cfg.clip_norm) * mask).sum() / seen,
+        }
+
     def accumulate(state: TrainState, batch, mask):
         # seen handling is normalised to f32 HERE, once: integer Poisson
         # masks otherwise accumulate an int `seen` that the nonprivate
@@ -168,16 +183,13 @@ def build_accumulate_fn(loss_fn: Callable, cfg: DPConfig, *,
                           view=view, tile=cfg.stream_tile)
             if constraints is not None and constraints.grad_flat is not None:
                 acc = constraints.grad_flat(acc)
-            metrics = {"mean_grad_norm":
-                       (aux["per_example_norms"] * mask).sum()
-                       / jnp.maximum(mask.sum(), 1)}
+            metrics = _dp_metrics(aux, mask)
             return state._replace(grad_acc=acc,
                                   seen=state.seen + mask.sum()), metrics
         if cfg.private:
             g, aux = _microbatched_clipped_sum(loss_fn, state.params, batch,
                                                mask, cfg, constraints)
-            metrics = {"mean_grad_norm":
-                       (aux["per_example_norms"] * mask).sum() / jnp.maximum(mask.sum(), 1)}
+            metrics = _dp_metrics(aux, mask)
         else:
             # accumulate the masked SUM of per-example losses directly: the
             # update divides once by the total seen count, so every example

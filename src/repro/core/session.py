@@ -38,7 +38,9 @@ Quickstart::
 from __future__ import annotations
 
 import dataclasses
+import sys
 import time
+import warnings
 from typing import Callable, Optional
 
 import jax
@@ -47,6 +49,7 @@ import numpy as np
 
 from ..data import BatchMemoryManager, PoissonSampler
 from ..launch.executor import LaunchConfig, build_executor
+from ..obs import as_registry
 from ..privacy import PrivacyAccountant, calibrate_sigma
 from ..privacy import rdp as rdp_mod
 from ..optim import (Optimizer, adamw, constant, cosine,
@@ -116,13 +119,18 @@ class PrivacySession:
                  constraints: Optional[ShardingConstraints] = None,
                  accountant: Optional[PrivacyAccountant] = None,
                  loss_fn: Optional[Callable] = None,
-                 launch: Optional[LaunchConfig] = None):
+                 launch: Optional[LaunchConfig] = None,
+                 obs=None):
         dp.validate()                       # fail fast, listing the registry
         self.model = model
         self.model_cfg = model_cfg
         self.dp = dp
         self.train_cfg = train
         self.launch = launch if launch is not None else LaunchConfig()
+        # telemetry: None/off is a strict no-op registry (zero added sync
+        # points on the step path); ObsConfig/MetricsRegistry turn on the
+        # per-phase spans + DP gauges fit() and the serve engine emit
+        self.obs = as_registry(obs)
         self.executor = build_executor(self.launch)
         self.constraints = constraints if constraints is not None \
             else self.executor.constraints(dp.engine)
@@ -150,7 +158,8 @@ class PrivacySession:
                     train_cfg: Optional[TrainConfig] = None, *,
                     constraints: Optional[ShardingConstraints] = None,
                     optimizer: Optional[Optimizer] = None,
-                    launch: Optional[LaunchConfig] = None) -> "PrivacySession":
+                    launch: Optional[LaunchConfig] = None,
+                    obs=None) -> "PrivacySession":
         """Build a session from (arch name | ArchConfig, DPConfig, TrainConfig).
 
         When ``train_cfg.target_eps`` is set and the engine is private, σ is
@@ -183,7 +192,7 @@ class PrivacySession:
                                      expected_batch_size=L)
         return cls(model, cfg, dp_cfg, train_cfg,
                    optimizer=optimizer, constraints=constraints,
-                   launch=launch)
+                   launch=launch, obs=obs)
 
     @classmethod
     def restore(cls, path: str, model_cfg, dp_cfg: Optional[DPConfig] = None,
@@ -282,6 +291,37 @@ class PrivacySession:
         if self.dp.private:
             self.accountant.step(self.train_cfg.q, self.dp.noise_multiplier)
 
+    def _jit_entries(self) -> int:
+        """Total compiled-program cache entries across the session's jitted
+        step functions — the retrace counter.  Anything above one entry per
+        cached function means a shape/dtype-triggered retrace (the guard
+        tests/test_analysis.py pins at exactly one)."""
+        total = 0
+        for fn in self._jit_cache.values():
+            size = getattr(fn, "_cache_size", None)
+            if callable(size):
+                total += int(size())
+        return total
+
+    def _record_step_telemetry(self, acc_metrics, step: int,
+                               examples: int) -> None:
+        """Per-step observability taps.  Host-side values (ε from the
+        accountant, jit cache sizes, counters) are recorded on every tick;
+        DEVICE scalars — the batch-aggregated clip/norm aux the accumulate
+        step already releases — are read only on sampled ticks, so the
+        host-device syncs stay at the sampled span boundaries."""
+        obs = self.obs
+        obs.inc("fit/steps")
+        obs.inc("fit/examples", int(examples))
+        obs.gauge("dp/eps", float(self.privacy_spent()[0]))
+        obs.gauge("train/jit_entries", float(self._jit_entries()))
+        if obs.sampled_now and acc_metrics:
+            for key in ("clip_fraction", "mean_grad_norm", "max_grad_norm"):
+                if key in acc_metrics:
+                    # float() of a batch-aggregated scalar: the one
+                    # device->host read, at the sampled boundary only
+                    obs.gauge(f"dp/{key}", float(acc_metrics[key]))
+
     def evaluate(self, batch, mask=None) -> float:
         if mask is None:
             b0 = jax.tree.leaves(batch)[0]
@@ -330,6 +370,7 @@ class PrivacySession:
                                  place=self.executor.place)
 
         history = []
+        obs = self.obs
         t0 = time.time()
         examples = 0
         # one sync BEFORE the loop (restored sessions start at step > 0);
@@ -338,24 +379,52 @@ class PrivacySession:
         last_async_at = done = 0
         try:
             for step_i, indices in enumerate(sampler):
-                for pb in bmm.batches(indices):
-                    # pb is already placed by the memory manager's executor
-                    # hook; call the jitted fn directly rather than
-                    # accumulate(), which would place a second time
-                    self.state, _ = self._jitted("accumulate")(self.state,
-                                                               pb.data,
-                                                               pb.mask)
+                obs.tick()
+                with obs.span("fit/accumulate") as sp:
+                    acc_metrics = None
+                    for pb in bmm.batches(indices):
+                        # pb is already placed by the memory manager's
+                        # executor hook; call the jitted fn directly rather
+                        # than accumulate(), which would place a second time
+                        self.state, acc_metrics = self._jitted("accumulate")(
+                            self.state, pb.data, pb.mask)
+                    sp.watch(self.state.grad_acc)
                 examples += len(indices)  # == sum of masks, no d2h sync
-                self.update()
+                with obs.span("fit/update") as sp:
+                    self.state = self._jitted("update")(self.state)
+                    sp.watch(self.state.params)
+                with obs.span("fit/account"):
+                    self._account()      # host-side RDP composition
+                if obs.enabled:
+                    self._record_step_telemetry(acc_metrics, step_i + 1,
+                                                len(indices))
                 if ckpt and ckpt_every and (step_i + 1) % ckpt_every == 0:
                     # optimizer steps taken == step_i + 1 on this loop, known
-                    # host-side — no device sync on the step path
+                    # host-side — no device sync on the step path.  The call
+                    # blocks only while a PREVIOUS write is still in flight;
+                    # that stall is the step loop's hidden cost, so it is
+                    # always timed (host clock, no device sync) and warned
+                    # about when it exceeds one mean step time.
+                    t0c = time.perf_counter()
                     self.checkpoint_async(ckpt, step=init_step + step_i + 1)
+                    wait_s = time.perf_counter() - t0c
+                    obs.observe("fit/ckpt_wait", float(wait_s))
+                    mean_step = (time.time() - t0) / (step_i + 1)
+                    if wait_s > mean_step:
+                        obs.inc("fit/ckpt_wait_exceeded")
+                        warnings.warn(
+                            f"async checkpoint wait ({wait_s:.3f}s) exceeded "
+                            f"one mean step time ({mean_step:.3f}s): the "
+                            f"writer cannot keep up with ckpt_every="
+                            f"{ckpt_every} — raise the interval or use "
+                            f"faster storage", RuntimeWarning, stacklevel=2)
                     last_async_at = step_i + 1
                 if (step_i + 1) % tc.log_every == 0:
                     idx_eval = np.arange(min(tc.physical_batch, tc.n_data))
                     eb = dataset.fetch(idx_eval)
-                    l = self.evaluate(eb, np.ones(len(idx_eval), np.float32))
+                    with obs.span("fit/eval"):
+                        l = self.evaluate(eb,
+                                          np.ones(len(idx_eval), np.float32))
                     eps = self.privacy_spent()[0]
                     rec = {"step": step_i + 1, "loss": round(l, 4),
                            "eps": round(eps, 4),
@@ -363,6 +432,9 @@ class PrivacySession:
                            "throughput": round(examples / (time.time() - t0),
                                                1)}
                     history.append(rec)
+                if (obs.snapshot_every
+                        and (step_i + 1) % obs.snapshot_every == 0):
+                    print(obs.snapshot(), file=sys.stderr)
                 done = step_i + 1
         except BaseException:
             # the loop died mid-flight: make the last enqueued snapshot
@@ -461,7 +533,8 @@ class PrivacySession:
 
     def serve_engine(self, *, max_slots: int = 4, max_len: int = 64,
                      extras: Optional[dict] = None, prefill_chunk: int = 1,
-                     token_budget: Optional[int] = None, prefix_sharing: bool = True):
+                     token_budget: Optional[int] = None,
+                     prefix_sharing: bool = True, obs=None):
         """A :class:`~repro.serve.ServeEngine` over the session's CURRENT
         parameters and executor, cached per (max_slots, max_len,
         prefill_chunk, token_budget, prefix_sharing) so repeated
@@ -477,10 +550,12 @@ class PrivacySession:
             engine = ServeEngine.from_session(
                 self, max_slots=max_slots, max_len=max_len, extras=extras,
                 prefill_chunk=prefill_chunk, token_budget=token_budget,
-                prefix_sharing=prefix_sharing)
+                prefix_sharing=prefix_sharing, obs=obs)
             self._jit_cache[key] = engine
         else:
             engine.refresh(self.state.params, extras=extras)
+            if obs is not None:
+                engine.obs = as_registry(obs)
         return engine
 
     def generate(self, *, batch: int = 4, prompt_len: int = 8,

@@ -23,11 +23,14 @@ from __future__ import annotations
 
 import argparse
 import json
+import sys
+import warnings
 
 import numpy as np
 
 from ..core import DPConfig
 from ..core.session import PrivacySession, TrainConfig
+from ..obs import add_cli_args, config_from_args, start_profile, stop_profile
 from .executor import LaunchConfig
 
 
@@ -58,17 +61,17 @@ def generate(arch: str, *, batch: int = 4, prompt_len: int = 8,
 
 def synthetic_trace(n: int, vocab: int, max_len: int, seed: int = 0,
                     temperature: float = 0.0, top_k: int = 0,
-                    profile: str = "mixed"):
+                    trace_shape: str = "mixed"):
     """A mixed-length request trace — the workload continuous batching
-    exists for.  ``profile="mixed"`` draws uniform prompt/output lengths;
-    ``"bimodal"`` is mostly short chat turns with every 4th request a long
-    completion (the distribution static batching pads worst — the
-    benchmark's trace)."""
+    exists for.  ``trace_shape="mixed"`` draws uniform prompt/output
+    lengths; ``"bimodal"`` is mostly short chat turns with every 4th
+    request a long completion (the distribution static batching pads worst
+    — the benchmark's trace)."""
     from ..serve import Request, SamplingParams
     rng = np.random.default_rng(seed)
     reqs = []
     for i in range(n):
-        if profile == "bimodal":
+        if trace_shape == "bimodal":
             pl = int(rng.integers(2, 9))
             nt = (int(rng.integers(3 * max_len // 4, max_len - pl))
                   if i % 4 == 3 else int(rng.integers(2, 9)))
@@ -89,7 +92,7 @@ def replay(arch: str, *, requests: int, max_slots: int = 8,
            top_k: int = 0, ckpt: str | None = None,
            mesh: str | None = None, prefill_chunk: int = 1,
            token_budget: int | None = None, prefix_sharing: bool = True,
-           profile: str = "mixed") -> dict:
+           trace_shape: str = "mixed", obs=None) -> dict:
     """Replay a synthetic trace through the continuous-batching scheduler;
     reports throughput, per-request latency AND time-to-first-token
     percentiles (the metric chunked prefill / prefix sharing improve), plus
@@ -98,10 +101,10 @@ def replay(arch: str, *, requests: int, max_slots: int = 8,
     engine = session.serve_engine(max_slots=max_slots, max_len=max_len,
                                   prefill_chunk=prefill_chunk,
                                   token_budget=token_budget,
-                                  prefix_sharing=prefix_sharing)
+                                  prefix_sharing=prefix_sharing, obs=obs)
     reqs = synthetic_trace(requests, session.model_cfg.vocab, max_len,
                            seed=seed, temperature=temperature, top_k=top_k,
-                           profile=profile)
+                           trace_shape=trace_shape)
     from ..serve import latency_percentiles
     out = engine.run(reqs)
     out["latency_p50_s"], out["latency_p95_s"] = latency_percentiles(
@@ -143,31 +146,55 @@ def main():
     ap.add_argument("--no-prefix-sharing", action="store_true",
                     help="disable prompt prefix-cache sharing across "
                          "requests (pure-KV archs share by default)")
-    ap.add_argument("--profile", default="mixed",
+    ap.add_argument("--trace-shape", default=None,
                     choices=["mixed", "bimodal"],
-                    help="synthetic trace shape for --requests mode")
+                    help="synthetic trace shape for --requests mode "
+                         "(default: mixed)")
+    # pre-PR-8 spelling of --trace-shape; --profile now belongs to the
+    # profiler family (--profile-dir) like everywhere else in the repo
+    ap.add_argument("--profile", default=None, choices=["mixed", "bimodal"],
+                    help=argparse.SUPPRESS)
     ap.add_argument("--ckpt", help="serve params restored from a DP-trained "
                                    "checkpoint instead of a fresh init")
     ap.add_argument("--mesh", default=None,
                     help="LaunchConfig mesh preset (e.g. test, production); "
                          "default: local")
+    add_cli_args(ap)
     args = ap.parse_args()
-    if args.requests:
-        out = replay(args.arch, requests=args.requests, max_slots=args.batch,
-                     max_len=args.max_len, seed=args.seed,
-                     temperature=args.temperature, top_k=args.top_k,
-                     ckpt=args.ckpt, mesh=args.mesh,
-                     prefill_chunk=args.prefill_chunk,
-                     token_budget=args.token_budget,
-                     prefix_sharing=not args.no_prefix_sharing,
-                     profile=args.profile)
-    else:
-        out = generate(args.arch, batch=args.batch,
-                       prompt_len=args.prompt_len, new_tokens=args.tokens,
-                       max_len=args.max_len, seed=args.seed,
-                       greedy=args.temperature == 0.0,
-                       temperature=args.temperature, top_k=args.top_k,
-                       ckpt=args.ckpt, mesh=args.mesh)
+    trace_shape = args.trace_shape
+    if args.profile is not None:
+        warnings.warn("--profile is deprecated (reserved for profiler "
+                      "flags); use --trace-shape", DeprecationWarning,
+                      stacklevel=2)
+        if trace_shape is None:
+            trace_shape = args.profile
+    trace_shape = trace_shape or "mixed"
+    obs = config_from_args(args).build()
+    if args.profile_dir:
+        start_profile(args.profile_dir)
+    try:
+        if args.requests:
+            out = replay(args.arch, requests=args.requests,
+                         max_slots=args.batch, max_len=args.max_len,
+                         seed=args.seed, temperature=args.temperature,
+                         top_k=args.top_k, ckpt=args.ckpt, mesh=args.mesh,
+                         prefill_chunk=args.prefill_chunk,
+                         token_budget=args.token_budget,
+                         prefix_sharing=not args.no_prefix_sharing,
+                         trace_shape=trace_shape, obs=obs)
+        else:
+            out = generate(args.arch, batch=args.batch,
+                           prompt_len=args.prompt_len, new_tokens=args.tokens,
+                           max_len=args.max_len, seed=args.seed,
+                           greedy=args.temperature == 0.0,
+                           temperature=args.temperature, top_k=args.top_k,
+                           ckpt=args.ckpt, mesh=args.mesh)
+    finally:
+        if args.profile_dir:
+            stop_profile()
+        if obs.enabled:
+            print(obs.snapshot(), file=sys.stderr)
+        obs.close()
     print(json.dumps(out))
 
 

@@ -13,11 +13,13 @@ from __future__ import annotations
 
 import argparse
 import json
+import sys
 from typing import Optional
 
 from ..core import DPConfig, clipping
 from ..core.session import PrivacySession, TrainConfig
 from ..data.synthetic import dataset_for_config
+from ..obs import add_cli_args, config_from_args, start_profile, stop_profile
 from .executor import LaunchConfig
 
 
@@ -33,7 +35,8 @@ def make_session(arch: str, *, smoke: bool = True, steps: int = 4,
                  clip_norm: float = 1.0, lr: float = 1e-3,
                  optimizer: str = "sgd", seed: int = 0,
                  microbatches: int = 1, log_every: int = 1,
-                 mesh: Optional[str] = None, layout: str = "dp") -> PrivacySession:
+                 mesh: Optional[str] = None, layout: str = "dp",
+                 obs=None) -> PrivacySession:
     """The one place the training CLI wires configs into a PrivacySession.
 
     ``mesh`` (a LaunchConfig preset: "test", "production", ...) runs the same
@@ -47,7 +50,7 @@ def make_session(arch: str, *, smoke: bool = True, steps: int = 4,
                      delta=delta, lr=lr, optimizer=optimizer, smoke=smoke,
                      seed=seed, log_every=log_every)
     launch = LaunchConfig(mesh=mesh, layout=layout)
-    return PrivacySession.from_config(arch, dp, tc, launch=launch)
+    return PrivacySession.from_config(arch, dp, tc, launch=launch, obs=obs)
 
 
 def train(arch: str, *, smoke: bool = True, steps: int = 4, n_data: int = 512,
@@ -56,16 +59,26 @@ def train(arch: str, *, smoke: bool = True, steps: int = 4, n_data: int = 512,
           delta: Optional[float] = None, clip_norm: float = 1.0, lr: float = 1e-3,
           optimizer: str = "sgd", seed: int = 0, ckpt: Optional[str] = None,
           log_every: int = 1, describe: bool = False,
-          mesh: Optional[str] = None, layout: str = "dp") -> dict:
+          mesh: Optional[str] = None, layout: str = "dp", obs=None,
+          profile_dir: Optional[str] = None) -> dict:
     session = make_session(arch, smoke=smoke, steps=steps, n_data=n_data,
                            seq_len=seq_len, physical=physical, q=q,
                            engine=engine, target_eps=target_eps, delta=delta,
                            clip_norm=clip_norm, lr=lr, optimizer=optimizer,
                            seed=seed, log_every=log_every, mesh=mesh,
-                           layout=layout)
+                           layout=layout, obs=obs)
     if describe:
         print(json.dumps(session.describe()))
-    out = session.fit(ckpt=ckpt)
+    if profile_dir:
+        start_profile(profile_dir)
+    try:
+        out = session.fit(ckpt=ckpt)
+    finally:
+        if profile_dir:
+            stop_profile()
+        if session.obs.enabled:
+            print(session.obs.snapshot(), file=sys.stderr)
+        session.obs.close()
     for rec in out["history"]:
         print(json.dumps(rec))
     return out
@@ -95,6 +108,7 @@ def main():
     ap.add_argument("--describe", action="store_true",
                     help="print the session report before training")
     ap.add_argument("--ckpt")
+    add_cli_args(ap)
     args = ap.parse_args()
     out = train(args.arch, smoke=args.smoke, steps=args.steps,
                 n_data=args.n_data, seq_len=args.seq_len,
@@ -102,7 +116,8 @@ def main():
                 target_eps=args.target_eps, clip_norm=args.clip_norm,
                 lr=args.lr, optimizer=args.optimizer, seed=args.seed,
                 ckpt=args.ckpt, describe=args.describe, mesh=args.mesh,
-                layout=args.layout)
+                layout=args.layout, obs=config_from_args(args),
+                profile_dir=args.profile_dir)
     print(json.dumps({"final": out["history"][-1] if out["history"] else {},
                       "sigma": round(out["sigma"], 4),
                       "final_eps": round(out["final_eps"], 4)}))

@@ -26,6 +26,7 @@ from typing import Dict, Iterable, Optional
 import jax
 import jax.numpy as jnp
 
+from ..obs import as_registry
 from .cache_pool import CachePool
 from .request import Request, RequestState, SamplingParams
 from .sampling import sample_tokens
@@ -56,6 +57,13 @@ def ttft_percentiles(results) -> tuple:
     return percentiles([r.get("ttft_s") for r in results])
 
 
+# the scheduler's per-iteration phase spans; engine.run's phase_breakdown
+# reports exactly these (the registry also holds request-level histograms
+# under serve/ — queue/ttft/tpot — which are not phases)
+_PHASE_SPANS = frozenset({"serve/admit", "serve/prefill", "serve/decode",
+                          "serve/sample", "serve/host_sync"})
+
+
 class ServeEngine:
     """Continuous-batching serving engine over a model's decode primitives."""
 
@@ -65,7 +73,7 @@ class ServeEngine:
                  engine_name: str = "nonprivate",
                  admission: str = "continuous",
                  prefill_chunk: int = 1, token_budget: Optional[int] = None,
-                 prefix_sharing: bool = True):
+                 prefix_sharing: bool = True, obs=None):
         if not hasattr(model, "decode_step"):
             raise ValueError(f"{getattr(model_cfg, 'name', model)} has no "
                              f"decode path (encoder-only)")
@@ -103,6 +111,10 @@ class ServeEngine:
                              "minimum 1 token per slot per iteration)")
         self._engine_name = engine_name
         self._cache_dtype = cache_dtype
+        # telemetry: the scheduler reads this per iteration (admit/prefill/
+        # decode/sample/host-sync spans + request lifecycle events); off by
+        # default so the serving hot loop carries no added sync points
+        self.obs = as_registry(obs)
         # decode shapes never sequence-shard activations (T=1); installed
         # before tracing AND before every run, since the hooks are
         # process-wide and a training step may reinstall its own
@@ -135,15 +147,19 @@ class ServeEngine:
     def from_session(cls, session, *, max_slots: int = 4, max_len: int = 64,
                      cache_dtype=jnp.float32, extras: Optional[Dict] = None,
                      prefill_chunk: int = 1, token_budget: Optional[int] = None,
-                     prefix_sharing: bool = True) -> "ServeEngine":
+                     prefix_sharing: bool = True, obs=None) -> "ServeEngine":
         """An engine serving the session's current parameters through the
-        session's executor (local or mesh — same LaunchConfig semantics)."""
+        session's executor (local or mesh — same LaunchConfig semantics).
+        The session's metrics registry is inherited unless ``obs`` overrides
+        it, so train + serve telemetry land in one event log."""
         return cls(session.model, session.model_cfg, session.state.params,
                    executor=session.executor, max_slots=max_slots,
                    max_len=max_len, cache_dtype=cache_dtype, extras=extras,
                    engine_name=session.dp.engine,
                    prefill_chunk=prefill_chunk, token_budget=token_budget,
-                   prefix_sharing=prefix_sharing)
+                   prefix_sharing=prefix_sharing,
+                   obs=obs if obs is not None else getattr(session, "obs",
+                                                           None))
 
     def _configure(self) -> None:
         self.executor.configure_model(self.model_cfg, "decode", self.max_len,
@@ -200,6 +216,7 @@ class ServeEngine:
         it0, ast0 = sch.iterations, sch.active_slot_steps
         hits0, shared0 = sch.prefix_hits, sch.prefix_tokens_shared
         prompt0 = sch.prompt_tokens_admitted
+        phases0 = self.obs.totals("serve/") if self.obs.enabled else {}
         t0 = time.time()
         finished = sch.run()
         dt = max(time.time() - t0, 1e-9)
@@ -211,7 +228,7 @@ class ServeEngine:
         gen_tokens = sum(len(s.generated) for s in finished)
         ttft50, ttft95 = ttft_percentiles(results)
         sch.finished = []                   # drained; next run starts fresh
-        return {
+        out = {
             "results": results,
             "iterations": iters,
             "elapsed_s": round(dt, 4),
@@ -226,3 +243,24 @@ class ServeEngine:
             "prefix_hit_rate": round(shared / max(prompt_tokens, 1), 3),
             "launch": self.executor.describe(),
         }
+        if self.obs.enabled:
+            # per-phase wall time from THIS run's spans (delta against the
+            # registry's running totals, so back-to-back runs don't bleed).
+            # calls counts sampled iterations only in "sampled" mode — the
+            # mean is exact, the totals are a sample.
+            pb = {}
+            for name, (calls, total_s) in self.obs.totals("serve/").items():
+                if name not in _PHASE_SPANS:
+                    continue        # request histograms (queue/ttft/tpot)
+                c0, t0_s = phases0.get(name, (0, 0.0))
+                dc, dt_s = calls - c0, total_s - t0_s
+                if dc <= 0:
+                    continue
+                pb[name[len("serve/"):]] = {
+                    "calls": dc,
+                    "total_ms": round(dt_s * 1e3, 3),
+                    "mean_ms": round(dt_s * 1e3 / dc, 4),
+                }
+            if pb:
+                out["phase_breakdown"] = pb
+        return out

@@ -87,8 +87,10 @@ class RequestState:
         self.pos = 0                       # tokens consumed == next write pos
         self.finish_reason: Optional[str] = None
         self.submitted_at = time.time()
+        self.admitted_at: Optional[float] = None   # claimed a pool slot
         self.first_token_at: Optional[float] = None
         self.finished_at: Optional[float] = None
+        self.prefix_tokens = 0             # prompt tokens served via sharing
 
     # -- scheduling helpers -------------------------------------------------
 
@@ -126,9 +128,29 @@ class RequestState:
             return None
         return self.first_token_at - self.submitted_at
 
+    def queue_time(self) -> Optional[float]:
+        """Submit -> admission (claimed a pool slot): pure scheduling wait,
+        the component of TTFT that admission policy and slot pressure own."""
+        if self.admitted_at is None:
+            return None
+        return self.admitted_at - self.submitted_at
+
+    def tpot(self) -> Optional[float]:
+        """Time per output token over the DECODE phase (first sampled token
+        -> finish, averaged over the remaining tokens) — steady-state decode
+        speed, the number TTFT improvements must not regress."""
+        if (self.finished_at is None or self.first_token_at is None
+                or len(self.generated) < 2):
+            return None
+        return ((self.finished_at - self.first_token_at)
+                / (len(self.generated) - 1))
+
     def to_dict(self) -> dict:
         return {"rid": self.rid, "prompt_len": self.prompt_len,
                 "generated": list(self.generated),
                 "finish_reason": self.finish_reason,
                 "latency_s": self.latency(),
-                "ttft_s": self.ttft()}
+                "ttft_s": self.ttft(),
+                "queue_s": self.queue_time(),
+                "tpot_s": self.tpot(),
+                "prefix_tokens": self.prefix_tokens}

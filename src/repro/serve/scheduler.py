@@ -39,6 +39,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from ..obs import NULL_REGISTRY
 from .request import (DECODE, FINISH_LENGTH, FINISH_MAX_LEN, PREFILL,
                       Request, RequestState)
 
@@ -70,6 +71,13 @@ class Scheduler:
         self.prefix_tokens_shared = 0   # prompt tokens skipped via sharing
         self.prompt_tokens_admitted = 0
         self._next_rid = 0
+
+    @property
+    def obs(self):
+        """The engine's metrics registry (re-read each use, so a registry
+        swapped onto the engine — e.g. by the overhead bench — takes effect
+        without rebuilding the scheduler)."""
+        return getattr(self.engine, "obs", NULL_REGISTRY)
 
     # -- submission ---------------------------------------------------------
 
@@ -105,17 +113,20 @@ class Scheduler:
             for slot, st in self.active.items():
                 pool.positions[slot] = st.pos
         newly: List[int] = []
+        now = time.time()
         for _ in range(len(self.queue)):
             if not pool.n_free:
                 break
             state = self.queue.popleft()
             slot = pool.insert()
             state.slot = slot
+            state.admitted_at = now
             self.prompt_tokens_admitted += state.prompt_len
             depth = pool.share_prefix(slot, state.prompt) if share else 0
             if depth:
                 self.prefix_hits += 1
                 self.prefix_tokens_shared += depth
+                state.prefix_tokens = depth
             state.pos = depth
             state.status = PREFILL if state.pos < state.prompt_len else DECODE
             self.active[slot] = state
@@ -130,7 +141,10 @@ class Scheduler:
 
     def step(self) -> bool:
         """Run one scheduler iteration; False when there is nothing to do."""
-        self._admit()
+        obs = self.obs
+        obs.tick()
+        with obs.span("serve/admit"):
+            self._admit()
         if not self.active:
             return False
         pool = self.engine.pool
@@ -186,20 +200,32 @@ class Scheduler:
         pool.positions[:] = pos
 
         if use_chunk:
-            logits, pool.cache = self.engine.prefill_fn(
-                self.engine.params, pool.cache, tok, pos, n_tok)
+            with obs.span("serve/prefill") as sp:
+                logits, pool.cache = self.engine.prefill_fn(
+                    self.engine.params, pool.cache, tok, pos, n_tok)
+                sp.watch(logits)
         else:
-            logits, pool.cache = self.engine.decode_fn(
-                self.engine.params, pool.cache, tok, pos)
-        if temps.any():
-            next_tok = np.asarray(self.engine.sample_fn(
-                logits, last_pos, seeds, temps, topks))
-        else:
-            next_tok = np.asarray(self.engine.greedy_fn(logits))
+            with obs.span("serve/decode") as sp:
+                logits, pool.cache = self.engine.decode_fn(
+                    self.engine.params, pool.cache, tok, pos)
+                sp.watch(logits)
+        with obs.span("serve/sample") as sp:
+            if temps.any():
+                tok_dev = self.engine.sample_fn(logits, last_pos, seeds,
+                                                temps, topks)
+            else:
+                tok_dev = self.engine.greedy_fn(logits)
+            sp.watch(tok_dev)
+        # the one host<->device sync the iteration REQUIRES (the scheduler
+        # needs the sampled ids to build the next iteration's vectors)
+        with obs.span("serve/host_sync"):
+            next_tok = np.asarray(tok_dev)
 
         self.iterations += 1
         self.active_slot_steps += int((n_tok > 0).sum())
         self.tokens_consumed += int(n_tok.sum())
+        obs.inc("serve/iterations")
+        obs.inc("serve/tokens", int(n_tok.sum()))
 
         now = time.time()
         for slot, st in list(self.active.items()):
@@ -223,7 +249,29 @@ class Scheduler:
                 del self.active[slot]
                 pool.evict(slot)
                 self.finished.append(st)
+                self._record_request(st)
         return True
+
+    def _record_request(self, st: RequestState) -> None:
+        """Per-request lifecycle telemetry at retirement: queue wait, TTFT,
+        TPOT, prefix hit — all host timestamps, no device reads."""
+        obs = self.obs
+        if not obs.enabled:
+            return
+        obs.inc("serve/requests_finished")
+        if st.prefix_tokens:
+            obs.inc("serve/prefix_hits")
+        for name, val in (("serve/queue", st.queue_time()),
+                          ("serve/ttft", st.ttft()),
+                          ("serve/tpot", st.tpot())):
+            if val is not None:
+                obs.observe(name, float(val))
+        obs.event("request", rid=st.rid, prompt_len=st.prompt_len,
+                  generated=len(st.generated),
+                  finish_reason=st.finish_reason,
+                  queue_s=st.queue_time(), ttft_s=st.ttft(),
+                  tpot_s=st.tpot(), latency_s=st.latency(),
+                  prefix_tokens=st.prefix_tokens)
 
     # -- drain --------------------------------------------------------------
 
