@@ -27,6 +27,15 @@ undermine DP before a jaxpr ever exists:
         ``mean``, ``max`` ... — ``float()`` of a per-example array throws
         at runtime, so the coercion itself enforces scalar-ness).  Known
         released values are annotated ``# lint: dp-released``.
+  L006  sequential host RNG in a sampling stream (``data/``): a
+        ``default_rng`` / ``RandomState`` / ``PCG64`` / ``MT19937`` built
+        inside a yield-bearing function or an ``__iter__``/``at_step``
+        method makes draw k depend on draws 0..k-1, so a resumed run
+        replays draws the accountant already charged (the
+        sampler/accountant mismatch the resilience subsystem exists to
+        prevent).  Use :func:`repro.data.sampler.step_rng` — a Philox
+        generator keyed by ``(seed, step)`` — or annotate a genuinely
+        stream-order-free use with ``# lint: stream-rng-ok``.
 
 ``lint_paths`` is pure AST for L001/L002/L005 (no imports of the linted
 code); L003 imports the two registries and compares them; L004 parses
@@ -42,6 +51,7 @@ from typing import Iterable, List, Optional, Sequence, Tuple
 
 ALLOW_CONST_KEY = "lint: allow-const-key"
 DP_RELEASED = "lint: dp-released"
+STREAM_RNG_OK = "lint: stream-rng-ok"
 
 # np.random attributes that use the legacy global/stateful host RNG
 _NP_LEGACY = {
@@ -143,6 +153,52 @@ def _check_host_rng(path: str, tree: ast.AST,
                         "stdlib `random` imported: host RNG invisible to "
                         "the key analysis; use np.random.default_rng or "
                         "jax.random"))
+    return out
+
+
+# -- L006: sequential RNG in sampling streams --------------------------------
+
+# bit-generator / generator constructors whose draw k depends on draws
+# 0..k-1 once the object is reused across steps (counter-based Philox keyed
+# per (seed, step) is the sanctioned alternative — see data/sampler.step_rng)
+_SEQUENTIAL_RNG = {"default_rng", "RandomState", "PCG64", "MT19937"}
+# sampling territory: any path component in these dirs feeds the training
+# stream the accountant charges
+_SAMPLING_PARTS = {"data"}
+# methods that ARE the sampling stream even without a yield in their body
+_STREAM_METHODS = {"__iter__", "__next__", "at_step"}
+
+
+def _check_sampling_rng(path: str, tree: ast.AST,
+                        lines: Sequence[str]) -> List[Finding]:
+    """L006: sampling streams must use counter-based RNG (see docstring)."""
+    parts = os.path.normpath(path).split(os.sep)
+    if not any(p in _SAMPLING_PARTS for p in parts):
+        return []
+    out = []
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        has_yield = any(isinstance(n, (ast.Yield, ast.YieldFrom))
+                        for n in ast.walk(fn))
+        if not has_yield and fn.name not in _STREAM_METHODS:
+            continue
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            name = _dotted(node.func)
+            if name.rpartition(".")[2] not in _SEQUENTIAL_RNG:
+                continue
+            if _line_allows(lines, node.lineno, STREAM_RNG_OK):
+                continue
+            out.append(Finding(
+                "L006", path, node.lineno,
+                f"sequential host RNG {name}(...) in sampling stream "
+                f"{fn.name!r}: draw k would depend on draws 0..k-1, so a "
+                f"resumed run replays draws the privacy accountant already "
+                f"charged; key a counter-based generator per step "
+                f"(data/sampler.step_rng) or annotate a stream-order-free "
+                f"use with `# {STREAM_RNG_OK}`"))
     return out
 
 
@@ -316,6 +372,7 @@ def lint_paths(paths: Iterable[str], *, semantic: bool = True
         findings.extend(_check_const_keys(path, tree, lines))
         findings.extend(_check_host_rng(path, tree, lines))
         findings.extend(_check_obs_taps(path, tree, lines))
+        findings.extend(_check_sampling_rng(path, tree, lines))
     if semantic:
         findings.extend(check_engine_costmodel())
         findings.extend(check_donation_consistency())

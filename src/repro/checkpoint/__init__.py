@@ -1,3 +1,5 @@
-from .ckpt import AsyncCheckpointer, save, restore, restore_into
+from .ckpt import (AsyncCheckpointer, CheckpointCorruptError, Snapshot, gc,
+                   load, restore, restore_into, save, unflatten_state)
 
-__all__ = ["AsyncCheckpointer", "save", "restore", "restore_into"]
+__all__ = ["AsyncCheckpointer", "CheckpointCorruptError", "Snapshot", "gc",
+           "load", "restore", "restore_into", "save", "unflatten_state"]

@@ -1,29 +1,83 @@
-"""Flat-npz pytree checkpointing with step metadata (no orbax in env).
+"""Durable manifest-committed pytree checkpointing (no orbax in env).
+
+Layout of a checkpoint directory::
+
+    ck/
+      state-<sha256[:16]>.npz      # content-addressed state (params/opt/extra)
+      manifest-00000007.json       # ONE commit = ONE atomic manifest rename
+      manifest-00000008.json       # newest manifest wins; older = fallbacks
+
+A snapshot is committed by exactly ONE ``os.replace`` — of the manifest.
+State bytes are written first under a content-hash name (a crash before the
+manifest rename leaves an unreferenced blob, never a torn snapshot); the
+manifest records the state file and its full sha256, so :func:`load`
+validates the bytes it reads and *falls back to the previous manifest* on a
+torn / truncated / corrupted snapshot instead of handing back garbage.
+Unrecoverable corruption raises :class:`CheckpointCorruptError` naming the
+offending file.  Keep-last-k retention garbage-collects old manifests and
+any state blobs no retained manifest references.
 
 ``meta`` is free-form JSON.  ``PrivacySession.checkpoint`` stores the
 privacy accountant's full state under ``meta["accountant"]`` (delta, alphas
-and the (q, sigma, steps) history) so ``restore`` re-seats the exact RDP
-composition — no constant-(q, sigma) recompose assumption.
+and the (q, sigma, steps) history) so restore re-seats the exact RDP
+composition, and the train-state RNG key under ``extra`` — together with
+the counter-based sampler this makes kill-anywhere + resume bitwise
+identical to the uninterrupted run.
 
-:class:`AsyncCheckpointer` moves the device→host copy and the npz/json
-write off the step path: ``save`` snapshots the pytree's array references
-(plus a device-side copy where buffer donation could invalidate them),
-returns immediately, and a background thread runs ``jax.device_get`` + the
-file writes.  It blocks only if a previous write is still in flight, so a
-training loop checkpoints at the cadence of the slower of (disk, interval)
-without ever stalling on d2h.
+:class:`AsyncCheckpointer` moves the device→host copy and the file writes
+off the step path: ``save`` snapshots the pytree's array references (plus a
+device-side copy where buffer donation could invalidate them), returns
+immediately, and a background thread runs ``jax.device_get`` + the commit.
+Transient I/O failures are retried with exponential backoff (injectable
+``sleep`` for tests); retry/failure counts flow through the obs registry.
 """
 from __future__ import annotations
 
+import dataclasses
+import hashlib
 import json
 import os
+import re
 import threading
-from typing import Any, Optional, Tuple
+import time
+import warnings
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
 
+from ..obs import as_registry
+from ..resilience.faults import fault_point
 from ..utils.params import flatten_params, unflatten_params
+
+MANIFEST_VERSION = 1
+_MANIFEST_RE = re.compile(r"^manifest-(\d{8})\.json$")
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A snapshot failed validation (torn write, truncated file, digest
+    mismatch, missing member).  ``offending`` names the bad file;
+    ``fallback`` is the last good manifest (None when nothing in the
+    directory is restorable)."""
+
+    def __init__(self, message: str, *, path: str = "",
+                 offending: Optional[str] = None,
+                 fallback: Optional[str] = None):
+        super().__init__(message)
+        self.path = path
+        self.offending = offending
+        self.fallback = fallback
+
+
+@dataclasses.dataclass
+class Snapshot:
+    """A validated restored checkpoint."""
+    params: dict
+    opt_flat: Dict[str, np.ndarray]
+    step: int
+    meta: dict
+    extra: Dict[str, np.ndarray]
+    manifest: Optional[str] = None      # manifest file name (None = legacy)
 
 
 def _flatten_state(tree, prefix=""):
@@ -40,45 +94,273 @@ def _flatten_state(tree, prefix=""):
     return out
 
 
+def unflatten_state(flat: Dict[str, np.ndarray], template: Any,
+                    _prefix: str = "") -> Any:
+    """Rebuild a ``_flatten_state``-style flat dict into the structure of
+    ``template``, casting each leaf to the template's dtype/shape.  ``None``
+    leaves in the template stay None (they were never saved); a template
+    leaf with no saved entry raises ``KeyError`` naming the path."""
+    if isinstance(template, dict):
+        return {k: unflatten_state(flat, v, f"{_prefix}{k}.")
+                for k, v in template.items()}
+    if isinstance(template, (list, tuple)) and not hasattr(template, "_fields"):
+        vals = [unflatten_state(flat, v, f"{_prefix}{i}.")
+                for i, v in enumerate(template)]
+        return type(template)(vals)
+    if template is None:
+        return None
+    key = _prefix[:-1]
+    if key not in flat:
+        raise KeyError(f"checkpoint has no entry for state leaf {key!r}")
+    t = np.asarray(template)
+    return np.asarray(flat[key]).astype(t.dtype).reshape(t.shape)
+
+
+def _sha256_file(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+def _fsync_dir(path: str) -> None:
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return                      # platform without dir-fd semantics
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
+def _list_manifests(path: str) -> List[Tuple[int, str]]:
+    """(seq, filename) pairs, ascending seq."""
+    out = []
+    try:
+        names = os.listdir(path)
+    except FileNotFoundError:
+        return []
+    for name in names:
+        m = _MANIFEST_RE.match(name)
+        if m:
+            out.append((int(m.group(1)), name))
+    return sorted(out)
+
+
 def save(path: str, params: Any, opt_state: Any = None, step: int = 0,
-         meta: Optional[dict] = None) -> None:
-    """Atomic write: serialise to `.tmp` siblings, then os.replace — a crash
-    mid-write (incl. the AsyncCheckpointer's background thread dying with
-    the process) can never corrupt the previous good checkpoint at `path`."""
+         meta: Optional[dict] = None, *, extra: Optional[dict] = None,
+         keep: Optional[int] = None) -> str:
+    """Write one snapshot; returns the committed manifest's file name.
+
+    The commit point is the single atomic rename of the manifest — a crash
+    at ANY earlier instant leaves the directory exactly as restorable as it
+    was before the call (at worst plus an unreferenced, GC-able state blob).
+
+    ``extra`` is a flat name->array dict stored beside params/opt (the
+    session puts the train-state RNG key here).  ``keep`` retains the last
+    k manifests and garbage-collects everything older (None = keep all).
+    """
     os.makedirs(path, exist_ok=True)
+    fault_point("ckpt/before_state")
+    fault_point("ckpt/io_write")
     flat = {f"params.{k}": np.asarray(v)
             for k, v in flatten_params(params).items()}
     if opt_state is not None:
         flat.update({f"opt.{k}": np.asarray(v)
                      for k, v in _flatten_state(opt_state).items()
                      if v is not None})
-    state_path = os.path.join(path, "state.npz")
-    np.savez(state_path + ".tmp.npz", **flat)
-    os.replace(state_path + ".tmp.npz", state_path)
-    meta_path = os.path.join(path, "meta.json")
-    with open(meta_path + ".tmp", "w") as f:
-        json.dump({"step": int(step), **(meta or {})}, f)
-    os.replace(meta_path + ".tmp", meta_path)
+    for k, v in (extra or {}).items():
+        flat[f"extra.{k}"] = np.asarray(v)
+    tmp = os.path.join(
+        path, f".tmp-state-{os.getpid()}-{threading.get_ident()}.npz")
+    with open(tmp, "wb") as f:
+        np.savez(f, **flat)
+        f.flush()
+        os.fsync(f.fileno())
+    digest = _sha256_file(tmp)
+    state_name = f"state-{digest[:16]}.npz"
+    os.replace(tmp, os.path.join(path, state_name))
+    fault_point("ckpt/after_state_before_manifest")
+
+    manifests = _list_manifests(path)
+    seq = (manifests[-1][0] + 1) if manifests else 1
+    manifest_name = f"manifest-{seq:08d}.json"
+    record = {"version": MANIFEST_VERSION, "step": int(step),
+              "state": state_name, "sha256": digest, "meta": meta or {}}
+    mtmp = os.path.join(
+        path, f".tmp-manifest-{os.getpid()}-{threading.get_ident()}.json")
+    with open(mtmp, "w") as f:
+        json.dump(record, f)
+        f.flush()
+        os.fsync(f.fileno())
+    # THE commit point: one atomic rename makes the snapshot visible
+    os.replace(mtmp, os.path.join(path, manifest_name))
+    _fsync_dir(path)
+    fault_point("ckpt/after_manifest_before_gc")
+    if keep is not None:
+        gc(path, keep)
+    return manifest_name
+
+
+def gc(path: str, keep: int) -> List[str]:
+    """Drop all but the newest ``keep`` manifests, then delete state blobs
+    no retained manifest references (plus stale .tmp files).  Returns the
+    deleted file names.  Never touches the newest manifest."""
+    if keep < 1:
+        raise ValueError(f"keep must be >= 1, got {keep}")
+    manifests = _list_manifests(path)
+    drop, hold = manifests[:-keep], manifests[-keep:]
+    deleted = []
+    referenced = set()
+    for _seq, name in hold:
+        try:
+            with open(os.path.join(path, name)) as f:
+                referenced.add(json.load(f).get("state"))
+        except (OSError, json.JSONDecodeError):
+            pass                    # corrupt retained manifest: keep blobs
+    for _seq, name in drop:
+        try:
+            os.remove(os.path.join(path, name))
+            deleted.append(name)
+        except OSError:
+            pass
+    for name in os.listdir(path):
+        stale_tmp = name.startswith(".tmp-")
+        blob = name.startswith("state-") and name.endswith(".npz")
+        if stale_tmp or (blob and name not in referenced):
+            try:
+                os.remove(os.path.join(path, name))
+                deleted.append(name)
+            except OSError:
+                pass
+    return deleted
+
+
+def _load_manifest(path: str, manifest_name: str) -> Snapshot:
+    """Validate + load one manifest's snapshot; CheckpointCorruptError on
+    any torn/truncated/garbage file."""
+    mpath = os.path.join(path, manifest_name)
+
+    def corrupt(msg, offending):
+        return CheckpointCorruptError(
+            f"{os.path.join(path, offending)}: {msg}",
+            path=path, offending=offending)
+
+    try:
+        with open(mpath) as f:
+            record = json.load(f)
+    except (OSError, json.JSONDecodeError, UnicodeDecodeError) as e:
+        raise corrupt(f"unreadable manifest ({e})", manifest_name) from e
+    if not isinstance(record, dict) or "state" not in record \
+            or "sha256" not in record:
+        raise corrupt("manifest missing state/sha256 fields", manifest_name)
+    state_name = record["state"]
+    spath = os.path.join(path, state_name)
+    if not os.path.exists(spath):
+        raise corrupt(f"state file {state_name} referenced by "
+                      f"{manifest_name} is missing", state_name)
+    digest = _sha256_file(spath)
+    if digest != record["sha256"]:
+        raise corrupt(
+            f"digest mismatch (manifest {manifest_name} expects "
+            f"{record['sha256'][:16]}..., file hashes to {digest[:16]}...): "
+            f"torn or corrupted write", state_name)
+    try:
+        with np.load(spath) as z:
+            arrays = {k: z[k] for k in z.files}     # force-read every member
+    except Exception as e:      # zipfile/np errors vary; digest already ok,
+        raise corrupt(f"unreadable npz ({e})", state_name) from e
+    pflat = {k[len("params."):]: v for k, v in arrays.items()
+             if k.startswith("params.")}
+    if not pflat:
+        raise corrupt("no params.* members in state file", state_name)
+    oflat = {k[len("opt."):]: v for k, v in arrays.items()
+             if k.startswith("opt.")}
+    extra = {k[len("extra."):]: v for k, v in arrays.items()
+             if k.startswith("extra.")}
+    meta = record.get("meta") or {}
+    return Snapshot(params=unflatten_params(pflat), opt_flat=oflat,
+                    step=int(record.get("step", 0)), meta=meta, extra=extra,
+                    manifest=manifest_name)
+
+
+def _load_legacy(path: str) -> Snapshot:
+    """Pre-manifest layout (state.npz + meta.json double os.replace) —
+    read-only compatibility; new saves always commit a manifest."""
+    spath = os.path.join(path, "state.npz")
+    try:
+        with np.load(spath) as z:
+            arrays = {k: z[k] for k in z.files}
+    except Exception as e:
+        raise CheckpointCorruptError(
+            f"{spath}: unreadable legacy state ({e})", path=path,
+            offending="state.npz") from e
+    pflat = {k[len("params."):]: v for k, v in arrays.items()
+             if k.startswith("params.")}
+    oflat = {k[len("opt."):]: v for k, v in arrays.items()
+             if k.startswith("opt.")}
+    meta = {}
+    mpath = os.path.join(path, "meta.json")
+    if os.path.exists(mpath):
+        with open(mpath) as f:
+            meta = json.load(f)
+    return Snapshot(params=unflatten_params(pflat), opt_flat=oflat,
+                    step=int(meta.get("step", 0)), meta=meta, extra={},
+                    manifest=None)
+
+
+def load(path: str) -> Snapshot:
+    """Restore the newest VALID snapshot, falling back manifest by manifest
+    past torn/corrupt ones (with a warning naming what was skipped).
+    Raises :class:`CheckpointCorruptError` when manifests exist but none
+    validates, ``FileNotFoundError`` when the directory holds no checkpoint
+    at all."""
+    manifests = _list_manifests(path)
+    if not manifests:
+        if os.path.exists(os.path.join(path, "state.npz")):
+            return _load_legacy(path)
+        raise FileNotFoundError(f"no checkpoint at {path!r} "
+                                f"(no manifest-*.json, no legacy state.npz)")
+    errors: List[CheckpointCorruptError] = []
+    for _seq, name in reversed(manifests):
+        try:
+            snap = _load_manifest(path, name)
+        except CheckpointCorruptError as e:
+            errors.append(e)
+            continue
+        if errors:
+            skipped = ", ".join(e.offending or "?" for e in errors)
+            warnings.warn(
+                f"checkpoint at {path!r}: skipped corrupt snapshot(s) "
+                f"[{skipped}], restored last good manifest {name}",
+                RuntimeWarning, stacklevel=2)
+        return snap
+    first = errors[0]
+    raise CheckpointCorruptError(
+        f"no restorable checkpoint at {path!r}: {first} "
+        f"(last good manifest: none; {len(errors)} manifest(s) failed "
+        f"validation)", path=path, offending=first.offending, fallback=None)
 
 
 def restore(path: str) -> Tuple[dict, dict, int, dict]:
-    """Returns (params, flat_opt_state, step, meta)."""
-    z = np.load(os.path.join(path, "state.npz"))
-    pflat = {k[len("params."):]: z[k] for k in z.files if k.startswith("params.")}
-    oflat = {k[len("opt."):]: z[k] for k in z.files if k.startswith("opt.")}
-    with open(os.path.join(path, "meta.json")) as f:
-        meta = json.load(f)
-    return unflatten_params(pflat), oflat, meta.get("step", 0), meta
+    """Returns (params, flat_opt_state, step, meta) — see :func:`load` for
+    the full snapshot (extra arrays, manifest name)."""
+    snap = load(path)
+    return snap.params, snap.opt_flat, snap.step, snap.meta
 
 
 def restore_into(path: str, params_like: Any):
     """Restore params cast/shaped like an existing template tree."""
-    params, _, step, meta = restore(path)
+    snap = load(path)
     tmpl = flatten_params(params_like)
-    got = flatten_params(params)
+    got = flatten_params(snap.params)
     out = {k: np.asarray(got[k]).astype(v.dtype).reshape(v.shape)
            for k, v in tmpl.items()}
-    return unflatten_params(out), step, meta
+    return unflatten_params(out), snap.step, snap.meta
 
 
 class AsyncCheckpointer:
@@ -89,11 +371,24 @@ class AsyncCheckpointer:
     the last enqueued checkpoint durable — call it before reading the files
     back or at the end of training.  Exceptions raised by the background
     write re-surface on the next ``save``/``wait``.
+
+    ``OSError``\\ s from the write are retried up to ``retries`` times with
+    exponential backoff (``backoff * 2**attempt`` seconds, via the
+    injectable ``sleep``); only a write that exhausts its retries surfaces.
+    ``ckpt/saves`` / ``ckpt/retries`` / ``ckpt/failures`` counters are
+    emitted through ``obs``.
     """
 
-    def __init__(self):
+    def __init__(self, *, retries: int = 2, backoff: float = 0.05,
+                 sleep: Callable[[float], None] = time.sleep,
+                 keep: Optional[int] = 3, obs=None):
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
+        self.retries = int(retries)
+        self.backoff = float(backoff)
+        self.keep = keep
+        self._sleep = sleep
+        self._obs = as_registry(obs)
 
     def _snapshot(self, tree):
         if tree is None:
@@ -106,19 +401,35 @@ class AsyncCheckpointer:
             lambda x: x.copy() if isinstance(x, jax.Array) else x, tree)
 
     def save(self, path: str, params: Any, opt_state: Any = None,
-             step: int = 0, meta: Optional[dict] = None) -> None:
+             step: int = 0, meta: Optional[dict] = None,
+             extra: Optional[dict] = None) -> None:
         """Enqueue a checkpoint write; blocks only on a still-running
         previous write.  ``step``/``meta`` must be host values."""
         self.wait()
         params = self._snapshot(params)
         opt_state = self._snapshot(opt_state)
+        extra = self._snapshot(extra)
 
         def _write():
             try:
-                save(path, jax.device_get(params),
-                     jax.device_get(opt_state) if opt_state is not None
-                     else None, step, meta)
+                fault_point("ckpt/mid_d2h")
+                h_params = jax.device_get(params)
+                h_opt = jax.device_get(opt_state) if opt_state is not None \
+                    else None
+                h_extra = jax.device_get(extra) if extra is not None else None
+                for attempt in range(self.retries + 1):
+                    try:
+                        save(path, h_params, h_opt, step, meta,
+                             extra=h_extra, keep=self.keep)
+                        self._obs.inc("ckpt/saves")
+                        return
+                    except OSError as e:
+                        if attempt == self.retries:
+                            raise e
+                        self._obs.inc("ckpt/retries")
+                        self._sleep(self.backoff * (2 ** attempt))
             except BaseException as e:     # surfaced by the next save/wait
+                self._obs.inc("ckpt/failures")
                 self._error = e
 
         self._thread = threading.Thread(target=_write, daemon=True,

@@ -50,6 +50,7 @@ import numpy as np
 from ..data import BatchMemoryManager, PoissonSampler
 from ..launch.executor import LaunchConfig, build_executor
 from ..obs import as_registry
+from ..resilience.faults import fault_point
 from ..privacy import PrivacyAccountant, calibrate_sigma
 from ..privacy import rdp as rdp_mod
 from ..optim import (Optimizer, adamw, constant, cosine,
@@ -197,12 +198,39 @@ class PrivacySession:
     @classmethod
     def restore(cls, path: str, model_cfg, dp_cfg: Optional[DPConfig] = None,
                 train_cfg: Optional[TrainConfig] = None, **kw) -> "PrivacySession":
-        """from_config + load params (and step/eps/accountant metadata)."""
-        from ..checkpoint import restore_into
+        """from_config + load the full train state: params, optimizer state,
+        the train-state RNG key and step/eps/accountant metadata.  Restoring
+        opt state + RNG (not just params) is what makes a resumed ``fit()``
+        bitwise-identical to the uninterrupted run — momentum buffers and
+        the noise stream continue where they stopped."""
+        from ..checkpoint import load as ckpt_load, unflatten_state
+        from ..utils.params import flatten_params, unflatten_params
         session = cls.from_config(model_cfg, dp_cfg, train_cfg, **kw)
-        params, step, meta = restore_into(path, session.state.params)
+        snap = ckpt_load(path)
+        tmpl = flatten_params(session.state.params)
+        got = flatten_params(snap.params)
+        params = unflatten_params(
+            {k: np.asarray(got[k]).astype(v.dtype).reshape(v.shape)
+             for k, v in tmpl.items()})
+        step, meta = snap.step, snap.meta
+        opt_state = session.state.opt_state
+        if snap.opt_flat:
+            try:
+                opt_state = unflatten_state(snap.opt_flat, opt_state)
+            except (KeyError, ValueError, TypeError) as e:
+                warnings.warn(
+                    f"checkpoint optimizer state does not match this "
+                    f"session's optimizer ({e}); keeping freshly initialised "
+                    f"opt state — the resumed run will NOT be bitwise "
+                    f"identical to an uninterrupted one", RuntimeWarning,
+                    stacklevel=2)
+        rng = session.state.rng
+        if "rng" in snap.extra:
+            rng = jnp.asarray(np.asarray(snap.extra["rng"]).astype(
+                np.asarray(rng).dtype).reshape(np.asarray(rng).shape))
         session.state = session.executor.place_state(session.state._replace(
-            params=params, step=jnp.asarray(step, jnp.int32)))
+            params=params, opt_state=opt_state, rng=rng,
+            step=jnp.asarray(step, jnp.int32)))
         acc_state = (meta or {}).get("accountant")
         if acc_state is not None:
             # exact re-seat: the checkpoint carries the full (q, sigma, steps)
@@ -331,24 +359,39 @@ class PrivacySession:
         return float(self._jitted("evaluate")(self.state.params, batch, mask))
 
     def fit(self, dataset=None, steps: Optional[int] = None, *, ckpt: Optional[str] = None,
-            ckpt_every: int = 0) -> dict:
+            ckpt_every: int = 0, ckpt_keep: int = 3) -> dict:
         """Run the full loop: PoissonSampler -> BatchMemoryManager ->
         accumulate/update -> accountant (-> checkpoint).  Returns the same
         record the legacy ``launch.train.train`` driver produced.
+
+        ``steps`` counts the optimizer steps THIS call takes; the sampler
+        stream is indexed by the ABSOLUTE optimizer step, so a restored
+        session continues the counter-based Poisson draws exactly where the
+        uninterrupted run would be (never replaying draws the restored
+        accountant already charged — the exactly-once-sampling half of the
+        resume invariant).
 
         Checkpoints are written asynchronously (device→host copy + npz write
         on a background thread): with ``ckpt_every=N`` a snapshot is enqueued
         every N optimizer steps without stalling the step loop (it blocks
         only if the previous write is still in flight); the final checkpoint
-        is always taken and made durable before fit returns."""
+        is always taken and made durable before fit returns.  Each snapshot
+        commits via one atomic manifest rename; ``ckpt_keep`` manifests are
+        retained for corruption fallback (older ones are GC'd)."""
         tc = self.train_cfg
         steps = steps if steps is not None else tc.steps
-        if tc.target_eps is not None and steps > tc.steps:
+        # one host sync BEFORE the loop: the restored/current optimizer step
+        # anchors the sampler stream and the checkpoint numbering
+        start = int(self.state.step)
+        if tc.target_eps is not None and start + steps > tc.steps:
+            resumed = f" from step {start}" if start else ""
             raise ValueError(
-                f"fit(steps={steps}) exceeds the {tc.steps} steps sigma was "
-                f"calibrated for (target_eps={tc.target_eps}); rebuild the "
-                f"session with TrainConfig(steps={steps}) so calibration "
-                f"matches the steps actually taken.")
+                f"fit(steps={steps}){resumed} exceeds the {tc.steps} steps "
+                f"sigma was calibrated for (target_eps={tc.target_eps}); "
+                f"rebuild the session with TrainConfig(steps="
+                f"{start + steps}) so calibration matches the steps "
+                f"actually taken, or pass fit(steps={tc.steps - start}) to "
+                f"finish the calibrated run.")
         if dataset is None:
             from ..data.synthetic import dataset_for_config
             dataset = dataset_for_config(self.model_cfg, tc.n_data,
@@ -363,7 +406,7 @@ class PrivacySession:
                     f"TrainConfig(n_data={n}).")
         self._configure_train()
         sampler = PoissonSampler(n=tc.n_data, q=tc.q, seed=tc.seed,
-                                 steps=steps)
+                                 steps=steps, start_step=start)
         # the memory manager places each physical batch through the executor
         # as it is produced (host->device/mesh transfer off the step path)
         bmm = BatchMemoryManager(dataset.fetch, tc.physical_batch,
@@ -373,9 +416,9 @@ class PrivacySession:
         obs = self.obs
         t0 = time.time()
         examples = 0
-        # one sync BEFORE the loop (restored sessions start at step > 0);
-        # in-loop checkpoints then derive the step count host-side
-        init_step = int(self.state.step) if ckpt and ckpt_every else 0
+        # in-loop checkpoints derive the absolute step count host-side from
+        # `start` (no device sync on the step path)
+        init_step = start
         last_async_at = done = 0
         try:
             for step_i, indices in enumerate(sampler):
@@ -395,6 +438,11 @@ class PrivacySession:
                     sp.watch(self.state.params)
                 with obs.span("fit/account"):
                     self._account()      # host-side RDP composition
+                # the window the chaos suite cares about most: the accountant
+                # has charged this step but no snapshot records it yet — a
+                # kill here must resume from the PREVIOUS durable snapshot
+                # and re-take this step with the same draw + noise
+                fault_point("fit/after_account_before_ckpt")
                 if obs.enabled:
                     self._record_step_telemetry(acc_metrics, step_i + 1,
                                                 len(indices))
@@ -406,7 +454,8 @@ class PrivacySession:
                     # always timed (host clock, no device sync) and warned
                     # about when it exceeds one mean step time.
                     t0c = time.perf_counter()
-                    self.checkpoint_async(ckpt, step=init_step + step_i + 1)
+                    self.checkpoint_async(ckpt, step=init_step + step_i + 1,
+                                          keep=ckpt_keep)
                     wait_s = time.perf_counter() - t0c
                     obs.observe("fit/ckpt_wait", float(wait_s))
                     mean_step = (time.time() - t0) / (step_i + 1)
@@ -436,6 +485,8 @@ class PrivacySession:
                         and (step_i + 1) % obs.snapshot_every == 0):
                     print(obs.snapshot(), file=sys.stderr)
                 done = step_i + 1
+                fault_point("fit/step_end")     # armed with at=N: "kill at
+                #                                 step N of this fit call"
         except BaseException:
             # the loop died mid-flight: make the last enqueued snapshot
             # durable before propagating, so a crash never loses the
@@ -473,19 +524,27 @@ class PrivacySession:
                 # composition instead of assuming constant (q, sigma)
                 "accountant": self.accountant.state_dict()}
 
-    def checkpoint_async(self, path: str, *, step: Optional[int] = None) -> None:
+    def checkpoint_async(self, path: str, *, step: Optional[int] = None,
+                         keep: Optional[int] = None) -> None:
         """Enqueue a checkpoint on the background writer and return — the
         step loop keeps running while d2h + npz write happen off-thread.
         Blocks only if a previous write is still in flight.  Pass ``step``
         when the caller knows it host-side (fit's loop does): reading
-        ``state.step`` would force a host-device sync on the step path."""
+        ``state.step`` would force a host-device sync on the step path.
+        The snapshot carries the train-state RNG key so a restore continues
+        the noise stream bit-exactly."""
         from ..checkpoint import AsyncCheckpointer
         if self._ckpt_writer is None:
-            self._ckpt_writer = AsyncCheckpointer()
+            # resilience counters (ckpt/saves|retries|failures) flow through
+            # the session's registry
+            self._ckpt_writer = AsyncCheckpointer(obs=self.obs)
+        if keep is not None:
+            self._ckpt_writer.keep = keep
         if step is None:
             step = int(self.state.step)
         self._ckpt_writer.save(path, self.state.params, self.state.opt_state,
-                               step, self._ckpt_meta())
+                               step, self._ckpt_meta(),
+                               extra={"rng": self.state.rng})
 
     def checkpoint_wait(self) -> None:
         """Make the last enqueued checkpoint durable (no-op when idle)."""

@@ -4,29 +4,64 @@ Each logical batch is drawn by an independent Bernoulli(q) coin per training
 example (NOT by shuffling + slicing, which voids the privacy accounting;
 Lebeda et al., 2024).  Seeded so that, as in the paper's benchmark setup, all
 engines see identical logical batch sequences.
+
+**Counter-based, exactly-once.**  Step ``k``'s draw is a pure function of
+``(seed, k)``: a fresh ``np.random.Generator`` over a ``np.random.Philox``
+bit generator keyed by the pair, never a sequential stream advanced draw by
+draw.  ``at_step(k)`` is therefore history-free, and a training run resumed
+from a step-``k`` checkpoint continues the stream at ``k`` instead of
+replaying draws 0..k-1 — replayed draws would make the executed sampling
+distribution diverge from the accounted one (the sampler/accountant
+mismatch of the shuffling-vs-Poisson analyses, arxiv 2411.04205; per-step
+addressability is the same property balls-and-bins implementations insist
+on, arxiv 2412.16802).  Lint rule L006 (:mod:`repro.analysis.lint`) keeps
+sequential host RNGs out of sampling streams.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, List
+from typing import Iterator
 
 import numpy as np
+
+_MASK64 = (1 << 64) - 1
+
+
+def step_rng(seed: int, step: int) -> np.random.Generator:
+    """The counter-based per-step generator: Philox keyed by (seed, step).
+
+    The 128-bit Philox key is ``seed`` in the high word and ``step`` in the
+    low word, so distinct (seed, step) pairs get distinct, independent
+    streams and the k-th draw never depends on draws 0..k-1.
+    """
+    key = ((int(seed) & _MASK64) << 64) | (int(step) & _MASK64)
+    return np.random.Generator(np.random.Philox(key=key))
 
 
 @dataclasses.dataclass
 class PoissonSampler:
-    """Yields index arrays; len varies per draw (that's the point)."""
+    """Yields index arrays; len varies per draw (that's the point).
+
+    ``at_step(k)`` returns the k-th (absolute) logical batch directly;
+    iteration yields ``steps`` draws starting at ``start_step`` — a resumed
+    ``fit()`` passes the restored optimizer step so the stream continues
+    where the uninterrupted run would be.
+    """
     n: int                 # dataset size
     q: float               # per-example sampling probability (= L / N)
     seed: int = 0
     steps: int = None      # type: ignore  # None = infinite
+    start_step: int = 0    # absolute step the iteration stream starts at
+
+    def at_step(self, k: int) -> np.ndarray:
+        """The step-``k`` Bernoulli(q) draw, history-free."""
+        mask = step_rng(self.seed, k).random(self.n) < self.q
+        return np.nonzero(mask)[0]
 
     def __iter__(self) -> Iterator[np.ndarray]:
-        rng = np.random.default_rng(self.seed)
-        t = 0
-        while self.steps is None or t < self.steps:
-            mask = rng.random(self.n) < self.q
-            yield np.nonzero(mask)[0]
+        t = self.start_step
+        while self.steps is None or t < self.start_step + self.steps:
+            yield self.at_step(t)
             t += 1
 
     @property
@@ -38,20 +73,34 @@ class PoissonSampler:
 class ShuffleSampler:
     """The SHORTCUT sampler (De et al., 2022-style shuffling) — implemented
     only as a baseline to *demonstrate* the discrepancy; privacy accounting
-    for it is NOT valid under the Poisson-subsampled RDP bound."""
+    for it is NOT valid under the Poisson-subsampled RDP bound.
+
+    Counter-based like :class:`PoissonSampler`: epoch ``e``'s permutation is
+    a pure function of ``(seed, e)``, and ``at_step(k)`` slices it — so even
+    the shortcut baseline resumes exactly-once.
+    """
     n: int
     batch_size: int
     seed: int = 0
     steps: int = None  # type: ignore
+    start_step: int = 0
+
+    def __post_init__(self):
+        if self.batch_size > self.n:
+            raise ValueError(f"batch_size={self.batch_size} exceeds dataset "
+                             f"size n={self.n}")
+
+    @property
+    def steps_per_epoch(self) -> int:
+        return self.n // self.batch_size
+
+    def at_step(self, k: int) -> np.ndarray:
+        epoch, i = divmod(int(k), self.steps_per_epoch)
+        order = step_rng(self.seed, epoch).permutation(self.n)
+        return order[i * self.batch_size:(i + 1) * self.batch_size]
 
     def __iter__(self) -> Iterator[np.ndarray]:
-        rng = np.random.default_rng(self.seed)
-        order = rng.permutation(self.n)
-        pos, t = 0, 0
-        while self.steps is None or t < self.steps:
-            if pos + self.batch_size > self.n:
-                order = rng.permutation(self.n)
-                pos = 0
-            yield order[pos:pos + self.batch_size]
-            pos += self.batch_size
+        t = self.start_step
+        while self.steps is None or t < self.start_step + self.steps:
+            yield self.at_step(t)
             t += 1

@@ -1,0 +1,30 @@
+"""Fault tolerance: fault injection, chaos harness, crash-safe invariants.
+
+The subsystem's headline invariant — pinned end-to-end by
+``tests/test_resilience.py`` — is **kill-anywhere + resume ⇒ bitwise
+identical final params AND bit-identical ε versus the uninterrupted run,
+never under-counting privacy**.  Three layers deliver it:
+
+1. *Exactly-once sampling* — :class:`repro.data.PoissonSampler` /
+   :class:`~repro.data.ShuffleSampler` are counter-based (Philox keyed by
+   ``(seed, step)``), so ``at_step(k)`` is history-free and a resumed
+   ``fit()`` continues the draw stream at the restored optimizer step
+   instead of replaying charged draws (lint rule L006 keeps sequential host
+   RNGs out of sampling streams).
+2. *Durable checkpoints* — :mod:`repro.checkpoint` commits each snapshot by
+   ONE atomic manifest rename over content-hashed state blobs; restore
+   validates digests and falls back to the last good manifest, and
+   :class:`~repro.checkpoint.AsyncCheckpointer` retries transient I/O with
+   exponential backoff.
+3. *Fault injection* — :mod:`.faults` arms named crash/failure points
+   threaded through checkpointing, ``fit()`` and the serve scheduler;
+   :mod:`.chaos` kills real subprocess training runs at those points and
+   asserts the invariant.
+"""
+from .faults import (ENV_VAR, KNOWN_POINTS, FaultInjected,  # noqa: F401
+                     FaultPlan, FaultSpec, InjectedIOError, activate,
+                     active, active_plan, fault_point)
+
+__all__ = ["ENV_VAR", "KNOWN_POINTS", "FaultInjected", "FaultPlan",
+           "FaultSpec", "InjectedIOError", "activate", "active",
+           "active_plan", "fault_point"]

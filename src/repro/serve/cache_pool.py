@@ -247,6 +247,49 @@ class CachePool:
             self._pending_free.discard(slot)
             self._free.append(slot)
 
+    def assert_consistent(self) -> None:
+        """Structural invariants of the slot lifecycle; raises AssertionError
+        naming the violation.  Tests call it after every mutation sequence,
+        and the scheduler's exception-recovery path calls it to prove a
+        mid-iteration failure left no leaked slot, negative refcount or
+        stale prefix-index entry behind."""
+        every = set(range(self.max_slots))
+        free = set(self._free)
+        assert len(free) == len(self._free), \
+            f"duplicate slots in free list: {sorted(self._free)}"
+        assert free <= every, f"free list out of range: {sorted(free - every)}"
+        assert self._pending_free <= every, \
+            f"pending-free out of range: {sorted(self._pending_free - every)}"
+        assert not free & self._pending_free, \
+            f"slots both free and pending-free: " \
+            f"{sorted(free & self._pending_free)}"
+        bad_ref = [s for s in range(self.max_slots) if self._refcount[s] < 0]
+        assert not bad_ref, f"negative refcounts on slots {bad_ref}"
+        for s in sorted(free):
+            assert self._refcount[s] == 0, \
+                f"free slot {s} still pinned (refcount {self._refcount[s]})"
+            assert self.positions[s] == 0, \
+                f"free slot {s} has nonzero position {self.positions[s]}"
+        for s in sorted(self._pending_free):
+            assert self._refcount[s] > 0, \
+                f"slot {s} parked pending-free without a pin"
+            assert self.positions[s] == 0, \
+                f"pending-free slot {s} has nonzero position " \
+                f"{self.positions[s]}"
+        if self.prefix_index is not None:
+            occupied = every - free - self._pending_free
+            registered = set(self.prefix_index._tokens)
+            assert registered <= occupied, \
+                f"prefix index still registers non-occupied slots " \
+                f"{sorted(registered - occupied)}"
+
+    @property
+    def occupied(self) -> set:
+        """Slots neither free nor parked pending-free — each should be owned
+        by exactly one active request (the scheduler reconciles strays)."""
+        return (set(range(self.max_slots)) - set(self._free)
+                - self._pending_free)
+
     # -- prefix sharing ------------------------------------------------------
 
     def share_prefix(self, slot: int, tokens) -> int:

@@ -29,6 +29,9 @@ FINISHED = "finished"
 # finish reasons
 FINISH_LENGTH = "length"        # produced max_new_tokens
 FINISH_MAX_LEN = "max_len"      # hit the cache capacity (max_len slots)
+FINISH_ERROR = "error"          # retired by the scheduler's exception
+#                                 recovery (slot evicted, output partial)
+FINISH_CANCELLED = "cancelled"  # cancelled via Scheduler.cancel(rid)
 
 
 @dataclasses.dataclass(frozen=True)

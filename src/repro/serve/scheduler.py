@@ -40,8 +40,9 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from ..obs import NULL_REGISTRY
-from .request import (DECODE, FINISH_LENGTH, FINISH_MAX_LEN, PREFILL,
-                      Request, RequestState)
+from ..resilience.faults import fault_point
+from .request import (DECODE, FINISH_CANCELLED, FINISH_ERROR, FINISH_LENGTH,
+                      FINISH_MAX_LEN, PREFILL, QUEUED, Request, RequestState)
 
 
 class Scheduler:
@@ -119,18 +120,37 @@ class Scheduler:
                 break
             state = self.queue.popleft()
             slot = pool.insert()
-            state.slot = slot
-            state.admitted_at = now
-            self.prompt_tokens_admitted += state.prompt_len
-            depth = pool.share_prefix(slot, state.prompt) if share else 0
-            if depth:
-                self.prefix_hits += 1
-                self.prefix_tokens_shared += depth
-                state.prefix_tokens = depth
-            state.pos = depth
-            state.status = PREFILL if state.pos < state.prompt_len else DECODE
-            self.active[slot] = state
-            newly.append(slot)
+            try:
+                state.slot = slot
+                state.admitted_at = now
+                self.prompt_tokens_admitted += state.prompt_len
+                depth = pool.share_prefix(slot, state.prompt) if share else 0
+                if depth:
+                    self.prefix_hits += 1
+                    self.prefix_tokens_shared += depth
+                    state.prefix_tokens = depth
+                state.pos = depth
+                state.status = (PREFILL if state.pos < state.prompt_len
+                                else DECODE)
+                self.active[slot] = state
+                newly.append(slot)
+            except Exception:
+                # a failed admission (e.g. the prefix-copy dispatch raising)
+                # must neither leak the claimed slot nor drop the request:
+                # the slot goes back to the pool and the request back to the
+                # FRONT of the queue, then the error propagates
+                self.active.pop(slot, None)
+                try:
+                    pool.evict(slot)
+                except ValueError:
+                    pass                    # evict itself was what failed
+                state.slot = None
+                state.pos = 0
+                state.prefix_tokens = 0
+                state.admitted_at = None
+                state.status = QUEUED
+                self.queue.appendleft(state)
+                raise
         pool.reset(newly)
         if share:
             # reset() zeroes positions; restore the shared depths (the step
@@ -140,13 +160,28 @@ class Scheduler:
                 pool.positions[slot] = self.active[slot].pos
 
     def step(self) -> bool:
-        """Run one scheduler iteration; False when there is nothing to do."""
+        """Run one scheduler iteration; False when there is nothing to do.
+
+        Exception safe: if the iteration body raises mid-flight (a dispatch
+        failure, a cancelled future, an injected fault), :meth:`_recover`
+        retires every in-flight request with ``FINISH_ERROR``, returns their
+        slots to the pool and reconciles any slot nobody owns — then the
+        error propagates.  The pool is left consistent
+        (:meth:`~repro.serve.cache_pool.CachePool.assert_consistent`), so a
+        caller that catches the error can keep submitting."""
         obs = self.obs
         obs.tick()
         with obs.span("serve/admit"):
             self._admit()
         if not self.active:
             return False
+        try:
+            return self._step_active(obs)
+        except Exception:
+            self._recover()
+            raise
+
+    def _step_active(self, obs) -> bool:
         pool = self.engine.pool
         B = pool.max_slots
         C = max(1, int(self.engine.prefill_chunk))
@@ -220,6 +255,10 @@ class Scheduler:
         # needs the sampled ids to build the next iteration's vectors)
         with obs.span("serve/host_sync"):
             next_tok = np.asarray(tok_dev)
+        # fused step dispatched + sampled, retirement bookkeeping not yet
+        # done — the window where an exception would leak slots without
+        # _recover(); the chaos tests arm a raise here
+        fault_point("serve/mid_iteration")
 
         self.iterations += 1
         self.active_slot_steps += int((n_tok > 0).sum())
@@ -251,6 +290,53 @@ class Scheduler:
                 self.finished.append(st)
                 self._record_request(st)
         return True
+
+    def _recover(self) -> None:
+        """Exception recovery: no slot may stay occupied by a dead request.
+
+        Every in-flight request is finished with ``FINISH_ERROR`` (its
+        partial output is preserved on the state) and its slot evicted —
+        after a failed fused step the cache rows are suspect, so resuming
+        the request in place could decode from half-written KV.  Slots the
+        pool still thinks are occupied but no request owns (an admit that
+        died between ``insert`` and ownership) are reconciled too.  Ends by
+        asserting pool consistency, so recovery itself can never leak."""
+        pool = self.engine.pool
+        for slot, st in list(self.active.items()):
+            del self.active[slot]
+            try:
+                pool.evict(slot)
+            except ValueError:
+                pass            # eviction already happened before the raise
+            st.finish(FINISH_ERROR)
+            self.finished.append(st)
+            self._record_request(st)
+        for slot in sorted(pool.occupied):      # ownerless strays
+            pool.evict(slot)
+        self.obs.inc("serve/recoveries")
+        pool.assert_consistent()
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a request by rid: a queued request is removed before it
+        ever claims a slot; an in-flight one is retired mid-iteration (slot
+        evicted and reusable NEXT iteration, partial output preserved).
+        Returns False when the rid is unknown or already finished."""
+        for st in list(self.queue):
+            if st.rid == rid:
+                self.queue.remove(st)
+                st.finish(FINISH_CANCELLED)
+                self.finished.append(st)
+                self._record_request(st)
+                return True
+        for slot, st in list(self.active.items()):
+            if st.rid == rid:
+                del self.active[slot]
+                self.engine.pool.evict(slot)
+                st.finish(FINISH_CANCELLED)
+                self.finished.append(st)
+                self._record_request(st)
+                return True
+        return False
 
     def _record_request(self, st: RequestState) -> None:
         """Per-request lifecycle telemetry at retirement: queue wait, TTFT,

@@ -282,6 +282,44 @@ def test_lint_const_key_suppression(tmp_path):
     assert lint_paths([str(ok)], semantic=False) == []
 
 
+def test_lint_sampling_stream_sequential_rng(tmp_path):
+    """L006: a sequential host RNG inside a sampling stream under data/ —
+    the mutation that reintroduces the sampler/accountant resume mismatch —
+    is flagged; the counter-based Philox idiom and annotated uses are not,
+    and the same code OUTSIDE data/ is out of scope."""
+    data = tmp_path / "data"
+    data.mkdir()
+    bad = data / "sampler.py"
+    bad.write_text(
+        "import numpy as np\n"
+        "class S:\n"
+        "    def __iter__(self):\n"
+        "        rng = np.random.default_rng(self.seed)\n"
+        "        while True:\n"
+        "            yield np.nonzero(rng.random(self.n) < self.q)[0]\n")
+    findings = lint_paths([str(bad)], semantic=False)
+    assert [f.code for f in findings] == ["L006"]
+    assert "default_rng" in findings[0].message
+
+    ok = data / "ok.py"
+    ok.write_text(
+        "import numpy as np\n"
+        "class S:\n"
+        "    def at_step(self, k):\n"
+        "        g = np.random.Generator(np.random.Philox(key=k))\n"
+        "        return g.random(self.n)\n"
+        "    def __iter__(self):\n"
+        "        r = np.random.default_rng(0)  # lint: stream-rng-ok\n"
+        "        yield r.random(2)\n"
+        "    def fetch(self, ix):\n"
+        "        return np.random.default_rng(int(ix)).random(4)\n")
+    assert lint_paths([str(ok)], semantic=False) == []
+
+    elsewhere = tmp_path / "notdata.py"
+    elsewhere.write_text(bad.read_text())
+    assert lint_paths([str(elsewhere)], semantic=False) == []
+
+
 # ---------------------------------------------------------------------------
 # (c) retracing guards: the verified program is the program that runs
 # ---------------------------------------------------------------------------

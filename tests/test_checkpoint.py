@@ -58,11 +58,12 @@ def test_overlapping_saves_block_until_inflight_done(tmp_path, monkeypatch):
     order = []
     real_save = ckpt_mod.save
 
-    def gated_save(path, params, opt_state=None, step=0, meta=None):
+    def gated_save(path, params, opt_state=None, step=0, meta=None, *,
+                   extra=None, keep=None):
         order.append(("start", step))
         if step == 1:
             release.wait(timeout=10)
-        real_save(path, params, opt_state, step, meta)
+        real_save(path, params, opt_state, step, meta, extra=extra, keep=keep)
         order.append(("done", step))
 
     monkeypatch.setattr(ckpt_mod, "save", gated_save)
@@ -88,6 +89,50 @@ def test_overlapping_saves_block_until_inflight_done(tmp_path, monkeypatch):
     ac.wait()
     assert order == [("start", 1), ("done", 1), ("start", 2), ("done", 2)]
     assert restore(str(tmp_path / "ck"))[2] == 2
+
+
+def test_async_retry_transient_io_then_succeeds(tmp_path):
+    """Two transient I/O failures at the write seam are retried with
+    exponential backoff (injectable sleep — no wall-clock in the test) and
+    the third attempt lands; obs counts saves and retries."""
+    from repro.obs import MetricsRegistry
+    from repro.resilience.faults import FaultPlan, active
+
+    sleeps = []
+    obs = MetricsRegistry("events")
+    ac = AsyncCheckpointer(retries=2, backoff=0.05, sleep=sleeps.append,
+                           obs=obs)
+    with active(FaultPlan.single("ckpt/io_write", action="io", count=2)):
+        ac.save(str(tmp_path / "ck"), PARAMS, None, 1, {})
+        ac.wait()
+    assert sleeps == [0.05, 0.1]            # backoff * 2**attempt
+    assert restore(str(tmp_path / "ck"))[2] == 1
+    assert obs.counters["ckpt/saves"] == 1
+    assert obs.counters["ckpt/retries"] == 2
+    assert "ckpt/failures" not in obs.counters
+
+
+def test_async_retry_exhaustion_fails_and_counts(tmp_path):
+    """More consecutive I/O failures than retries: the error surfaces on
+    wait(), the failure is counted, and NO manifest was committed."""
+    import os
+
+    from repro.obs import MetricsRegistry
+    from repro.resilience.faults import FaultPlan, InjectedIOError, active
+
+    sleeps = []
+    obs = MetricsRegistry("events")
+    ac = AsyncCheckpointer(retries=2, backoff=1.0, sleep=sleeps.append,
+                           obs=obs)
+    with active(FaultPlan.single("ckpt/io_write", action="io", count=10)):
+        ac.save(str(tmp_path / "ck"), PARAMS, None, 1, {})
+        with pytest.raises(InjectedIOError):
+            ac.wait()
+    assert sleeps == [1.0, 2.0]             # 3 attempts = 2 sleeps
+    assert obs.counters["ckpt/failures"] == 1
+    assert obs.counters["ckpt/retries"] == 2
+    assert not any(n.startswith("manifest-")
+                   for n in os.listdir(tmp_path / "ck"))
 
 
 def test_fit_midloop_crash_leaves_checkpoint_durable(tmp_path):

@@ -1,0 +1,359 @@
+"""Crash-safe DP training: the resilience subsystem's invariant, end to end.
+
+The invariant under test — kill-anywhere + resume => bitwise-identical final
+params AND bit-identical ε versus the uninterrupted run, never
+under-counting privacy — plus the layers that deliver it:
+
+  * counter-based samplers: ``at_step(k)`` == the k-th iterated draw,
+    resumed streams continue (never replay) the sequence,
+  * fault plans: spec parsing, at/count firing, env-var transport,
+    registered points match the ``fault_point`` call sites in src,
+  * durable checkpoints: typed ``CheckpointCorruptError`` over
+    truncated/bad-digest/missing-member snapshots, fallback to the last
+    good manifest, the torn-window regression, keep-last-k GC,
+  * resume parity: (fit k -> checkpoint -> restore -> fit N-k) bitwise ==
+    fit N, across private / nonprivate / streaming engines — and the
+    seeded under-count mutation (replaying the stream from step 0) is
+    CAUGHT by the same comparison,
+  * chaos: subprocess runs killed at registered fault points (smoke case in
+    tier-1, the full per-point matrix slow-marked for the 8-device job).
+"""
+import json
+import os
+import subprocess
+import sys
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointCorruptError, gc, load, save
+from repro.data import PoissonSampler, ShuffleSampler
+from repro.data.sampler import step_rng
+from repro.resilience import chaos
+from repro.resilience.faults import (ENV_VAR, KNOWN_POINTS, FaultInjected,
+                                     FaultPlan, FaultSpec, active)
+
+PARAMS = {"w": np.arange(6, dtype=np.float32).reshape(2, 3)}
+OPT = {"count": np.int32(3), "mom": np.ones(4, np.float32)}
+
+
+# -- exactly-once samplers ----------------------------------------------------
+
+@pytest.mark.parametrize("make", [
+    lambda **kw: PoissonSampler(n=64, q=0.3, seed=7, **kw),
+    lambda **kw: ShuffleSampler(n=64, batch_size=16, seed=7, **kw),
+], ids=["poisson", "shuffle"])
+def test_at_step_equals_iteration_and_resume_continues(make):
+    """at_step(k) is the k-th iterated draw, and an iterator started at
+    start_step=k yields exactly the tail of the full stream — the property
+    that makes resume continue (not replay) the charged draws."""
+    full = [ix.tolist() for ix in make(steps=8)]
+    assert [make(steps=8).at_step(k).tolist() for k in range(8)] == full
+    assert [ix.tolist() for ix in make(steps=5, start_step=3)] == full[3:]
+
+
+def test_step_rng_is_history_free_and_keyed():
+    """Same (seed, step) -> identical stream regardless of what was drawn
+    before; different step or seed -> different stream."""
+    a = step_rng(5, 9).random(32)
+    _burn = step_rng(5, 3).random(1000)     # unrelated draws change nothing
+    np.testing.assert_array_equal(step_rng(5, 9).random(32), a)
+    assert not np.array_equal(step_rng(5, 10).random(32), a)
+    assert not np.array_equal(step_rng(6, 9).random(32), a)
+
+
+def test_poisson_draw_matches_bernoulli_q():
+    """The per-step draw is still a proper Bernoulli(q) per example."""
+    s = PoissonSampler(n=20_000, q=0.1, seed=0)
+    sizes = [len(s.at_step(k)) for k in range(20)]
+    assert abs(np.mean(sizes) / 20_000 - 0.1) < 0.01
+
+
+# -- fault plans --------------------------------------------------------------
+
+def test_fault_spec_parse_and_validation():
+    s = FaultSpec.parse("fit/step_end:raise:at=3:count=2")
+    assert (s.point, s.action, s.at, s.count) == ("fit/step_end", "raise",
+                                                  3, 2)
+    assert FaultSpec.parse("ckpt/io_write").action == "exit"
+    with pytest.raises(ValueError, match="unknown fault point"):
+        FaultSpec(point="nope/nothing")
+    with pytest.raises(ValueError, match="unknown fault action"):
+        FaultSpec(point="fit/step_end", action="explode")
+    with pytest.raises(ValueError, match="at/count"):
+        FaultSpec(point="fit/step_end", at=0)
+
+
+def test_fault_plan_fires_on_at_window_only():
+    from repro.resilience.faults import fault_point
+    plan = FaultPlan.single("fit/step_end", action="raise", at=3, count=2)
+    with active(plan):
+        fault_point("fit/step_end")             # hit 1
+        fault_point("fit/step_end")             # hit 2
+        fault_point("ckpt/before_state")        # other point: no counter
+        with pytest.raises(FaultInjected):
+            fault_point("fit/step_end")         # hit 3: fires
+        with pytest.raises(FaultInjected):
+            fault_point("fit/step_end")         # hit 4: fires (count=2)
+        fault_point("fit/step_end")             # hit 5: window over
+    assert plan.hits["fit/step_end"] == 5
+    assert plan.fired == ["fit/step_end", "fit/step_end"]
+
+
+def test_fault_plan_env_round_trip(monkeypatch):
+    from repro.resilience import faults
+    plan = FaultPlan.single("ckpt/io_write", action="io", count=3)
+    monkeypatch.setenv(ENV_VAR, plan.to_json())
+    prev = faults.active_plan()
+    try:
+        faults._install_from_env()
+        got = faults.active_plan()
+        assert got is not None and got.specs == plan.specs
+    finally:
+        faults.activate(prev)
+
+
+def test_known_points_match_call_sites():
+    """Every registered point has a fault_point() call site in src, and
+    every call site names a registered point — the chaos matrix can't
+    silently miss an injectable instant."""
+    import re
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    called = set()
+    for root, _dirs, names in os.walk(src):
+        for name in names:
+            # faults.py defines the mechanism (its docstring shows the
+            # call syntax); every other file is a real call site
+            if not name.endswith(".py") or name == "faults.py":
+                continue
+            with open(os.path.join(root, name)) as f:
+                called.update(re.findall(r'fault_point\("([^"]+)"\)',
+                                         f.read()))
+    assert called == set(KNOWN_POINTS)
+
+
+# -- durable checkpoints: corruption taxonomy ---------------------------------
+
+def _newest_state(path):
+    rec = json.load(open(os.path.join(path, load(path).manifest)))
+    return os.path.join(path, rec["state"]), rec
+
+
+def test_corrupt_truncated_state_falls_back_then_raises(tmp_path):
+    """Truncated newest blob -> fallback to the previous manifest with a
+    warning; with every snapshot truncated -> typed error naming the file
+    and reporting no good fallback."""
+    d = str(tmp_path / "ck")
+    save(d, PARAMS, OPT, 1, {})
+    save(d, {"w": PARAMS["w"] * 2}, OPT, 2, {})
+    spath, _ = _newest_state(d)
+    with open(spath, "r+b") as f:
+        f.truncate(8)
+    with pytest.warns(RuntimeWarning, match="skipped corrupt"):
+        snap = load(d)
+    assert snap.step == 1                   # last good manifest
+    for name in os.listdir(d):              # now truncate EVERYTHING
+        if name.startswith("state-"):
+            with open(os.path.join(d, name), "r+b") as f:
+                f.truncate(8)
+    with pytest.raises(CheckpointCorruptError, match="last good manifest: "
+                                                     "none") as ei:
+        load(d)
+    assert ei.value.offending.startswith("state-")
+    assert ei.value.fallback is None
+
+
+def test_corrupt_bad_digest_names_offending_file(tmp_path):
+    d = str(tmp_path / "ck")
+    save(d, PARAMS, OPT, 5, {})
+    spath, rec = _newest_state(d)
+    data = open(spath, "rb").read()
+    with open(spath, "wb") as f:            # same length, flipped bytes
+        f.write(data[:-4] + bytes(b ^ 0xFF for b in data[-4:]))
+    with pytest.raises(CheckpointCorruptError, match="digest mismatch"):
+        load(d)
+
+
+def test_corrupt_missing_member_and_missing_state(tmp_path):
+    d = str(tmp_path / "ck")
+    save(d, PARAMS, OPT, 5, {})
+    spath, rec = _newest_state(d)
+    # rewrite the blob without any params.* member, fix up the digest so
+    # only the member check can object
+    np.savez(spath, **{"opt.count": np.int32(1)})
+    rec["sha256"] = chaos.hashlib.sha256(open(spath, "rb").read()).hexdigest()
+    manifest = sorted(n for n in os.listdir(d) if n.startswith("manifest-"))[-1]
+    json.dump(rec, open(os.path.join(d, manifest), "w"))
+    with pytest.raises(CheckpointCorruptError, match="no params"):
+        load(d)
+    os.remove(spath)                        # referenced blob gone entirely
+    with pytest.raises(CheckpointCorruptError, match="is missing"):
+        load(d)
+
+
+def test_torn_window_regression(tmp_path):
+    """THE window the old double-os.replace layout could tear in: state
+    bytes durable, metadata not.  A crash there must leave the directory
+    restoring the PREVIOUS snapshot — the new blob is unreferenced junk,
+    not a half-committed checkpoint."""
+    d = str(tmp_path / "ck")
+    save(d, PARAMS, OPT, 1, {"tag": "good"})
+    plan = FaultPlan.single("ckpt/after_state_before_manifest",
+                            action="raise")
+    with active(plan), pytest.raises(FaultInjected):
+        save(d, {"w": PARAMS["w"] * 9}, OPT, 2, {"tag": "torn"})
+    snap = load(d)                          # no warning, no fallback needed:
+    assert snap.step == 1                   # the commit never happened
+    assert snap.meta["tag"] == "good"
+    np.testing.assert_array_equal(snap.params["w"], PARAMS["w"])
+    # and the next save simply commits over the junk blob
+    save(d, {"w": PARAMS["w"] * 3}, OPT, 3, {}, keep=2)
+    assert load(d).step == 3
+
+
+def test_gc_keeps_last_k_and_referenced_blobs(tmp_path):
+    d = str(tmp_path / "ck")
+    for i in range(5):
+        save(d, {"w": PARAMS["w"] * (i + 1)}, OPT, i + 1, {})
+    deleted = gc(d, keep=2)
+    names = sorted(os.listdir(d))
+    manifests = [n for n in names if n.startswith("manifest-")]
+    blobs = [n for n in names if n.startswith("state-")]
+    assert len(manifests) == 2 and len(blobs) == 2
+    assert load(d).step == 5
+    assert len(deleted) == 6                # 3 manifests + 3 blobs
+    with pytest.raises(ValueError, match="keep must be"):
+        gc(d, keep=0)
+
+
+# -- resume parity: the invariant, in-process ---------------------------------
+
+def _make_session(engine, steps=6, seed=0):
+    from repro.core import DPConfig
+    from repro.core.session import PrivacySession, TrainConfig
+    tc = TrainConfig(steps=steps, n_data=32, q=0.25, seq_len=8,
+                     physical_batch=4, seed=seed, lr=0.1, optimizer="sgd",
+                     momentum=0.9, log_every=10 ** 9)
+    dp = DPConfig(engine=engine, clip_norm=0.1, noise_multiplier=0.8)
+    return PrivacySession.from_config("qwen2-0.5b", dp, tc), dp, tc
+
+
+@pytest.mark.parametrize("engine", ["masked_pe", "nonprivate",
+                                    "masked_fused_stream"])
+def test_resume_parity_bitwise(tmp_path, engine):
+    """fit(6) == fit(3) -> checkpoint -> restore -> fit(3): params digest
+    and ε (via float.hex — bit equality, not isclose) identical."""
+    from repro.core.session import PrivacySession
+    base, _, _ = _make_session(engine)
+    base.fit(steps=6)
+    want = chaos.outcome(base)
+
+    d = str(tmp_path / "ck")
+    s1, dp, tc = _make_session(engine)
+    s1.fit(steps=3, ckpt=d, ckpt_every=2)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")      # an opt-state fallback = failure
+        s2 = PrivacySession.restore(d, "qwen2-0.5b", dp, tc)
+    assert int(s2.state.step) == 3
+    s2.fit(steps=3)
+    got = chaos.outcome(s2)
+    assert got["step"] == want["step"] == 6
+    assert got["params_sha256"] == want["params_sha256"]
+    assert got["eps_hex"] == want["eps_hex"]
+
+
+def test_under_count_mutation_is_caught(tmp_path):
+    """The seeded mutation ISSUE.md requires the suite to catch: a resume
+    that replays the sampler stream from step 0 (the classic
+    sampler/accountant mismatch) must NOT pass the bitwise comparison."""
+    from repro.core.session import PrivacySession
+    import jax.numpy as jnp
+    base, _, _ = _make_session("masked_pe")
+    base.fit(steps=6)
+    want = chaos.outcome(base)
+
+    d = str(tmp_path / "ck")
+    s1, dp, tc = _make_session("masked_pe")
+    s1.fit(steps=3, ckpt=d, ckpt_every=2)
+    s2 = PrivacySession.restore(d, "qwen2-0.5b", dp, tc)
+    # the mutation: forget the restored position, replay draws 0..2 —
+    # exactly what a host-stateful sequential sampler would do
+    s2.state = s2.state._replace(step=jnp.asarray(0, jnp.int32))
+    s2.fit(steps=3)
+    got = chaos.outcome(s2)
+    assert got["params_sha256"] != want["params_sha256"], \
+        "replaying charged draws went undetected — the parity check is dead"
+
+
+def test_restore_mismatched_optimizer_warns(tmp_path):
+    """A checkpoint whose opt state doesn't match the session's optimizer
+    restores params but WARNS that bitwise resume is off the table."""
+    import dataclasses
+
+    from repro.core.session import PrivacySession
+    d = str(tmp_path / "ck")
+    s1, dp, tc = _make_session("nonprivate", steps=2)
+    s1.fit(steps=2, ckpt=d)
+    tc_adam = dataclasses.replace(tc, optimizer="adamw")
+    with pytest.warns(RuntimeWarning, match="NOT be bitwise"):
+        s2 = PrivacySession.restore(d, "qwen2-0.5b", dp, tc_adam)
+    assert int(s2.state.step) == 2
+
+
+def test_fit_guard_accounts_for_restored_steps(tmp_path):
+    """target_eps calibration guard counts ABSOLUTE steps: a restored
+    session refusing to run past its calibrated horizon."""
+    from repro.core import DPConfig
+    from repro.core.session import PrivacySession, TrainConfig
+    tc = TrainConfig(steps=4, n_data=32, q=0.25, seq_len=8, physical_batch=4,
+                     seed=0, target_eps=8.0, log_every=10 ** 9)
+    dp = DPConfig(engine="masked_pe", clip_norm=0.1)
+    d = str(tmp_path / "ck")
+    s1 = PrivacySession.from_config("qwen2-0.5b", dp, tc)
+    s1.fit(steps=2, ckpt=d)
+    s2 = PrivacySession.restore(d, "qwen2-0.5b", dp, tc)
+    with pytest.raises(ValueError, match="calibrated"):
+        s2.fit(steps=3)                     # 2 + 3 > 4
+    s2.fit(steps=2)                         # exactly to the horizon: fine
+
+
+# -- chaos: subprocess kill + resume ------------------------------------------
+
+def test_chaos_smoke_subprocess(tmp_path):
+    """One real kill: `python -m repro.resilience.chaos smoke` crashes a
+    subprocess run inside the torn window via os._exit and proves the
+    resumed run is bitwise identical to the uninterrupted one."""
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.resilience.chaos", "smoke",
+         "--workdir", str(tmp_path)],
+        capture_output=True, text=True, timeout=580)
+    assert proc.returncode == 0, f"chaos smoke failed:\n{proc.stdout}\n" \
+                                 f"{proc.stderr}"
+    rec = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert rec["match"] and rec["fired"]
+    assert rec["crash_returncode"] == chaos.DEFAULT_EXIT_CODE
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("point", chaos.TRAIN_POINTS)
+def test_chaos_full_matrix(tmp_path, point, chaos_baseline):
+    """Every registered training fault point, one kill + resume each,
+    sharing a single uninterrupted baseline run per session."""
+    rec = chaos.run_case(point, workdir=str(tmp_path),
+                         baseline_out=chaos_baseline)
+    assert rec["fired"], rec
+    assert rec["match"], rec
+
+
+@pytest.fixture(scope="session")
+def chaos_baseline(tmp_path_factory):
+    """One uninterrupted subprocess baseline, shared by the slow matrix."""
+    d = tmp_path_factory.mktemp("chaos-baseline")
+    out = os.path.join(str(d), "baseline.json")
+    proc = chaos._spawn(chaos._run_args(
+        ckpt=os.path.join(str(d), "ckpt"), out=out, arch="qwen2-0.5b",
+        engine="masked_pe", steps=6, ckpt_every=2, seed=0, n_data=32,
+        q=0.25, seq_len=8, physical_batch=4, sigma=0.8))
+    assert proc.returncode == 0, proc.stderr
+    return out

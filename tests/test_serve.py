@@ -541,3 +541,117 @@ print(json.dumps({"match": match, "launch": out["launch"],
     assert rec["hits"] >= 1, rec
     assert rec["launch"] == {"executor": "mesh",
                              "mesh": {"data": 2, "model": 2}, "layout": "dp"}
+
+
+# -- exception safety: no slot leaks, ever ----------------------------------
+
+def test_mid_iteration_exception_recovers_slots(qwen):
+    """A raise mid-iteration (after the fused step, before retirement — the
+    exact window a leak would hide in) must evict every in-flight slot,
+    finish the requests with FINISH_ERROR, leave the pool consistent, and
+    leave the engine usable for the next batch."""
+    from repro.resilience.faults import FaultInjected, FaultPlan, active
+    from repro.serve.request import FINISH_ERROR
+
+    vocab = qwen.model_cfg.vocab
+    engine = ServeEngine.from_session(qwen, max_slots=3, max_len=MAX_LEN)
+    reqs = [Request(prompt=p, max_new_tokens=4)
+            for p in _prompts(vocab, [3, 5, 4], seed=31)]
+    plan = FaultPlan.single("serve/mid_iteration", action="raise", at=2)
+    with active(plan), pytest.raises(FaultInjected):
+        engine.run(reqs)
+    sch = engine.scheduler
+    assert not sch.active                       # nobody left in flight
+    assert engine.pool.n_free == 3              # every slot returned
+    assert not engine.pool.occupied
+    engine.pool.assert_consistent()
+    errored = [s for s in sch.finished if s.finish_reason == FINISH_ERROR]
+    assert len(errored) == 3
+    # the engine is not poisoned: a fresh batch runs to completion and
+    # matches the no-fault scheduler output
+    sch.finished = []
+    out = engine.run([Request(prompt=p, max_new_tokens=3)
+                      for p in _prompts(vocab, [4, 2], seed=32)])
+    assert len(out["results"]) == 2
+    assert all(r["finish_reason"] == "length" for r in out["results"])
+
+
+def test_failed_admission_requeues_and_frees_slot(qwen, monkeypatch):
+    """An exception during admission (here: the prefix-copy dispatch) frees
+    the claimed slot and puts the request back at the FRONT of the queue —
+    nothing leaked, nothing dropped."""
+    vocab = qwen.model_cfg.vocab
+    engine = ServeEngine.from_session(qwen, max_slots=2, max_len=MAX_LEN)
+    st = engine.submit(Request(prompt=_prompts(vocab, [4], seed=33)[0],
+                               max_new_tokens=3))
+
+    def boom(slot, tokens):
+        raise RuntimeError("device copy failed")
+
+    monkeypatch.setattr(engine.pool, "share_prefix", boom)
+    with pytest.raises(RuntimeError, match="device copy failed"):
+        engine.step()
+    sch = engine.scheduler
+    assert list(sch.queue) == [st]              # requeued, front of queue
+    assert st.slot is None and st.status == "queued"
+    assert engine.pool.n_free == 2
+    engine.pool.assert_consistent()
+    monkeypatch.undo()
+    out = engine.run()                          # and it still completes
+    assert len(out["results"]) == 1
+    assert out["results"][0]["finish_reason"] == "length"
+
+
+def test_cancel_queued_and_active(qwen):
+    """cancel(rid): queued requests never claim a slot; active ones retire
+    mid-flight with their slot evicted and partial output preserved."""
+    from repro.serve.request import FINISH_CANCELLED
+
+    vocab = qwen.model_cfg.vocab
+    engine = ServeEngine.from_session(qwen, max_slots=1, max_len=MAX_LEN)
+    active_st = engine.submit(Request(prompt=_prompts(vocab, [3], seed=34)[0],
+                                      max_new_tokens=8))
+    queued_st = engine.submit(Request(prompt=_prompts(vocab, [4], seed=35)[0],
+                                      max_new_tokens=8))
+    for _ in range(4):                          # first request decoding,
+        engine.step()                           # second stuck in queue
+    sch = engine.scheduler
+    assert sch.cancel(queued_st.rid)
+    assert queued_st.finish_reason == FINISH_CANCELLED
+    assert not sch.queue
+    n_before = len(active_st.generated)
+    assert n_before >= 1
+    assert sch.cancel(active_st.rid)
+    assert active_st.finish_reason == FINISH_CANCELLED
+    assert len(active_st.generated) == n_before     # partial output kept
+    assert not sch.active and engine.pool.n_free == 1
+    engine.pool.assert_consistent()
+    assert not sch.cancel(queued_st.rid)            # already finished
+    assert not sch.cancel(10_000)                   # unknown rid
+
+
+def test_assert_consistent_catches_violations(qwen):
+    """The consistency check actually fails on each class of corruption it
+    claims to cover (a check that can't fail protects nothing)."""
+    pool = CachePool(qwen.model, qwen.state.params, 2, 16)
+    s = pool.insert()
+    pool.assert_consistent()
+
+    pool._free.append(s)                            # slot both free+occupied
+    with pytest.raises(AssertionError, match="prefix index|nonzero|pinned"
+                                             "|duplicate|free"):
+        pool.positions[s] = 3
+        pool.assert_consistent()
+    pool._free.remove(s)
+    pool.positions[s] = 0
+
+    pool._refcount[s] = -1                          # unbalanced unpin
+    with pytest.raises(AssertionError, match="negative refcount"):
+        pool.assert_consistent()
+    pool._refcount[s] = 0
+
+    pool.prefix_index.register(1 - s, [1, 2, 3])    # registered but free
+    with pytest.raises(AssertionError, match="prefix index"):
+        pool.assert_consistent()
+    pool.prefix_index.unregister(1 - s)
+    pool.assert_consistent()
