@@ -14,6 +14,8 @@ trajectory is those files' git history).
   bench_batchsize   -> Fig. A.1          (throughput vs physical batch size)
   bench_serving     -> (beyond the paper) static vs continuous vs chunked
                        prefill vs prefix sharing on a shared-prefix trace
+  bench_sampler     -> Table 1 extended: throughput at EQUAL eps across the
+                       registered sampler menu (shuffle charged UNAMPLIFIED)
 
 ``--smoke`` runs the CI subset (bench_step + bench_memory + bench_breakdown
 + bench_serving on reduced configs) — fast enough for the 8-device job,
@@ -30,8 +32,9 @@ import traceback
 def _modules():
     try:
         from . import (bench_batchsize, bench_breakdown, bench_memory,
-                       bench_precision, bench_recompile, bench_scaling,
-                       bench_serving, bench_step, bench_throughput)
+                       bench_precision, bench_recompile, bench_sampler,
+                       bench_scaling, bench_serving, bench_step,
+                       bench_throughput)
     except ImportError:
         # `python benchmarks/run.py` (no package context, e.g. the CI smoke
         # step): import absolutely with the repo root on sys.path
@@ -40,12 +43,14 @@ def _modules():
             os.path.abspath(__file__))))
         from benchmarks import (bench_batchsize, bench_breakdown,
                                 bench_memory, bench_precision,
-                                bench_recompile, bench_scaling,
-                                bench_serving, bench_step, bench_throughput)
+                                bench_recompile, bench_sampler,
+                                bench_scaling, bench_serving, bench_step,
+                                bench_throughput)
     all_mods = (bench_throughput, bench_memory, bench_recompile,
                 bench_precision, bench_breakdown, bench_step, bench_scaling,
-                bench_batchsize, bench_serving)
-    smoke_mods = (bench_step, bench_memory, bench_breakdown, bench_serving)
+                bench_batchsize, bench_serving, bench_sampler)
+    smoke_mods = (bench_step, bench_memory, bench_breakdown, bench_serving,
+                  bench_sampler)
     return all_mods, smoke_mods
 
 

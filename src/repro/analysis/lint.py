@@ -27,14 +27,17 @@ undermine DP before a jaxpr ever exists:
         ``mean``, ``max`` ... — ``float()`` of a per-example array throws
         at runtime, so the coercion itself enforces scalar-ness).  Known
         released values are annotated ``# lint: dp-released``.
-  L006  sequential host RNG in a sampling stream (``data/``): a
-        ``default_rng`` / ``RandomState`` / ``PCG64`` / ``MT19937`` built
-        inside a yield-bearing function or an ``__iter__``/``at_step``
-        method makes draw k depend on draws 0..k-1, so a resumed run
-        replays draws the accountant already charged (the
-        sampler/accountant mismatch the resilience subsystem exists to
-        prevent).  Use :func:`repro.data.sampler.step_rng` — a Philox
-        generator keyed by ``(seed, step)`` — or annotate a genuinely
+  L006  sequential host RNG in a sampling stream: a ``default_rng`` /
+        ``RandomState`` / ``PCG64`` / ``MT19937`` built inside a
+        yield-bearing function or an ``__iter__``/``at_step`` method makes
+        draw k depend on draws 0..k-1, so a resumed run replays draws the
+        accountant already charged (the sampler/accountant mismatch the
+        resilience subsystem exists to prevent).  Scope is BOTH path-driven
+        (every file under ``data/``) and registration-driven (every class
+        in the sampler registry, wherever it is defined — see
+        :func:`check_registered_samplers`).  Use
+        :func:`repro.data.sampler.step_rng` — a Philox generator keyed by
+        ``(seed, domain, step)`` — or annotate a genuinely
         stream-order-free use with ``# lint: stream-rng-ok``.
 
 ``lint_paths`` is pure AST for L001/L002/L005 (no imports of the linted
@@ -169,16 +172,39 @@ _SAMPLING_PARTS = {"data"}
 _STREAM_METHODS = {"__iter__", "__next__", "at_step"}
 
 
-def _check_sampling_rng(path: str, tree: ast.AST,
-                        lines: Sequence[str]) -> List[Finding]:
-    """L006: sampling streams must use counter-based RNG (see docstring)."""
-    parts = os.path.normpath(path).split(os.sep)
-    if not any(p in _SAMPLING_PARTS for p in parts):
-        return []
+def _stream_functions(tree: ast.AST, classes: Optional[set]):
+    """The function nodes L006 scopes to: with ``classes=None`` every
+    yield-bearing function / stream method in the file (the path-driven
+    ``data/`` scope); with a class-name set, only methods of those classes
+    (the registration-driven scope — registered samplers are sampling
+    streams WHEREVER they live)."""
+    if classes is None:
+        for fn in ast.walk(tree):
+            if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield fn
+        return
+    for cls in ast.walk(tree):
+        if isinstance(cls, ast.ClassDef) and cls.name in classes:
+            for fn in ast.walk(cls):
+                if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    yield fn
+
+
+def _check_sampling_rng(path: str, tree: ast.AST, lines: Sequence[str], *,
+                        classes: Optional[set] = None) -> List[Finding]:
+    """L006: sampling streams must use counter-based RNG (see docstring).
+
+    ``classes=None`` is the path-driven scope (files under ``data/``);
+    a set of class names is the registration-driven scope used by
+    :func:`check_registered_samplers`, which follows the sampler registry
+    to wherever its classes are defined.
+    """
+    if classes is None:
+        parts = os.path.normpath(path).split(os.sep)
+        if not any(p in _SAMPLING_PARTS for p in parts):
+            return []
     out = []
-    for fn in ast.walk(tree):
-        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
-            continue
+    for fn in _stream_functions(tree, classes):
         has_yield = any(isinstance(n, (ast.Yield, ast.YieldFrom))
                         for n in ast.walk(fn))
         if not has_yield and fn.name not in _STREAM_METHODS:
@@ -199,6 +225,36 @@ def _check_sampling_rng(path: str, tree: ast.AST,
                 f"charged; key a counter-based generator per step "
                 f"(data/sampler.step_rng) or annotate a stream-order-free "
                 f"use with `# {STREAM_RNG_OK}`"))
+    return out
+
+
+def check_registered_samplers() -> List[Finding]:
+    """L006, registration-driven: every class in the sampler registry
+    (:data:`repro.data.sampler.SAMPLERS`) is checked in the file where it is
+    DEFINED — a sampler registered from outside ``data/`` cannot dodge the
+    sequential-RNG check by living elsewhere."""
+    import inspect
+
+    from ..data.sampler import SAMPLERS
+
+    by_file = {}
+    for cls in set(SAMPLERS.values()):
+        try:
+            src_file = inspect.getsourcefile(cls)
+        except TypeError:
+            src_file = None
+        if src_file:
+            by_file.setdefault(src_file, set()).add(cls.__name__)
+    out: List[Finding] = []
+    for path, classes in sorted(by_file.items()):
+        with open(path) as f:
+            src = f.read()
+        try:
+            tree = ast.parse(src, path)
+        except SyntaxError:
+            continue                    # lint_paths reports L000 for these
+        out.extend(_check_sampling_rng(path, tree, src.splitlines(),
+                                       classes=classes))
     return out
 
 
@@ -376,4 +432,7 @@ def lint_paths(paths: Iterable[str], *, semantic: bool = True
     if semantic:
         findings.extend(check_engine_costmodel())
         findings.extend(check_donation_consistency())
-    return findings
+        findings.extend(check_registered_samplers())
+    # registration-driven L006 can re-visit a file the path scan already
+    # covered (data/sampler.py itself): report each finding once
+    return list(dict.fromkeys(findings))

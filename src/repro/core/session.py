@@ -5,8 +5,12 @@ the sampler, clipping engine, accountant and optimizer are engineered as one
 coherent system; this module is that system's single entry point (the role
 ``PrivacyEngine`` plays in Opacus).  A session composes:
 
-  * the :class:`~repro.data.PoissonSampler` (proper Bernoulli(q) draws — the
-    "no shortcuts" requirement) and the :class:`~repro.data.BatchMemoryManager`
+  * a sampler resolved from the decorator registry in
+    :mod:`repro.data.sampler` (``TrainConfig.sampler``; the default
+    ``poisson`` is proper Bernoulli(q) draws — the "no shortcuts"
+    requirement — with ``balls_and_bins`` / ``shuffle`` / ``full_batch``
+    as registered alternatives, each accounted under its own valid bound)
+    and the :class:`~repro.data.BatchMemoryManager`
     (fixed physical shapes, so jit compiles exactly once),
   * a clipping engine resolved from the decorator registry in
     :mod:`repro.core.clipping` (unknown names fail listing what IS registered),
@@ -47,7 +51,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..data import BatchMemoryManager, PoissonSampler
+from ..data import BatchMemoryManager, make_sampler
+from ..data.sampler import SAMPLER_STREAM_VERSION
 from ..launch.executor import LaunchConfig, build_executor
 from ..obs import as_registry
 from ..resilience.faults import fault_point
@@ -68,7 +73,8 @@ class TrainConfig:
     n_data: int = 512
     seq_len: int = 16
     physical_batch: int = 8
-    q: float = 0.25                      # Poisson sampling rate (L = q * N)
+    q: float = 0.25                      # nominal sampling rate (L = q * N)
+    sampler: str = "poisson"             # registered sampler name
     target_eps: Optional[float] = None   # auto-calibrate sigma when set
     delta: Optional[float] = None        # default: 1 / (10 * n_data)
     lr: float = 1e-3
@@ -123,6 +129,12 @@ class PrivacySession:
                  launch: Optional[LaunchConfig] = None,
                  obs=None):
         dp.validate()                       # fail fast, listing the registry
+        # resolve the sampler NOW (unknown names / bad (n, q) fail at
+        # construction, listing the registry) and read back its EFFECTIVE
+        # per-step participation rate — what the accountant must charge
+        # (e.g. shuffle's batch_size/n, balls-and-bins' 1/bins, full's 1.0)
+        self._sampler_q = float(make_sampler(
+            train.sampler, n=train.n_data, q=train.q, seed=train.seed).q)
         self.model = model
         self.model_cfg = model_cfg
         self.dp = dp
@@ -181,12 +193,21 @@ class PrivacySession:
                                           hasattr(model_cfg, "reduced")) \
                 else model_cfg
             model = build(cfg)
-        L = train_cfg.q * train_cfg.n_data
+        # the sampler probe pins L and the accounting rate to the sampling
+        # that actually happens (shuffle rounds q*n to a batch size,
+        # balls-and-bins rounds 1/q to a bin count, full_batch is q=1)
+        probe = make_sampler(train_cfg.sampler, n=train_cfg.n_data,
+                             q=train_cfg.q, seed=train_cfg.seed)
+        L = probe.expected_batch_size
         if not dp_cfg.private:
             sigma = 0.0
         elif train_cfg.target_eps is not None:
-            sigma = calibrate_sigma(train_cfg.target_eps, train_cfg.q,
-                                    train_cfg.steps, train_cfg.resolved_delta)
+            # calibrated under the bound VALID for this sampler: shortcut
+            # samplers (unamplified accounting) get the larger sigma their
+            # true cost demands instead of borrowing amplification
+            sigma = calibrate_sigma(train_cfg.target_eps, probe.q,
+                                    train_cfg.steps, train_cfg.resolved_delta,
+                                    sampler=train_cfg.sampler)
         else:
             sigma = dp_cfg.noise_multiplier
         dp_cfg = dataclasses.replace(dp_cfg, noise_multiplier=sigma,
@@ -233,14 +254,35 @@ class PrivacySession:
             step=jnp.asarray(step, jnp.int32)))
         acc_state = (meta or {}).get("accountant")
         if acc_state is not None:
-            # exact re-seat: the checkpoint carries the full (q, sigma, steps)
-            # history, so restored eps is right even across schedule changes
+            # exact re-seat: the checkpoint carries the full (q, sigma,
+            # steps, sampler) history, so restored eps is right even across
+            # schedule or sampler changes
             session.accountant = PrivacyAccountant.from_state(acc_state)
         elif step and session.dp.private:
             # legacy checkpoint without accountant state: assume the
-            # checkpointed steps were taken at this session's (q, sigma)
-            session.accountant.step(session.train_cfg.q,
-                                    session.dp.noise_multiplier, steps=step)
+            # checkpointed steps were taken at this session's
+            # (q, sigma, sampler)
+            session.accountant.step(session._sampler_q,
+                                    session.dp.noise_multiplier, steps=step,
+                                    sampler=session.train_cfg.sampler)
+        ck_sampler = (meta or {}).get("sampler", "poisson")
+        if ck_sampler != session.train_cfg.sampler:
+            warnings.warn(
+                f"checkpoint was written by a {ck_sampler!r}-sampled run but "
+                f"this session resumes with {session.train_cfg.sampler!r}: "
+                f"the accountant history keeps the old steps' tags (eps "
+                f"stays correct) but the executed sampling distribution "
+                f"changes at the resume point", RuntimeWarning, stacklevel=2)
+        ck_stream = int((meta or {}).get("sampler_stream_version", 1))
+        if ck_stream != SAMPLER_STREAM_VERSION:
+            warnings.warn(
+                f"checkpoint's sampler streams are v{ck_stream} but this "
+                f"code draws v{SAMPLER_STREAM_VERSION} (domain-separated "
+                f"Philox keys): the resumed run's remaining draws come from "
+                f"the new streams, so it is NOT bitwise comparable to an "
+                f"uninterrupted v{ck_stream} run (the DP guarantee is "
+                f"unaffected — the accountant charges what is executed)",
+                RuntimeWarning, stacklevel=2)
         session.restored_meta = meta
         return session
 
@@ -317,7 +359,10 @@ class PrivacySession:
 
     def _account(self) -> None:
         if self.dp.private:
-            self.accountant.step(self.train_cfg.q, self.dp.noise_multiplier)
+            # charge the sampler's EFFECTIVE rate under its declared bound
+            # (amplified vs unamplified) — never the nominal q
+            self.accountant.step(self._sampler_q, self.dp.noise_multiplier,
+                                 sampler=self.train_cfg.sampler)
 
     def _jit_entries(self) -> int:
         """Total compiled-program cache entries across the session's jitted
@@ -360,16 +405,18 @@ class PrivacySession:
 
     def fit(self, dataset=None, steps: Optional[int] = None, *, ckpt: Optional[str] = None,
             ckpt_every: int = 0, ckpt_keep: int = 3) -> dict:
-        """Run the full loop: PoissonSampler -> BatchMemoryManager ->
-        accumulate/update -> accountant (-> checkpoint).  Returns the same
-        record the legacy ``launch.train.train`` driver produced.
+        """Run the full loop: sampler (``TrainConfig.sampler``) ->
+        BatchMemoryManager -> accumulate/update -> accountant
+        (-> checkpoint).  Returns the same record the legacy
+        ``launch.train.train`` driver produced.
 
         ``steps`` counts the optimizer steps THIS call takes; the sampler
         stream is indexed by the ABSOLUTE optimizer step, so a restored
-        session continues the counter-based Poisson draws exactly where the
+        session continues the counter-based draws exactly where the
         uninterrupted run would be (never replaying draws the restored
         accountant already charged — the exactly-once-sampling half of the
-        resume invariant).
+        resume invariant; every REGISTERED sampler satisfies the
+        ``at_step(k)``/``start_step`` contract, enforced at registration).
 
         Checkpoints are written asynchronously (device→host copy + npz write
         on a background thread): with ``ckpt_every=N`` a snapshot is enqueued
@@ -405,8 +452,8 @@ class PrivacySession:
                     f"on the population size — rebuild the session with "
                     f"TrainConfig(n_data={n}).")
         self._configure_train()
-        sampler = PoissonSampler(n=tc.n_data, q=tc.q, seed=tc.seed,
-                                 steps=steps, start_step=start)
+        sampler = make_sampler(tc.sampler, n=tc.n_data, q=tc.q, seed=tc.seed,
+                               steps=steps, start_step=start)
         # the memory manager places each physical batch through the executor
         # as it is produced (host->device/mesh transfer off the step path)
         bmm = BatchMemoryManager(dataset.fetch, tc.physical_batch,
@@ -520,8 +567,12 @@ class PrivacySession:
         eps, delta = self.privacy_spent()
         return {"arch": getattr(self.model_cfg, "name", "?"),
                 "engine": self.dp.engine, "eps": eps, "delta": delta,
-                # full (q, sigma, steps) history: restore() replays the exact
-                # composition instead of assuming constant (q, sigma)
+                "sampler": self.train_cfg.sampler,
+                # which Philox key layout drew the charged steps — restore()
+                # warns when resuming across a stream-version break
+                "sampler_stream_version": SAMPLER_STREAM_VERSION,
+                # full (q, sigma, steps, sampler) history: restore() replays
+                # the exact composition instead of assuming constant values
                 "accountant": self.accountant.state_dict()}
 
     def checkpoint_async(self, path: str, *, step: Optional[int] = None,
@@ -564,7 +615,8 @@ class PrivacySession:
         tc, dp = self.train_cfg, self.dp
         traj = []
         if dp.private and dp.noise_multiplier > 0:
-            per_step = rdp_mod.compose(tc.q, dp.noise_multiplier, 1)
+            per_step = rdp_mod.compose_for(tc.sampler, self._sampler_q,
+                                           dp.noise_multiplier, 1)
             acc = np.zeros_like(per_step)
             for _ in range(tc.steps):
                 acc = acc + per_step
@@ -575,7 +627,8 @@ class PrivacySession:
             "engine": dp.engine,
             "sigma": dp.noise_multiplier,
             "clip_norm": dp.clip_norm,
-            "q": tc.q,
+            "sampler": tc.sampler,
+            "q": self._sampler_q,
             "delta": tc.resolved_delta,
             "expected_batch_size": dp.expected_batch_size,
             "physical_batch": tc.physical_batch,

@@ -85,7 +85,7 @@ def lower_one(arch: str, shape_name: str, *, mesh: str = "production",
               layout: str = "2d", ce_chunk: int = 512,
               pe_bf16: bool = False, remat: bool = False,
               smoke: bool = False, prefill_chunk: int = 0,
-              verify: bool = False) -> dict:
+              verify: bool = False, sampler: str = "poisson") -> dict:
     cfg = _arch_config(arch, shape_name)
     if smoke:
         cfg = cfg.reduced()
@@ -116,9 +116,16 @@ def lower_one(arch: str, shape_name: str, *, mesh: str = "production",
     # the exact ShardingConstraints a mesh session would train with
     constraints = executor.constraints(engine)
 
+    # resolve through the registry (unknown names fail listing what IS
+    # registered) and record the accounting the planned run would be
+    # charged under — dry-run reports must not imply amplification a
+    # shortcut sampler doesn't have
+    from ..data.sampler import resolve_sampler
+    sampler_cls = resolve_sampler(sampler)
     rec = {"arch": arch, "shape": shape_name, "kind": shape.kind,
            "mesh": dict(executor.mesh.shape), "engine": engine,
-           "microbatches": mb, "unrolled": bool(unroll)}
+           "microbatches": mb, "unrolled": bool(unroll),
+           "sampler": {"kind": sampler, "accounting": sampler_cls.accounting}}
     t0 = time.time()
 
     if shape.kind == "prefill":
@@ -302,6 +309,10 @@ def main():
                     help="also lower the serving engine's chunked "
                          "prefill_step at this chunk size for decode shapes "
                          "(0 = skip)")
+    ap.add_argument("--sampler", default="poisson",
+                    help="registered sampler the planned run would use; "
+                         "recorded (with its accounting bound) in the "
+                         "dry-run report")
     ap.add_argument("--no-compile", action="store_true")
     ap.add_argument("--verify", action="store_true",
                     help="taint-check the DP invariants of each lowered "
@@ -335,7 +346,7 @@ def main():
                             pe_bf16=args.pe_bf16, remat=args.remat,
                             smoke=args.smoke,
                             prefill_chunk=args.prefill_chunk,
-                            verify=args.verify)
+                            verify=args.verify, sampler=args.sampler)
             rec["status"] = "ok"
             ok += 1
         except Exception as e:

@@ -18,6 +18,7 @@ from typing import Optional
 
 from ..core import DPConfig, clipping
 from ..core.session import PrivacySession, TrainConfig
+from ..data import available_samplers
 from ..data.synthetic import dataset_for_config
 from ..obs import add_cli_args, config_from_args, start_profile, stop_profile
 from .executor import LaunchConfig
@@ -30,7 +31,8 @@ def make_dataset(cfg, n, seq_len, seed=0):
 
 def make_session(arch: str, *, smoke: bool = True, steps: int = 4,
                  n_data: int = 512, seq_len: int = 16, physical: int = 8,
-                 q: float = 0.25, engine: str = "masked_pe",
+                 q: float = 0.25, sampler: str = "poisson",
+                 engine: str = "masked_pe",
                  target_eps: float = 8.0, delta: Optional[float] = None,
                  clip_norm: float = 1.0, lr: float = 1e-3,
                  optimizer: str = "sgd", seed: int = 0,
@@ -45,7 +47,7 @@ def make_session(arch: str, *, smoke: bool = True, steps: int = 4,
     dp = DPConfig(clip_norm=clip_norm, engine=engine,
                   microbatches=microbatches)
     tc = TrainConfig(steps=steps, n_data=n_data, seq_len=seq_len,
-                     physical_batch=physical, q=q,
+                     physical_batch=physical, q=q, sampler=sampler,
                      target_eps=target_eps if engine != "nonprivate" else None,
                      delta=delta, lr=lr, optimizer=optimizer, smoke=smoke,
                      seed=seed, log_every=log_every)
@@ -55,6 +57,7 @@ def make_session(arch: str, *, smoke: bool = True, steps: int = 4,
 
 def train(arch: str, *, smoke: bool = True, steps: int = 4, n_data: int = 512,
           seq_len: int = 16, physical: int = 8, q: float = 0.25,
+          sampler: str = "poisson",
           engine: str = "masked_pe", target_eps: float = 8.0,
           delta: Optional[float] = None, clip_norm: float = 1.0, lr: float = 1e-3,
           optimizer: str = "sgd", seed: int = 0, ckpt: Optional[str] = None,
@@ -63,7 +66,8 @@ def train(arch: str, *, smoke: bool = True, steps: int = 4, n_data: int = 512,
           profile_dir: Optional[str] = None) -> dict:
     session = make_session(arch, smoke=smoke, steps=steps, n_data=n_data,
                            seq_len=seq_len, physical=physical, q=q,
-                           engine=engine, target_eps=target_eps, delta=delta,
+                           sampler=sampler, engine=engine,
+                           target_eps=target_eps, delta=delta,
                            clip_norm=clip_norm, lr=lr, optimizer=optimizer,
                            seed=seed, log_every=log_every, mesh=mesh,
                            layout=layout, obs=obs)
@@ -94,6 +98,11 @@ def main():
     ap.add_argument("--seq-len", type=int, default=16)
     ap.add_argument("--physical", type=int, default=8)
     ap.add_argument("--q", type=float, default=0.25)
+    ap.add_argument("--sampler", default="poisson",
+                    choices=available_samplers(),
+                    help="registered sampler (accounting follows the "
+                         "sampler's declared bound: shuffle/full_batch are "
+                         "charged UNAMPLIFIED)")
     ap.add_argument("--engine", default="masked_pe",
                     choices=sorted([*clipping.ENGINES, "nonprivate"]))
     ap.add_argument("--mesh", default=None,
@@ -112,7 +121,8 @@ def main():
     args = ap.parse_args()
     out = train(args.arch, smoke=args.smoke, steps=args.steps,
                 n_data=args.n_data, seq_len=args.seq_len,
-                physical=args.physical, q=args.q, engine=args.engine,
+                physical=args.physical, q=args.q, sampler=args.sampler,
+                engine=args.engine,
                 target_eps=args.target_eps, clip_norm=args.clip_norm,
                 lr=args.lr, optimizer=args.optimizer, seed=args.seed,
                 ckpt=args.ckpt, describe=args.describe, mesh=args.mesh,

@@ -69,10 +69,39 @@ def rdp_subsampled_gaussian(q: float, sigma: float, alpha: float) -> float:
     return ((1 - t) * rlo + t * rhi) / (alpha - 1)
 
 
+def rdp_gaussian(sigma: float, alpha: float) -> float:
+    """RDP(alpha) of one UNAMPLIFIED Gaussian mechanism step (no
+    subsampling): alpha / (2 sigma^2).  This is the bound that is actually
+    valid for samplers without per-step subsampling randomness (shuffling,
+    full batch) — shuffled composition does NOT enjoy the Poisson-subsampled
+    bound (arxiv 2411.04205)."""
+    if sigma == 0:
+        return math.inf
+    return alpha / (2 * sigma ** 2)
+
+
 def compose(q: float, sigma: float, steps: int,
             alphas: Sequence[float] = DEFAULT_ALPHAS) -> np.ndarray:
     return np.array([steps * rdp_subsampled_gaussian(q, sigma, a)
                      for a in alphas])
+
+
+def compose_for(sampler_kind: str, q: float, sigma: float, steps: int,
+                alphas: Sequence[float] = DEFAULT_ALPHAS) -> np.ndarray:
+    """Per-sampler RDP composition: dispatch on the ``accounting`` trait the
+    sampler declared at registration (:mod:`repro.data.sampler`).
+
+    ``"amplified"`` samplers (poisson; balls_and_bins per its amplification
+    theorem, arxiv 2412.16802) get the Poisson-subsampled Gaussian bound at
+    their effective rate ``q``; ``"unamplified"`` samplers (shuffle,
+    full_batch) get the plain Gaussian bound — the shortcut's TRUE cost,
+    visible instead of silently mis-accounted.  Unknown kinds fail with the
+    registry's helpful error.
+    """
+    from ..data.sampler import sampler_accounting
+    if sampler_accounting(sampler_kind) == "amplified":
+        return compose(q, sigma, steps, alphas)
+    return np.array([steps * rdp_gaussian(sigma, a) for a in alphas])
 
 
 def rdp_to_eps(rdp: np.ndarray, delta: float,
@@ -92,16 +121,30 @@ def epsilon(q: float, sigma: float, steps: int, delta: float,
     return rdp_to_eps(compose(q, sigma, steps, alphas), delta, alphas)
 
 
+def epsilon_for(sampler_kind: str, q: float, sigma: float, steps: int,
+                delta: float, alphas: Sequence[float] = DEFAULT_ALPHAS
+                ) -> float:
+    """(eps, delta) spend of ``steps`` steps under the bound that is VALID
+    for ``sampler_kind`` (see :func:`compose_for`)."""
+    return rdp_to_eps(compose_for(sampler_kind, q, sigma, steps, alphas),
+                      delta, alphas)
+
+
 def calibrate_sigma(target_eps: float, q: float, steps: int, delta: float,
-                    lo: float = 0.3, hi: float = 64.0, tol: float = 1e-4) -> float:
-    """Smallest sigma achieving eps <= target_eps, by bisection."""
-    if epsilon(q, hi, steps, delta) > target_eps:
+                    lo: float = 0.3, hi: float = 64.0, tol: float = 1e-4,
+                    sampler: str = "poisson") -> float:
+    """Smallest sigma achieving eps <= target_eps, by bisection, under the
+    bound valid for ``sampler`` — calibrating a shortcut sampler against
+    the amplified bound would under-noise it."""
+    def eps(sigma):
+        return epsilon_for(sampler, q, sigma, steps, delta)
+    if eps(hi) > target_eps:
         raise ValueError("target eps unreachable with sigma <= hi")
-    while epsilon(q, lo, steps, delta) <= target_eps and lo > 1e-3:
+    while eps(lo) <= target_eps and lo > 1e-3:
         lo /= 2
     for _ in range(200):
         mid = 0.5 * (lo + hi)
-        if epsilon(q, mid, steps, delta) <= target_eps:
+        if eps(mid) <= target_eps:
             hi = mid
         else:
             lo = mid

@@ -5,12 +5,15 @@ The subsystem's headline invariant — pinned end-to-end by
 identical final params AND bit-identical ε versus the uninterrupted run,
 never under-counting privacy**.  Three layers deliver it:
 
-1. *Exactly-once sampling* — :class:`repro.data.PoissonSampler` /
-   :class:`~repro.data.ShuffleSampler` are counter-based (Philox keyed by
-   ``(seed, step)``), so ``at_step(k)`` is history-free and a resumed
-   ``fit()`` continues the draw stream at the restored optimizer step
-   instead of replaying charged draws (lint rule L006 keeps sequential host
-   RNGs out of sampling streams).
+1. *Exactly-once sampling* — every sampler in the registry
+   (:data:`repro.data.SAMPLERS`) is counter-based (Philox keyed by
+   ``(seed, domain, step)``, the domain tag separating each sampler's
+   stream), so ``at_step(k)`` is history-free and a resumed ``fit()``
+   continues the draw stream at the restored optimizer step instead of
+   replaying charged draws; registration enforces the contract
+   behaviourally, and lint rule L006 keeps sequential host RNGs out of
+   sampling streams (now registration-driven, so samplers defined outside
+   ``data/`` are checked too).
 2. *Durable checkpoints* — :mod:`repro.checkpoint` commits each snapshot by
    ONE atomic manifest rename over content-hashed state blobs; restore
    validates digests and falls back to the last good manifest, and

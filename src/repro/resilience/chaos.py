@@ -98,6 +98,7 @@ def _build_or_restore(args) -> tuple:
     from ..core import DPConfig
     from ..core.session import PrivacySession, TrainConfig
     tc = TrainConfig(steps=args.steps, n_data=args.n_data, q=args.q,
+                     sampler=args.sampler,
                      seq_len=args.seq_len, physical_batch=args.physical_batch,
                      seed=args.seed, lr=0.1, optimizer="sgd",
                      momentum=0.9,              # momentum ON: a resume that
@@ -150,11 +151,11 @@ def _spawn(extra_args: List[str], *, fault: Optional[FaultSpec] = None,
 def _run_args(*, ckpt: str, out: str, arch: str, engine: str, steps: int,
               ckpt_every: int, seed: int, n_data: int, q: float,
               seq_len: int, physical_batch: int, sigma: float,
-              resume: bool = False) -> List[str]:
+              sampler: str = "poisson", resume: bool = False) -> List[str]:
     args = ["--ckpt", ckpt, "--out", out, "--arch", arch, "--engine", engine,
             "--steps", str(steps), "--ckpt-every", str(ckpt_every),
             "--seed", str(seed), "--n-data", str(n_data), "--q", str(q),
-            "--seq-len", str(seq_len),
+            "--sampler", sampler, "--seq-len", str(seq_len),
             "--physical-batch", str(physical_batch), "--sigma", str(sigma)]
     if resume:
         args.append("--resume")
@@ -166,6 +167,7 @@ def run_case(point: str, *, workdir: str, spec: Optional[FaultSpec] = None,
              steps: int = 6, ckpt_every: int = 2, seed: int = 0,
              n_data: int = 32, q: float = 0.25, seq_len: int = 8,
              physical_batch: int = 4, sigma: float = 0.8,
+             sampler: str = "poisson",
              baseline_out: Optional[str] = None) -> dict:
     """One chaos case: baseline || (crash at ``point`` -> resume); compare.
 
@@ -178,8 +180,8 @@ def run_case(point: str, *, workdir: str, spec: Optional[FaultSpec] = None,
     if spec.point != point:
         raise ValueError(f"spec targets {spec.point!r}, case is {point!r}")
     cfg = dict(arch=arch, engine=engine, steps=steps, ckpt_every=ckpt_every,
-               seed=seed, n_data=n_data, q=q, seq_len=seq_len,
-               physical_batch=physical_batch, sigma=sigma)
+               seed=seed, n_data=n_data, q=q, sampler=sampler,
+               seq_len=seq_len, physical_batch=physical_batch, sigma=sigma)
 
     if baseline_out is None:
         baseline_out = os.path.join(workdir, "baseline.json")
@@ -254,6 +256,9 @@ def _add_run_args(p: argparse.ArgumentParser) -> None:
     p.add_argument("--seq-len", type=int, default=8)
     p.add_argument("--physical-batch", type=int, default=4)
     p.add_argument("--sigma", type=float, default=0.8)
+    p.add_argument("--sampler", default="poisson",
+                   help="registered sampler for the run (the chaos triple "
+                        "pins exactly-once resume per sampler)")
     p.add_argument("--resume", action="store_true")
 
 
@@ -266,9 +271,11 @@ def main(argv: Optional[List[str]] = None) -> int:
     smoke = sub.add_parser("smoke", help="one representative crash/resume "
                                          "case; exit 0 iff bitwise match")
     smoke.add_argument("--workdir", default=None)
+    smoke.add_argument("--sampler", default="poisson")
     suite = sub.add_parser("suite", help="all training fault points")
     suite.add_argument("--workdir", default=None)
     suite.add_argument("--engine", default="masked_pe")
+    suite.add_argument("--sampler", default="poisson")
     args = parser.parse_args(argv)
 
     if args.cmd == "run":
@@ -278,7 +285,8 @@ def main(argv: Optional[List[str]] = None) -> int:
     if args.cmd == "smoke":
         # the torn window the manifest commit exists to close: state file
         # durable on the SECOND save, manifest never committed
-        rec = run_case("ckpt/after_state_before_manifest", workdir=workdir)
+        rec = run_case("ckpt/after_state_before_manifest", workdir=workdir,
+                       sampler=args.sampler)
         print(json.dumps({k: rec[k] for k in
                           ("point", "match", "fired", "crash_returncode")}))
         if not rec["match"]:
@@ -286,7 +294,8 @@ def main(argv: Optional[List[str]] = None) -> int:
                   file=sys.stderr)
         return 0 if rec["match"] else 1
 
-    results = run_suite(workdir=workdir, engine=args.engine)
+    results = run_suite(workdir=workdir, engine=args.engine,
+                        sampler=args.sampler)
     bad = [r for r in results if not r["match"]]
     for r in results:
         print(f"{'PASS' if r['match'] else 'FAIL'}  {r['point']}")
